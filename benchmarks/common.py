@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark harness: row formatting + timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List
+
+
+def emit(rows: Iterable[Dict], header: bool = True) -> str:
+    rows = list(rows)
+    if not rows:
+        return ""
+    keys = list(rows[0].keys())
+    out = []
+    if header:
+        out.append(",".join(keys))
+    for r in rows:
+        out.append(",".join(_fmt(r.get(k, "")) for k in keys))
+    return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def time_call(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call (after warmup, block_until_ready)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def geomean(xs: List[float]) -> float:
+    import math
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0

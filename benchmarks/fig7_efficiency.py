@@ -1,0 +1,49 @@
+"""Fig. 7(b)/(c)/(d): efficiency vs supply voltage, weight sparsity /
+toggle rate, and GEMM size. Paper anchors: 1.60 TOPS/W peak @0.6 V;
+efficiency falls with V while throughput rises; sparsity raises effective
+efficiency; larger GEMMs (K especially) are more efficient."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import simulator as sim
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    # (b) voltage sweep on the paper's 96^3 dense GEMM
+    for v in (0.6, 0.7, 0.8, 0.9, 1.0):
+        e = sim.gemm_efficiency(96, 96, 96, vdd=v)
+        rows.append({"bench": "fig7b_voltage", "point": f"{v:.1f}V",
+                     "tops": e["tops"], "tops_per_w": e["tops_per_w"],
+                     "power_mw": e["power_mw"],
+                     "freq_mhz": e["freq_mhz"]})
+    rows.append({"bench": "fig7b_voltage", "point": "PAPER_ANCHOR",
+                 "tops": "0.82 peak", "tops_per_w": "1.60 @0.6V",
+                 "power_mw": "171-981", "freq_mhz": "300-800"})
+    # (c) sparsity / toggle-rate
+    for ws in (0.0, 0.25, 0.5, 0.75, 0.9):
+        rows.append({"bench": "fig7c_sparsity", "point": f"ws={ws}",
+                     "tops": "", "tops_per_w":
+                         sim.sparsity_efficiency(96, 96, 96,
+                                                 weight_sparsity=ws),
+                     "power_mw": "", "freq_mhz": ""})
+    for tr in (1.0, 0.6, 0.2):
+        rows.append({"bench": "fig7c_sparsity", "point": f"tr={tr}",
+                     "tops": "", "tops_per_w":
+                         sim.sparsity_efficiency(96, 96, 96,
+                                                 weight_sparsity=0.0,
+                                                 toggle_rate=tr),
+                     "power_mw": "", "freq_mhz": ""})
+    # (d) GEMM size sweep: cubes (on-chip regime) + K-dim sweep
+    for n in (32, 64, 96, 128):
+        e = sim.gemm_efficiency(n, n, n)
+        rows.append({"bench": "fig7d_size", "point": f"{n}^3",
+                     "tops": e["tops"], "tops_per_w": e["tops_per_w"],
+                     "power_mw": e["power_mw"], "freq_mhz": ""})
+    for k in (96, 192, 384, 512):
+        e = sim.gemm_efficiency(96, k, 96)
+        rows.append({"bench": "fig7d_size", "point": f"96x{k}x96",
+                     "tops": e["tops"], "tops_per_w": e["tops_per_w"],
+                     "power_mw": e["power_mw"], "freq_mhz": ""})
+    return rows

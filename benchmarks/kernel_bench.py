@@ -1,0 +1,87 @@
+"""Kernel microbenchmarks: interpret-mode wall time (CPU correctness path)
+plus the DERIVED TPU roofline terms per kernel invocation — compute bytes/
+FLOPs analytically from the block schedule (the dry-run methodology at
+kernel granularity). 197 TFLOP/s bf16, 819 GB/s HBM per chip."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+from repro.kernels import ops
+from repro.kernels.gemm_os import spatial_utilization
+
+
+def _gemm_terms(M, K, N, block, dtype_bytes=2):
+    bm, bn, bk = block
+    nM, nN, nK = -(-M // bm), -(-N // bn), -(-K // bk)
+    flops = 2.0 * M * K * N
+    # HBM traffic of the grid pipeline: x blocks nN times, w blocks nM
+    # times, out once (the output-stationary win: no psum round-trips)
+    bytes_hbm = (M * K * nN + K * N * nM) * dtype_bytes + M * N * dtype_bytes
+    return flops, bytes_hbm
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    shapes = [(512, 512, 512), (1024, 1024, 1024), (128, 4096, 128)]
+    for (M, K, N) in shapes:
+        block = (128, 128, 128)
+        x = jax.random.normal(jax.random.key(0), (M, K), jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (K, N), jnp.float32)
+        t = time_call(lambda: ops.matmul(x, w, block=block), reps=3)
+        flops, hbm = _gemm_terms(M, K, N, block)
+        rows.append({
+            "bench": "kernel_gemm_os", "shape": f"{M}x{K}x{N}",
+            "interpret_ms": t * 1e3,
+            "tpu_t_compute_us": flops / PEAK_FLOPS * 1e6,
+            "tpu_t_memory_us": hbm / HBM_BW * 1e6,
+            "bound": "compute" if flops / PEAK_FLOPS > hbm / HBM_BW
+                     else "memory",
+            "spatial_util": spatial_utilization(M, K, N, block),
+        })
+    # quantized GEMM (int8 path, fused epilogue)
+    xi = jax.random.randint(jax.random.key(2), (256, 1024), -128, 127,
+                            jnp.int8)
+    wi = jax.random.randint(jax.random.key(3), (1024, 256), -128, 127,
+                            jnp.int8)
+    t = time_call(lambda: ops.quant_matmul(xi, wi, 0.01), reps=3)
+    flops, hbm = _gemm_terms(256, 1024, 256, (128, 128, 128), dtype_bytes=1)
+    rows.append({
+        "bench": "kernel_quant_gemm", "shape": "256x1024x256-int8",
+        "interpret_ms": t * 1e3,
+        "tpu_t_compute_us": flops / PEAK_FLOPS * 1e6,
+        "tpu_t_memory_us": hbm / HBM_BW * 1e6,
+        "bound": "fused-epilogue", "spatial_util": 1.0,
+    })
+    # attention
+    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(jax.random.key(4), (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(5), (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(6), (B, S, KV, D), jnp.float32)
+    t = time_call(lambda: ops.attention(q, k, v, bq=128, bk=128), reps=2)
+    fl = 4.0 * B * H * S * S * D * 0.5          # causal half
+    hbm = 2 * (B * S * H * D + 2 * B * S * KV * D) * 4
+    rows.append({
+        "bench": "kernel_mha", "shape": f"B{B}S{S}H{H}kv{KV}D{D}",
+        "interpret_ms": t * 1e3,
+        "tpu_t_compute_us": fl / PEAK_FLOPS * 1e6,
+        "tpu_t_memory_us": hbm / HBM_BW * 1e6,
+        "bound": "compute" if fl / PEAK_FLOPS > hbm / HBM_BW else "memory",
+        "spatial_util": "",
+    })
+    # conv
+    xc = jax.random.normal(jax.random.key(7), (1, 28, 28, 64), jnp.float32)
+    wc = jax.random.normal(jax.random.key(8), (3, 3, 64, 128), jnp.float32)
+    t = time_call(lambda: ops.conv2d(xc, wc, stride=1), reps=2)
+    fl = 2.0 * 28 * 28 * 9 * 64 * 128
+    rows.append({
+        "bench": "kernel_conv_im2col", "shape": "28x28x64->128 3x3",
+        "interpret_ms": t * 1e3,
+        "tpu_t_compute_us": fl / PEAK_FLOPS * 1e6,
+        "tpu_t_memory_us": "", "bound": "", "spatial_util": "",
+    })
+    return rows

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure. Prints CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6a,table1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (fig1c_memory, fig4c_mha, fig6_latency, fig6_spatial,
+                        fig6_temporal, fig7_efficiency, kernel_bench, table1)
+from benchmarks.common import emit
+
+SUITES = {
+    "fig6a": fig6_spatial.run,
+    "fig6b": fig6_temporal.run,
+    "fig6c": fig6_latency.run,
+    "fig1c": fig1c_memory.run,
+    "fig4c": fig4c_mha.run,
+    "fig7": fig7_efficiency.run,
+    "table1": table1.run,
+    "kernels": kernel_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    t0 = time.time()
+    for name in names:
+        if name not in SUITES:
+            raise SystemExit(f"unknown suite {name!r}")
+        print(f"# === {name} ===", flush=True)
+        rows = SUITES[name]()
+        print(emit(rows), flush=True)
+        print()
+    print(f"# all suites done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Table I: headline chip numbers from the calibrated model."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import simulator as sim
+
+
+def run() -> List[Dict]:
+    t = sim.table1()
+    paper = {"macs": 512, "peak_tops": 0.82, "peak_tops_per_w": 1.60,
+             "power_mw_min": 171, "power_mw_max": 981,
+             "area_eff_tops_mm2": 1.25, "mem_kib": 128}
+    rows = []
+    for k, v in t.items():
+        rows.append({"bench": "table1", "metric": k, "model": v,
+                     "paper": paper.get(k, "")})
+    return rows

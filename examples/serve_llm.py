@@ -1,0 +1,53 @@
+"""Serve a small LM with batched requests through the slot-based engine.
+
+Demonstrates: prefill -> slot merge -> batched decode -> continuous
+batching (more requests than slots), with throughput stats.
+
+  PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
+           [--slots 4] [--requests 8] [--max-new 16]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.models import api
+from repro.runtime.serving import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=ARCHS)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    print(f"[serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.slots} slots, {args.requests} requests")
+    params = api.init_params(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, slots=args.slots, max_len=128,
+                        temperature=args.temperature)
+
+    reqs = [Request(rid=i, prompt=[(7 * i + j) % cfg.vocab
+                                   for j in range(5 + i % 7)],
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    done = eng.run_to_completion(reqs, max_steps=2000)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"[serve] {len(done)}/{len(reqs)} done, {toks} tokens in "
+          f"{dt:.2f}s ({toks/dt:.1f} tok/s CPU)")
+    for r in done[:4]:
+        print(f"  req {r.rid}: prompt {r.prompt[:4]}... -> "
+              f"{r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")
+    assert len(done) == len(reqs)
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

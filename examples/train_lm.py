@@ -1,0 +1,70 @@
+"""End-to-end training driver: a ~100M-parameter LM on the synthetic
+pipeline with the full production runtime (accumulation, checkpoints,
+straggler monitor, resume).
+
+Presets:
+  ci      — reduced model, 60 steps, finishes in ~2 min on CPU (default)
+  100m    — the ~100M-parameter run (use on real hardware; a few hundred
+            steps as the paper-scale end-to-end exercise)
+
+  PYTHONPATH=src python examples/train_lm.py [--preset ci] [--steps N]
+           [--ckpt-dir DIR] [--grad-accum N] [--compress-grads]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, SyntheticDataset
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer
+
+PRESETS = {
+    # ~100M params: 12L x 512d x 8H, ff 2048, vocab 32k
+    "100m": ModelConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=512,
+        num_heads=8, kv_heads=8, d_ff=2048, vocab=32_000, norm="rmsnorm",
+        act="silu", gated_ffn=True),
+    "ci": ModelConfig(
+        name="lm-ci", family="dense", num_layers=4, d_model=128,
+        num_heads=4, kv_heads=2, d_ff=256, vocab=1024, norm="rmsnorm",
+        act="silu", gated_ffn=True),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    steps = args.steps or (60 if args.preset == "ci" else 300)
+    seq = args.seq or (64 if args.preset == "ci" else 512)
+    batch = args.batch or (16 if args.preset == "ci" else 64)
+    n_params = cfg.param_count()
+    print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{steps} steps, batch {batch} x seq {seq}")
+
+    ds = SyntheticDataset(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                     global_batch=batch))
+    opt = adamw.AdamWConfig(lr=3e-3, warmup_steps=max(10, steps // 10),
+                            total_steps=steps)
+    tr = Trainer(cfg, opt, ds, ckpt_dir=args.ckpt_dir,
+                 save_every=max(0, steps // 4) if args.ckpt_dir else 0,
+                 grad_accum=args.grad_accum,
+                 compress_grads=args.compress_grads, log_every=10)
+    tr.run(steps)
+    losses = [h["loss"] for h in tr.history]
+    print(f"[train_lm] loss {losses[0]:.4f} -> {losses[-1]:.4f} over "
+          f"{steps} steps; straggler-flagged {tr.monitor.slow_steps} steps")
+    if steps >= 40:   # too few steps to clear warmup = smoke only
+        assert losses[-1] < losses[0], "training did not improve the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Beyond-paper: design-space exploration with the Voltra model.
+
+The paper fixes one design point (8x8x8 array, 32 banks, 8-deep FIFOs,
+128 KB). The calibrated architectural model lets us ask what the paper
+could not: how do the utilization/latency claims move across the design
+space? Swept here:
+
+  * array shape at iso-MAC (512 MACs): 8x8x8 vs 16x16x2 vs 4x16x8 ...
+  * streamer FIFO depth: 1..32
+  * shared-memory size: 64..512 KB
+
+  PYTHONPATH=src python examples/voltra_dse.py
+"""
+import dataclasses
+
+from repro.core import simulator, spatial, temporal, tiling, workloads
+from repro.core.accel import VOLTRA
+
+WLS = workloads.all_workloads()
+
+
+def geomean(xs):
+    import math
+    return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
+
+
+def sweep_array_shape():
+    print("=== array shape @ 512 MACs: geomean spatial utilization ===")
+    for (m, n, k) in [(8, 8, 8), (16, 16, 2), (4, 16, 8), (16, 8, 4),
+                      (8, 16, 4), (4, 8, 16), (2, 16, 16), (32, 16, 1)]:
+        cfg = dataclasses.replace(VOLTRA, array_m=m, array_n=n, array_k=k)
+        us = []
+        for wl in WLS.values():
+            num = den = 0.0
+            for op in wl.ops:
+                u = spatial.op_spatial_util_3d(op, cfg)
+                num += op.macs * u
+                den += op.macs
+            us.append(num / den)
+        print(f"  {m:2d}x{n:2d}x{k:2d}: geomean={geomean(us):.4f} "
+              f"min={min(us):.4f}")
+
+
+def sweep_fifo_depth():
+    print("=== FIFO depth: BERT temporal utilization (MGDP) ===")
+    wl = WLS["bert_base"]
+    for d in (1, 2, 4, 8, 16, 32):
+        cfg = dataclasses.replace(VOLTRA, input_fifo_depth=d,
+                                  weight_fifo_depth=d)
+        u = temporal.workload_temporal_util(wl, cfg=cfg, mgdp=True)
+        print(f"  depth {d:2d}: util={u:.4f}")
+
+
+def sweep_memory_size():
+    print("=== shared memory size: ViT-B DMA bytes + latency gain ===")
+    for kib in (64, 128, 256, 512):
+        cfg = dataclasses.replace(VOLTRA, mem_kib=kib)
+        dma = tiling.workload_dma_bytes(WLS["vit_b"], "shared", cfg)
+        r = simulator.latency_report(WLS["vit_b"], cfg)
+        print(f"  {kib:3d} KiB: shared DMA={dma/1e6:7.1f} MB  "
+              f"gain vs separated={r['gain_serial']:.2f}x")
+
+
+if __name__ == "__main__":
+    sweep_array_shape()
+    sweep_fifo_depth()
+    sweep_memory_size()
+    print("DSE done")

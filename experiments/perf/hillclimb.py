@@ -1,0 +1,88 @@
+"""Perf hillclimb driver: run named variants of the three chosen cells
+and print the roofline deltas. Each variant is one hypothesis from
+EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python experiments/perf/hillclimb.py <variant> [...]
+  PYTHONPATH=src python experiments/perf/hillclimb.py --list
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+import sys                                           # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+from repro.launch.dryrun import run_cell             # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "runs")
+
+# variant name -> (arch, shape, run_cell kwargs)
+VARIANTS = {
+    # --- Cell A: qwen1.5-4b x train_4k (worst roofline fraction) --------
+    "A0_base": ("qwen1.5-4b", "train_4k", {}),
+    "A1_seqsp": ("qwen1.5-4b", "train_4k",
+                 {"rules_table": {"seq": "model"}}),
+    "A2_seqsp_dots": ("qwen1.5-4b", "train_4k",
+                      {"rules_table": {"seq": "model"},
+                       "cfg_patch": {"remat": "dots"}}),
+    "A3_dots": ("qwen1.5-4b", "train_4k", {"cfg_patch": {"remat": "dots"}}),
+    "A4_seqsp_oneshot": ("qwen1.5-4b", "train_4k",
+                         {"rules_table": {"seq": "model"},
+                          "cfg_patch": {"flash_chunking": False}}),
+    # --- Cell B: dbrx-132b x train_4k (most collective-bound) -----------
+    "B0_base": ("dbrx-132b", "train_4k", {}),
+    "B1_seqsp": ("dbrx-132b", "train_4k",
+                 {"rules_table": {"seq": "model"}}),
+    "B2_moment_bf16": ("dbrx-132b", "train_4k",
+                       {"cfg_patch": {"moment_dtype": "bfloat16"}}),
+    "B3_moe_cons": ("dbrx-132b", "train_4k", {}),   # after moe_apply cons fix
+    "B4_moe_cons_oneshot": ("dbrx-132b", "train_4k",
+                            {"rules_table": {"seq": "model"},
+                             "cfg_patch": {"flash_chunking": False}}),
+    "B5_capacity_shard": ("dbrx-132b", "train_4k",
+                          {"rules_table": {"seq": "model"},
+                           "cfg_patch": {"flash_chunking": False}}),
+    "B6_grouped_dispatch": ("dbrx-132b", "train_4k",
+                            {"rules_table": {"seq": "model"},
+                             "cfg_patch": {"flash_chunking": False}}),
+    # --- Cell C: qwen2.5-3b x decode_32k (paper-representative) ---------
+    "C0_base": ("qwen2.5-3b", "decode_32k", {}),
+    "C1_donate": ("qwen2.5-3b", "decode_32k", {"donate_cache": True}),
+    "C2_ctxpar": ("qwen2.5-3b", "decode_32k",
+                  {"donate_cache": True, "rules_table": {"seq": "model"}}),
+    "C3_onehot": ("qwen2.5-3b", "decode_32k",
+                  {"donate_cache": True, "rules_table": {"seq": "model"},
+                   "cfg_patch": {"decode_kv_chunk": 0}}),
+    "C4_int8_cache": ("qwen2.5-3b", "decode_32k",
+                      {"donate_cache": True,
+                       "rules_table": {"seq": "model"},
+                       "cfg_patch": {"decode_kv_chunk": 0,
+                                     "kv_cache_dtype": "int8"}}),
+}
+
+
+def main() -> None:
+    names = sys.argv[1:]
+    if not names or names[0] == "--list":
+        print("\n".join(VARIANTS))
+        return
+    for name in names:
+        arch, shape, kw = VARIANTS[name]
+        rec = run_cell(arch, shape, out_dir=OUT, tag=name, **kw)
+        if rec.get("status") == "ok":
+            rl = rec["roofline"]
+            print(f"[{name}] mem/dev="
+                  f"{rec['memory']['total_bytes_per_device']/2**30:.2f}GiB "
+                  f"t=({rl['t_compute_s']:.4f},{rl['t_memory_s']:.4f},"
+                  f"{rl['t_collective_s']:.4f})s "
+                  f"useful={rl['useful_flops_frac']:.3f} "
+                  f"frac={rl['roofline_frac']:.4f} "
+                  f"coll={ {k: round(v/2**30,1) for k,v in rl['coll_breakdown'].items()} }")
+        else:
+            print(f"[{name}] {rec.get('status')}: "
+                  f"{rec.get('error', rec.get('reason'))}")
+
+
+if __name__ == "__main__":
+    main()

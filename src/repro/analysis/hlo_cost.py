@@ -1,0 +1,383 @@
+"""Trip-count-aware cost accounting over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — for a
+scanned-layer transformer that under-counts FLOPs/bytes/collectives by ~L x.
+This module parses the post-SPMD HLO text, extracts per-while trip counts
+from ``backend_config={"known_trip_count":{"n":...}}``, and walks the call
+graph from ENTRY multiplying through loop nests.
+
+Accounting model (per device, since SPMD HLO is the per-device program):
+  * flops: exact for `dot` (2 * numel(out) * prod(contracting dims)),
+    numel(out) for elementwise arithmetic (incl. inside fusions);
+  * bytes: operand + output bytes of *materialization-level* ops — fusion
+    internals are free (they model registers/VMEM residency), parameters /
+    tuples / GTEs / bitcasts are free;
+  * collective bytes: operand bytes per collective kind, trip-multiplied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s1": 1, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e\d+m\d+(?:fn)?)?)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id", "rng",
+             "rng-bit-generator"}
+
+_ELTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder",
+}
+_TRANSCEND_OPS = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                  "logistic", "sine", "cosine", "atan2", "erf",
+                  "exponential-minus-one", "log-plus-one", "cbrt"}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """(elements, bytes) summed over all array components in a type string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    # name -> result type string (includes computation parameters)
+    symbols: Dict[str, str]
+    params: List[str] = dataclasses.field(default_factory=list)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INSTR_HEAD = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
+
+
+def _match_instr(line: str):
+    """(name, type_str, opcode, rest_after_open_paren) or None. Handles tuple
+    types with embedded /*index=N*/ comments via balanced-paren scanning."""
+    m = _INSTR_HEAD.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        tstr, rest = rest[: i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        tstr, rest = rest[:sp], rest[sp:]
+    m2 = _OPCODE.match(rest)
+    if not m2:
+        return None
+    return name, tstr, m2.group(1), rest[m2.end():]
+_TRIP = re.compile(r'known_trip_count\W+n\W+(\d+)')
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_B = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.rstrip().endswith("{"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                # parameters: "name: type, name2: type2" (types may be tuples)
+                params = m.group(3)
+                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^()]*\)|[^,()]+(?:\([^()]*\))?)+)",
+                                      params):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                    cur.params.append(pm.group(1))
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _match_instr(line)
+        if not m:
+            continue
+        name, tstr, opcode, rest = m
+        # operands: text up to the matching close paren — take up to "), "
+        depth = 1
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        opnd_text = rest[:end]
+        attrs = rest[end + 1:]
+        operands = _OPERAND_NAME.findall(opnd_text)
+        instr = Instr(name, tstr, opcode, operands, attrs)
+        cur.instrs.append(instr)
+        cur.symbols[name] = tstr
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    transcendentals: float = 0.0
+    # diagnostics: bytes per opcode and the largest single contributors
+    by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    top: List[Tuple[float, str, str]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def total_coll(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def _note(self, op: str, b: float, detail: str = "") -> None:
+        self.by_op[op] = self.by_op.get(op, 0.0) + b
+        if b > 1e8:
+            self.top.append((b, op, detail[:120]))
+            if len(self.top) > 400:
+                self.top.sort(reverse=True)
+                del self.top[200:]
+
+    def top_entries(self, n: int = 15):
+        return sorted(self.top, reverse=True)[:n]
+
+
+def _operand_bytes(comp: Computation, instr: Instr,
+                   comps: Dict[str, Computation]) -> int:
+    total = 0
+    for op in instr.operands:
+        t = comp.symbols.get(op)
+        if t is None:
+            continue
+        total += _shape_elems_bytes(t)[1]
+    return total
+
+
+_SLICING = {"dynamic-slice", "gather"}
+
+
+def _fusion_io_bytes(comp: Computation, instr: Instr,
+                     comps: Dict[str, Computation]) -> float:
+    """Traffic for a fusion call: output + inputs, where inputs consumed only
+    through dynamic-slice/gather inside the fused computation are charged at
+    slice size (models scanned weight stacks correctly), and a root
+    dynamic-update-slice aliases its target buffer (in-place cache update)."""
+    called = comps.get((_CALLS.search(instr.attrs) or [None]).group(1)
+                       if _CALLS.search(instr.attrs) else None)
+    out_bytes = _shape_elems_bytes(instr.type_str)[1]
+    if called is None or len(called.params) != len(instr.operands):
+        return out_bytes + _operand_bytes(comp, instr, comps)
+    defs = {i.name: i for i in called.instrs}
+    _TRIVIAL = {"convert", "copy", "bitcast", "reshape", "transpose",
+                "broadcast"}
+
+    def trace_param(name: str):
+        seen = 0
+        while name in defs and defs[name].opcode in _TRIVIAL and seen < 8:
+            if not defs[name].operands:
+                break
+            name = defs[name].operands[0]
+            seen += 1
+        return name if name in called.params else None
+
+    sliced = {}          # param name -> slice bytes to charge instead
+    aliased = set()      # param names written in place (charge 0 read)
+    root_dus_update = None
+    for ins in called.instrs:
+        if ins.opcode in _SLICING and ins.operands:
+            pn = trace_param(ins.operands[0])
+            if pn is not None:
+                sliced[pn] = sliced.get(pn, 0) + \
+                    _shape_elems_bytes(ins.type_str)[1]
+        if ins.opcode == "dynamic-update-slice" and ins.operands:
+            pn = trace_param(ins.operands[0])
+            if pn is not None:
+                aliased.add(pn)
+                if len(ins.operands) > 1:
+                    ut = called.symbols.get(ins.operands[1])
+                    if ut:
+                        root_dus_update = _shape_elems_bytes(ut)[1]
+    total = 0.0
+    for pn, on in zip(called.params, instr.operands):
+        t = comp.symbols.get(on)
+        full = _shape_elems_bytes(t)[1] if t else 0
+        if pn in aliased:
+            continue
+        total += min(sliced.get(pn, full), full) if pn in sliced else full
+    if root_dus_update is not None:
+        total += 2.0 * root_dus_update  # read-modify-write of the window
+        # output aliases the big buffer: do not charge the full write
+        return total
+    return total + out_bytes
+
+
+def _dot_flops(comp: Computation, instr: Instr) -> float:
+    out_elems, _ = _shape_elems_bytes(instr.type_str)
+    lhs_t = comp.symbols.get(instr.operands[0]) if instr.operands else None
+    if lhs_t is None:
+        return 0.0
+    m = _SHAPE_RE.search(lhs_t)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    cm = _LHS_C.search(instr.attrs)
+    contract = [int(d) for d in cm.group(1).split(",") if d] if cm else []
+    k = 1
+    for d in contract:
+        if d < len(dims):
+            k *= dims[d]
+    return 2.0 * out_elems * k
+
+
+def _flops_only(comp: Computation, comps, mult: float, cost: Cost,
+                seen: set) -> None:
+    """Count flops inside fusion computations (bytes stay at the boundary)."""
+    for ins in comp.instrs:
+        if ins.opcode == "dot":
+            f = _dot_flops(comp, ins) * mult
+            cost.flops += f
+            cost.dot_flops += f
+        elif ins.opcode in _ELTWISE_FLOP_OPS:
+            cost.flops += _shape_elems_bytes(ins.type_str)[0] * mult
+        elif ins.opcode in _TRANSCEND_OPS:
+            n = _shape_elems_bytes(ins.type_str)[0] * mult
+            cost.flops += n
+            cost.transcendentals += n
+        cm = _CALLS.search(ins.attrs)
+        if cm and cm.group(1) in comps and cm.group(1) not in seen:
+            _flops_only(comps[cm.group(1)], comps, mult, cost,
+                        seen | {comp.name})
+
+
+def _walk(comp: Computation, comps: Dict[str, Computation], mult: float,
+          cost: Cost) -> None:
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op in _FREE_OPS:
+            continue
+        if op == "while":
+            tm = _TRIP.search(ins.attrs)
+            trips = int(tm.group(1)) if tm else 1
+            bm = _CALLS.search(ins.attrs)
+            if bm and bm.group(1) in comps:
+                _walk(comps[bm.group(1)], comps, mult * trips, cost)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for cm in _CALLS.finditer(ins.attrs):
+                if cm.group(1) in comps:
+                    _walk(comps[cm.group(1)], comps, mult, cost)
+            continue
+        coll = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if coll is not None:
+            if op.endswith("-done"):
+                continue
+            b = _operand_bytes(comp, ins, comps) * mult
+            cost.coll_bytes[coll] = cost.coll_bytes.get(coll, 0.0) + b
+            tot = b + _shape_elems_bytes(ins.type_str)[1] * mult
+            cost.bytes += tot
+            cost._note(op, tot, ins.name)
+            continue
+        # materialization-level op: operands + outputs traffic
+        if op == "fusion":
+            fb = _fusion_io_bytes(comp, ins, comps) * mult
+            cost.bytes += fb
+            cost._note(op, fb, ins.name)
+            cm = _CALLS.search(ins.attrs)
+            if cm and cm.group(1) in comps:
+                _flops_only(comps[cm.group(1)], comps, mult, cost, set())
+            continue
+        if op in _SLICING:
+            b = 2.0 * _shape_elems_bytes(ins.type_str)[1] * mult
+            cost.bytes += b
+            cost._note(op, b, ins.name)
+            continue
+        if op == "dynamic-update-slice":
+            ut = comp.symbols.get(ins.operands[1]) if len(ins.operands) > 1 \
+                else None
+            upd = _shape_elems_bytes(ut)[1] if ut else 0
+            cost.bytes += 2.0 * upd * mult
+            cost._note(op, 2.0 * upd * mult, ins.name)
+            continue
+        b = (_operand_bytes(comp, ins, comps)
+             + _shape_elems_bytes(ins.type_str)[1]) * mult
+        cost.bytes += b
+        cost._note(op, b, ins.name)
+        if op == "dot":
+            f = _dot_flops(comp, ins) * mult
+            cost.flops += f
+            cost.dot_flops += f
+        elif op in _ELTWISE_FLOP_OPS:
+            cost.flops += _shape_elems_bytes(ins.type_str)[0] * mult
+        elif op in _TRANSCEND_OPS:
+            n = _shape_elems_bytes(ins.type_str)[0] * mult
+            cost.flops += n
+            cost.transcendentals += n
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    comps = parse_computations(hlo_text)
+    entry = next((c for n, c in comps.items() if "main" in n), None)
+    if entry is None:  # fall back: the last computation is usually ENTRY
+        entry = list(comps.values())[-1]
+    cost = Cost()
+    _walk(entry, comps, 1.0, cost)
+    return cost

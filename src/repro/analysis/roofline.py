@@ -1,0 +1,147 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs        / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes        / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis: we parse the post-SPMD optimized HLO (``compiled.as_text()``)
+and sum the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.
+
+Hardware constants (TPU v5e-class, per assignment): 197 TFLOP/s bf16 per
+chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"(pred|[su]\d+|[bf]f?\d+(?:e\dm\d(?:fn)?)?)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind, operands = m.group(1), m.group(2)
+        total = 0
+        for sm in _SHAPE_RE.finditer(operands):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO FLOPs
+    bytes_hbm: float           # per-device HLO bytes accessed
+    bytes_coll: float          # per-device collective operand bytes
+    chips: int
+    coll_breakdown: Dict[str, int]
+    model_flops: float = 0.0   # analytic 6*N*D (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_coll / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs): compiled-compute usefulness."""
+        total_hlo = self.flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at the
+        bound of its dominant term: t_compute_model / t_bound."""
+        t_model = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_model / self.t_bound if self.t_bound else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.bytes_hbm,
+            "collective_bytes_per_device": self.bytes_coll,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def analyze(compiled, *, chips: int, model_flops: float = 0.0,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Trip-count-aware analysis via hlo_cost (XLA's own cost_analysis counts
+    while bodies once, so it is only kept as a cross-reference)."""
+    from repro.analysis import hlo_cost
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_cost.analyze_hlo(text)
+    return Roofline(
+        flops=cost.flops,
+        bytes_hbm=cost.bytes,
+        bytes_coll=cost.total_coll,
+        chips=chips,
+        coll_breakdown={k: int(v) for k, v in cost.coll_bytes.items()},
+        model_flops=model_flops,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE); decode
+    processes global_batch tokens (one step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: 1 new token per sample

@@ -1,0 +1,22 @@
+"""repro.core — the paper's contribution as an architectural model.
+
+  accel      — VoltraConfig (the chip's published parameters) + baselines
+  workloads  — the 8 Fig. 6 evaluation networks, layer-by-layer
+  spatial    — C1: 3D vs 2D spatial utilization (Fig. 6a)
+  temporal   — C2: bank contention + MGDP, event sim + closed form (Fig. 6b)
+  tiling     — C3: output-stationary tiling, shared vs separated arenas
+  pdma       — C3: arena allocator + MHA residency/access counts (Fig. 4, 1c)
+  simulator  — end-to-end latency/energy (Fig. 6c, Fig. 7, Table I)
+  agu        — Sec. II-B: 6-D affine streamer descriptors (implicit
+               im2col for any Conv2D), address-stream interpreter and
+               bank-conflict profiling (the reshuffler claim, quantified)
+"""
+from repro.core.accel import (BASELINE_2D, SEPARATED_MEM, VOLTRA,
+                              Baseline2DConfig, SeparatedMemConfig,
+                              VoltraConfig)
+from repro.core.workloads import Op, Workload, all_workloads
+
+__all__ = [
+    "BASELINE_2D", "SEPARATED_MEM", "VOLTRA", "Baseline2DConfig",
+    "SeparatedMemConfig", "VoltraConfig", "Op", "Workload", "all_workloads",
+]

@@ -1,0 +1,150 @@
+"""Voltra accelerator configuration — the chip, as published.
+
+Every number below is taken from the paper (Sec. II, Fig. 2/3/5, Table I):
+8x8x8 MAC array (512 INT8 MACs), 32 x 64-bit shared-memory banks (128 KB),
+streamer FIFO depths, channel widths, 300-800 MHz @ 0.6-1.0 V. The few
+quantities the paper leaves unspecified (off-chip DMA bandwidth, SRAM/MAC
+energy-per-op) are explicit, documented assumptions calibrated against the
+paper's *system-level* results (Table I peak 0.82 TOPS / 1.60 TOPS/W).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class VoltraConfig:
+    # --- 3D spatial array (Sec. II-A) -----------------------------------
+    array_m: int = 8            # Dot-ProdU rows   (input-matrix rows)
+    array_n: int = 8            # Dot-ProdU cols   (weight-matrix cols)
+    array_k: int = 8            # dot-product width inside each Dot-ProdU
+    # --- shared memory (Sec. II, Fig. 2) ---------------------------------
+    num_banks: int = 32
+    bank_width_bits: int = 64   # per-bank port width
+    mem_kib: int = 128          # data memory (D); 6 KB (I) excluded
+    # --- streamers (Sec. II-B, Fig. 3) -----------------------------------
+    input_fifo_depth: int = 8
+    weight_fifo_depth: int = 8
+    psum_fifo_depth: int = 1    # output-stationary -> rare psum traffic
+    output_fifo_depth: int = 1
+    input_channel_bits: int = 64    # fine-grained  (Fig. 3a)
+    weight_channel_bits: int = 512  # coarse-grained super-bank (Fig. 3b)
+    super_bank_banks: int = 8       # 8 x 64-bit banks fused
+    # --- SIMD + crossbar time-multiplexing (Sec. II-D) --------------------
+    simd_lanes: int = 8         # quantization PEs (64 outputs / 8 cycles)
+    simd_outputs: int = 64      # outputs produced per array retire
+    # --- datapath ---------------------------------------------------------
+    in_bits: int = 8            # INT8 operands
+    acc_bits: int = 32          # INT32 accumulators / partial sums
+    # --- clock / voltage (Fig. 5) -----------------------------------------
+    freq_min_mhz: float = 300.0
+    freq_max_mhz: float = 800.0
+    vdd_min: float = 0.6
+    vdd_max: float = 1.0
+    # --- off-chip (ASSUMPTION; paper simulates DMA with an RTL model) -----
+    # A 64-bit LPDDR4x-class port at core clock: 8 bytes/cycle. This puts
+    # compute:DMA balance in the regime where the paper's PDMA gains
+    # (1.15-2.36x) are reproduced; recorded in DESIGN.md.
+    dma_bytes_per_cycle: float = 8.0
+    dma_setup_cycles: int = 100   # per-transfer fixed cost (descriptor+row)
+
+    # --- energy model (ASSUMPTION; calibrated to the paper's measured
+    # power band: P(0.6V,300MHz)=171mW and P(1.0V,800MHz)=981mW on the
+    # dense 96^3 GEMM, via P = P_static + P_mac + P_sram with dynamic
+    # terms scaling as (V/Vref)^2 * f. See DESIGN.md "Energy calibration".
+    vdd_ref: float = 0.6
+    e_mac_pj: float = 0.785       # per INT8 MAC at vdd_ref (system-level)
+    e_sram_pj_per_byte: float = 0.55   # shared-memory access at vdd_ref
+    e_dram_pj_per_byte: float = 16.0   # off-chip access (not V-scaled)
+    p_static_mw: float = 44.6     # leakage + always-on
+
+    # ----------------------------------------------------------------- API
+    @property
+    def macs(self) -> int:
+        return self.array_m * self.array_n * self.array_k
+
+    @property
+    def peak_ops_per_cycle(self) -> int:
+        return 2 * self.macs                      # MAC = 2 ops
+
+    def peak_tops(self, freq_mhz: float | None = None) -> float:
+        f = self.freq_max_mhz if freq_mhz is None else freq_mhz
+        return self.peak_ops_per_cycle * f * 1e6 / 1e12
+
+    @property
+    def mem_bytes(self) -> int:
+        return self.mem_kib * 1024
+
+    @property
+    def bank_bytes(self) -> int:
+        return self.mem_bytes // self.num_banks
+
+    @property
+    def bank_width_bytes(self) -> int:
+        return self.bank_width_bits // 8
+
+    @property
+    def input_channel_bytes(self) -> int:
+        return self.input_channel_bits // 8
+
+    @property
+    def weight_channel_bytes(self) -> int:
+        return self.weight_channel_bits // 8
+
+    def freq_at(self, vdd: float) -> float:
+        """Linear frequency/voltage interpolation over the shmoo band."""
+        t = (vdd - self.vdd_min) / (self.vdd_max - self.vdd_min)
+        return self.freq_min_mhz + t * (self.freq_max_mhz - self.freq_min_mhz)
+
+    # Per-cycle operand demand of the fully-active GEMM core (bytes).
+    @property
+    def input_demand(self) -> int:
+        return self.array_m * self.array_k * self.in_bits // 8   # 64 B
+
+    @property
+    def weight_demand(self) -> int:
+        return self.array_n * self.array_k * self.in_bits // 8   # 64 B
+
+    @property
+    def output_tile_bytes(self) -> int:
+        return self.array_m * self.array_n * self.acc_bits // 8  # 256 B
+
+
+# The chip as fabricated.
+VOLTRA = VoltraConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class Baseline2DConfig:
+    """The conventional 2D comparison point of Fig. 6(a): the same 512 MACs
+    arranged as an output-stationary M x N grid with K fully temporal."""
+    array_m: int = 16
+    array_n: int = 32
+
+    @property
+    def macs(self) -> int:
+        return self.array_m * self.array_n
+
+
+BASELINE_2D = Baseline2DConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class SeparatedMemConfig:
+    """Separated-buffer baseline of Fig. 1(a)/6(c): same total SRAM split
+    into fixed per-operand buffers with dedicated dispatchers."""
+    input_kib: int = 64
+    weight_kib: int = 32
+    output_kib: int = 32
+
+    @property
+    def total_kib(self) -> int:
+        return self.input_kib + self.weight_kib + self.output_kib
+
+    def budget(self, operand: str) -> int:
+        return {"input": self.input_kib, "weight": self.weight_kib,
+                "output": self.output_kib}[operand] * 1024
+
+
+SEPARATED_MEM = SeparatedMemConfig()

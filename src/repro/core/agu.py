@@ -1,0 +1,194 @@
+"""Streamer AGU programming model — Sec. II-B's 6-D affine address
+generation, as the Snitch core programs it through CSRs.
+
+An ``AGUDescriptor`` is exactly the paper's streamer configuration: a
+base pointer plus up to 6 (bound, stride) loop pairs; the generated
+address stream is
+
+    addr(i0..i5) = base + sum_d i_d * stride_d,   0 <= i_d < bound_d
+
+with the innermost loop last. Two generators build the descriptors the
+chip needs:
+
+  * ``im2col_descriptor`` — the input streamer's implicit-im2col walk for
+    any Conv2D (arbitrary stride / kernel / channels), in either HWC or
+    the reshuffler's C/8HWC8 blocked layout;
+  * ``gemm_descriptors`` — the block-wise input/weight walks of a tiled
+    output-stationary GEMM.
+
+``addresses()`` interprets a descriptor into its concrete stream (the
+oracle-validated contract: tests compare against an explicit-im2col
+gather), and ``bank_conflict_profile()`` replays a stream against the
+32-bank map to quantify the reshuffler's purpose: HWC walks collide
+inside a beat, C/8HWC8 walks do not (Sec. II-E, validated in
+tests/test_agu.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.accel import VOLTRA, VoltraConfig
+
+MAX_DIMS = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class AGUDescriptor:
+    """base + up to 6 nested affine loops (outermost first)."""
+    base: int
+    bounds: Tuple[int, ...]
+    strides: Tuple[int, ...]          # bytes
+    elem_bytes: int = 8               # one 64-bit beat element
+
+    def __post_init__(self):
+        assert len(self.bounds) == len(self.strides)
+        assert 1 <= len(self.bounds) <= MAX_DIMS, "AGU supports up to 6-D"
+        assert all(b > 0 for b in self.bounds)
+
+    @property
+    def count(self) -> int:
+        n = 1
+        for b in self.bounds:
+            n *= b
+        return n
+
+
+def addresses(desc: AGUDescriptor) -> List[int]:
+    """Interpret the descriptor into its address stream (the RTL's
+    behaviour, used as the contract in tests)."""
+    out = []
+    for idx in itertools.product(*(range(b) for b in desc.bounds)):
+        out.append(desc.base
+                   + sum(i * s for i, s in zip(idx, desc.strides)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Conv2D: implicit im2col input walk
+# ---------------------------------------------------------------------------
+
+
+def im2col_descriptor(*, H: int, W: int, C: int, R: int, S: int,
+                      stride: int = 1, base: int = 0,
+                      layout: str = "HWC") -> AGUDescriptor:
+    """Input-streamer program for implicit-im2col Conv2D (valid padding;
+    the DMA handles halo padding).
+
+    The GEMM core consumes one beat = 8 x 64-bit words per cycle, one per
+    array ROW — i.e. the same (kh, kw, c-block) tap for 8 *adjacent
+    output pixels* (the M dimension of the implicit GEMM). The innermost
+    AGU loop therefore walks 8 output pixels, and the full nest is
+    exactly 6-D: (oh, ow-block, kh, kw, c-block, ow-in-block) — this is
+    why the chip's input streamer needs a 6-D AGU.
+
+    HWC:     word addr stride between adjacent pixels = stride*C bytes —
+             aliases the 32-bank map whenever stride*C % 256 == 0
+             (any C >= 256... exactly what the reshuffler exists to fix).
+    C/8HWC8: blocked (C/8, H, W, 8): adjacent pixels are adjacent words
+             (8 bytes apart) — conflict-free beats by construction.
+    """
+    OH = (H - R) // stride + 1
+    OW = (W - S) // stride + 1
+    assert OW % 8 == 0, "beat grouping needs OW % 8 == 0 (pad W)"
+    cb = max(C // 8, 1)
+    if layout == "HWC":
+        return AGUDescriptor(
+            base=base,
+            bounds=(OH, OW // 8, R, S, cb, 8),
+            strides=(stride * W * C, 8 * stride * C, W * C, C, 8,
+                     stride * C),
+            elem_bytes=8)
+    if layout == "C8HWC8":
+        return AGUDescriptor(
+            base=base,
+            bounds=(OH, OW // 8, R, S, cb, 8),
+            strides=(stride * W * 8, 8 * stride * 8, W * 8, 8, H * W * 8,
+                     stride * 8),
+            elem_bytes=8)
+    raise ValueError(layout)
+
+
+def im2col_reference(*, H: int, W: int, C: int, R: int, S: int,
+                     stride: int = 1, layout: str = "HWC") -> List[int]:
+    """Oracle: explicit im2col gather addresses (word granularity), in
+    the beat order the array consumes (8 adjacent output pixels/beat)."""
+    OH = (H - R) // stride + 1
+    OW = (W - S) // stride + 1
+    out = []
+    cb = max(C // 8, 1)
+    for oh in range(OH):
+        for owb in range(OW // 8):
+            for kh in range(R):
+                for kw in range(S):
+                    for c in range(cb):
+                        for oi in range(8):
+                            ow = owb * 8 + oi
+                            ih = oh * stride + kh
+                            iw = ow * stride + kw
+                            if layout == "HWC":
+                                out.append((ih * W + iw) * C + 8 * c)
+                            else:
+                                out.append(c * H * W * 8
+                                           + (ih * W + iw) * 8)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GEMM: block-wise walks (3-D AGU weight streamer / 6-D input streamer)
+# ---------------------------------------------------------------------------
+
+
+def gemm_descriptors(M: int, K: int, N: int, *, tm: int = 8, tn: int = 8,
+                     in_base: int = 0, w_base: int = 0
+                     ) -> Dict[str, AGUDescriptor]:
+    """Input + weight streamer programs for an output-stationary tiled
+    GEMM (row-major int8 operands; one K-row of a tile per beat)."""
+    assert M % tm == 0 and N % tn == 0 and K % 8 == 0
+    kb = K // 8
+    return {
+        # loops: n-tile, m-tile, m-in-tile, k-beat
+        "input": AGUDescriptor(
+            base=in_base,
+            bounds=(N // tn, M // tm, tm, kb),
+            strides=(0, tm * K, K, 8),
+            elem_bytes=8),
+        # loops: n-tile, m-tile(rewind), n-in-tile, k-beat  (3-D pattern
+        # + rewind dim; weights are pre-laid-out K-major per column)
+        "weight": AGUDescriptor(
+            base=w_base,
+            bounds=(N // tn, M // tm, tn, kb),
+            strides=(tn * K, 0, K, 8),
+            elem_bytes=8),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Bank-conflict profile: what the reshuffler buys (Sec. II-E)
+# ---------------------------------------------------------------------------
+
+
+def bank_conflict_profile(stream: Sequence[int], *,
+                          cfg: VoltraConfig = VOLTRA,
+                          beat_words: int = 8) -> Dict[str, float]:
+    """Replay a word-address stream in beats of `beat_words` requests and
+    measure intra-beat bank conflicts on the word-interleaved 32-bank map
+    (bank = (addr/8) % 32). Returns conflict statistics; a conflict-free
+    layout sustains 1 beat/cycle, multiplicity m needs m cycles."""
+    B = cfg.num_banks
+    beats = 0
+    cycles = 0
+    worst = 0
+    for i in range(0, len(stream) - beat_words + 1, beat_words):
+        banks = [(a // 8) % B for a in stream[i:i + beat_words]]
+        mult = max(banks.count(b) for b in set(banks))
+        beats += 1
+        cycles += mult
+        worst = max(worst, mult)
+    return {
+        "beats": float(beats),
+        "cycles": float(cycles),
+        "throughput": beats / cycles if cycles else 0.0,
+        "worst_multiplicity": float(worst),
+    }

@@ -1,0 +1,200 @@
+"""End-to-end Voltra simulator: per-layer latency + energy — Fig. 6(c),
+Fig. 7(b)/(d), Table I.
+
+Latency accounting (the paper's): utilization metrics are measured within
+tiled layer blocks; *total latency* additionally counts the DMA cycles of
+tile movement over the whole execution. We report both the serial
+(compute + DMA) and the double-buffer-overlapped (max(compute, DMA))
+composition; Fig. 6(c) uses the serial one, matching the paper's separate
+"GEMM core computation cycles" vs "DMA data movement cycles" bars.
+
+Configurations:
+  * voltra      — shared memory + MGDP prefetching + PDMA tiling (the chip)
+  * separated   — fixed per-operand buffers, dedicated dispatchers: no bank
+                  contention (higher temporal utilization — as the paper
+                  notes) but naive, buffer-capped tiling (more DMA)
+  * plain_shared— shared memory without MGDP (Fig. 6(b) baseline)
+
+Energy: E = MACs*e_mac + SRAM_bytes*e_sram + DRAM_bytes*e_dram + P_static*t,
+dynamic terms scaled by (V/Vref)^2; constants calibrated so the modeled
+system power reproduces the paper's measured 171 mW @0.6 V/300 MHz and
+981 mW @1.0 V/800 MHz on the dense 96^3 GEMM (see accel.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.core import temporal, tiling
+from repro.core.accel import VOLTRA, VoltraConfig
+from repro.core.spatial import spatial_cycles
+from repro.core.workloads import Op, Workload
+
+
+@dataclasses.dataclass
+class Stats:
+    cycles_compute: float = 0.0
+    cycles_dma: float = 0.0
+    dram_bytes: float = 0.0
+    sram_bytes: float = 0.0
+    macs: float = 0.0
+
+    @property
+    def latency_serial(self) -> float:
+        return self.cycles_compute + self.cycles_dma
+
+    @property
+    def latency_overlap(self) -> float:
+        return max(self.cycles_compute, self.cycles_dma)
+
+    def add(self, o: "Stats") -> None:
+        self.cycles_compute += o.cycles_compute
+        self.cycles_dma += o.cycles_dma
+        self.dram_bytes += o.dram_bytes
+        self.sram_bytes += o.sram_bytes
+        self.macs += o.macs
+
+
+def _op_stats(op: Op, config: str, cfg: VoltraConfig) -> Stats:
+    if config == "voltra":
+        plan = tiling.plan_op(op, "shared", cfg=cfg)
+        util = temporal.op_temporal_util(op, cfg=cfg, mgdp=True)
+    elif config == "plain_shared":
+        plan = tiling.plan_op(op, "shared", cfg=cfg)
+        util = temporal.op_temporal_util(op, cfg=cfg, mgdp=False)
+    elif config == "separated":
+        plan = tiling.plan_op_naive_separated(op, cfg=cfg)
+        # dedicated buffers + dispatchers: no bank contention; only the
+        # quant-SIMD drain limit remains
+        k = max(1, math.ceil(op.K / cfg.array_k))
+        util = temporal._drain_limit(k)
+    else:
+        raise ValueError(config)
+
+    ideal = spatial_cycles(op, cfg)      # already includes op.repeat
+    compute = ideal / max(util, 1e-9)
+    dma_bytes = plan.dma_total * op.repeat
+    n_tiles = (math.ceil(op.M / plan.tm) * math.ceil(op.N / plan.tn)
+               * math.ceil(op.K / plan.tk)) * op.repeat
+    dma = dma_bytes / cfg.dma_bytes_per_cycle + cfg.dma_setup_cycles * max(
+        1, n_tiles // 8)
+    # SRAM traffic: streamer reads during compute + DMA writes into memory
+    sram = (ideal * (cfg.input_demand + cfg.weight_demand)
+            + op.bytes_out() * op.repeat + dma_bytes)
+    return Stats(compute, dma, dma_bytes, sram, op.macs)
+
+
+def simulate_workload(wl: Workload, config: str = "voltra",
+                      cfg: VoltraConfig = VOLTRA) -> Stats:
+    total = Stats()
+    for op in wl.ops:
+        total.add(_op_stats(op, config, cfg))
+    return total
+
+
+def latency_report(wl: Workload, cfg: VoltraConfig = VOLTRA) -> dict:
+    """Fig. 6(c): total latency, Voltra (shared+PDMA) vs separated."""
+    v = simulate_workload(wl, "voltra", cfg)
+    s = simulate_workload(wl, "separated", cfg)
+    return {
+        "workload": wl.name,
+        "voltra_compute_cycles": v.cycles_compute,
+        "voltra_dma_cycles": v.cycles_dma,
+        "separated_compute_cycles": s.cycles_compute,
+        "separated_dma_cycles": s.cycles_dma,
+        "gain_serial": s.latency_serial / v.latency_serial,
+        "gain_overlap": s.latency_overlap / v.latency_overlap,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Energy / efficiency (Fig. 7, Table I)
+# ---------------------------------------------------------------------------
+
+
+def energy_pj(stats: Stats, *, vdd: float, cfg: VoltraConfig = VOLTRA,
+              freq_mhz: Optional[float] = None) -> float:
+    f = cfg.freq_at(vdd) if freq_mhz is None else freq_mhz
+    vs = (vdd / cfg.vdd_ref) ** 2
+    t_s = stats.latency_serial / (f * 1e6)
+    return (stats.macs * cfg.e_mac_pj * vs
+            + stats.sram_bytes * cfg.e_sram_pj_per_byte * vs
+            + stats.dram_bytes * cfg.e_dram_pj_per_byte
+            + cfg.p_static_mw * 1e9 * t_s)
+
+
+def gemm_efficiency(M: int, K: int, N: int, *, vdd: float = 0.6,
+                    cfg: VoltraConfig = VOLTRA,
+                    preloaded: Optional[bool] = None) -> Dict[str, float]:
+    """TOPS/W and sustained TOPS for a dense GEMM at a supply point
+    (Fig. 7(b) uses M=N=K=96; Fig. 7(d) sweeps sizes).
+
+    preloaded=True measures the steady-state kernel with operands resident
+    in the shared memory (how a peak-efficiency point is measured on the
+    chip: data loaded once, kernel iterated). Default: preloaded when the
+    whole problem fits on-chip, streamed (DMA overlapped via the
+    double-buffered streamers) otherwise.
+    """
+    wl = Workload(f"gemm{M}x{K}x{N}", (Op("g", M=M, K=K, N=N),))
+    st = simulate_workload(wl, "voltra", cfg)
+    if preloaded is None:
+        preloaded = (M * K + K * N + M * N) <= cfg.mem_bytes
+    f = cfg.freq_at(vdd)
+    vs = (vdd / cfg.vdd_ref) ** 2
+    if preloaded:
+        cycles = st.cycles_compute
+        dram = 0.0
+    else:
+        cycles = max(st.cycles_compute, st.cycles_dma)
+        dram = st.dram_bytes
+    t_s = cycles / (f * 1e6)
+    e = (st.macs * cfg.e_mac_pj * vs
+         + st.sram_bytes * cfg.e_sram_pj_per_byte * vs
+         + dram * cfg.e_dram_pj_per_byte
+         + cfg.p_static_mw * 1e9 * t_s)
+    ops = 2.0 * st.macs
+    return {
+        "tops": ops / t_s / 1e12,
+        "tops_per_w": ops / e,              # pJ -> ops/pJ == TOPS/W
+        "power_mw": e / t_s * 1e-9,
+        "vdd": vdd,
+        "freq_mhz": f,
+        "preloaded": float(preloaded),
+    }
+
+
+def sparsity_efficiency(M: int, K: int, N: int, *, weight_sparsity: float,
+                        toggle_rate: float = 1.0, vdd: float = 0.6,
+                        cfg: VoltraConfig = VOLTRA) -> float:
+    """Fig. 7(c): effective TOPS/W under weight sparsity / input toggle
+    rate. Voltra has no sparsity skipping logic — zero weights still take
+    a cycle but toggle less datapath (dynamic MAC energy scales with the
+    operand activity), which is why the paper reports rising efficiency
+    with sparsity at constant throughput."""
+    wl = Workload("g", (Op("g", M=M, K=K, N=N),))
+    st = simulate_workload(wl, "voltra", cfg)
+    f = cfg.freq_at(vdd)
+    vs = (vdd / cfg.vdd_ref) ** 2
+    activity = (1.0 - 0.7 * weight_sparsity) * (0.4 + 0.6 * toggle_rate)
+    # steady-state kernel (operands preloaded), same basis as Fig. 7(b)
+    e = (st.macs * cfg.e_mac_pj * vs * activity
+         + st.sram_bytes * cfg.e_sram_pj_per_byte * vs
+         + cfg.p_static_mw * 1e9 * st.cycles_compute / (f * 1e6))
+    return 2.0 * st.macs / e
+
+
+def table1(cfg: VoltraConfig = VOLTRA) -> Dict[str, float]:
+    """Headline chip numbers (Table I / Fig. 5)."""
+    lo = gemm_efficiency(96, 96, 96, vdd=cfg.vdd_min, cfg=cfg)
+    hi = gemm_efficiency(96, 96, 96, vdd=cfg.vdd_max, cfg=cfg)
+    area_mm2 = 0.654
+    return {
+        "macs": cfg.macs,
+        "peak_tops": cfg.peak_tops(),                  # 0.8192 @ 800 MHz
+        "peak_tops_per_w": lo["tops_per_w"],           # ~1.60 @ 0.6 V
+        "power_mw_min": lo["power_mw"],                # ~171
+        "power_mw_max": hi["power_mw"],                # ~981
+        "area_eff_tops_mm2": cfg.peak_tops() / area_mm2,   # ~1.25
+        "mem_kib": cfg.mem_kib,
+    }

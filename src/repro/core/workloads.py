@@ -1,0 +1,295 @@
+"""The paper's 8 evaluation workloads (Fig. 6), layer-by-layer.
+
+Every network is lowered to the op vocabulary the GEMM core executes:
+``gemm`` (implicit-im2col Conv2D included) and ``dwconv`` (depthwise,
+mapped per-channel). Each op carries the full (M, K, N) GEMM view plus a
+``repeat`` count so per-head / per-timestep / per-channel instances are
+modeled without flattening the list.
+
+Workload-definition assumptions (the paper gives model names only):
+  * MobileNetV2 / ResNet50: ImageNet 224x224, batch 1.
+  * ViT-B/16: 224x224 -> 197 tokens, batch 1.
+  * PointNeXt-S: 1024-point cloud, 4 set-abstraction stages (the op mix is
+    representative; PointNeXt has no single canonical layer table).
+  * LSTM: 1 layer, hidden=input=1024, seq 64, batch 8.
+  * BERT-Base: 12L d=768 h=12 ff=3072, token size 512 (paper).
+  * LLaMA3.2-3B: 28L d=3072 q=24 kv=8 hd=128 ff=8192 vocab=128256;
+    prefill token size 256 (paper); decode at KV length 256 with batch 8
+    (an edge-serving batch; the paper's decode batch is unpublished —
+    see DESIGN.md "Workload assumptions").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One GEMM-core invocation: out[M,N] += in[M,K] @ w[K,N]."""
+    name: str
+    M: int
+    K: int
+    N: int
+    repeat: int = 1
+    kind: str = "gemm"          # gemm | dwconv
+    weight_stationary_reuse: bool = True  # False: weights used once (attn)
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.M * self.K * self.N * self.repeat
+
+    @property
+    def macs(self) -> float:
+        return float(self.M) * self.K * self.N * self.repeat
+
+    def bytes_in(self) -> int:
+        return self.M * self.K  # int8
+
+    def bytes_w(self) -> int:
+        return self.K * self.N
+
+    def bytes_out(self) -> int:
+        return self.M * self.N  # int8 after quantization
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    ops: Tuple[Op, ...]
+
+    @property
+    def flops(self) -> float:
+        return sum(op.flops for op in self.ops)
+
+    @property
+    def macs(self) -> float:
+        return sum(op.macs for op in self.ops)
+
+
+def _conv(name, h, w, cin, cout, r=1, s=1, stride=1, repeat=1) -> Op:
+    ho, wo = h // stride, w // stride
+    return Op(name, M=ho * wo, K=r * s * cin, N=cout, repeat=repeat)
+
+
+def _dw(name, h, w, c, r=3, stride=1) -> Op:
+    ho, wo = h // stride, w // stride
+    # depthwise: C independent (M, R*S, 1) GEMMs
+    return Op(name, M=ho * wo, K=r * r, N=1, repeat=c, kind="dwconv")
+
+
+# ---------------------------------------------------------------------------
+# 1. MobileNetV2 (ImageNet 224, batch 1)
+# ---------------------------------------------------------------------------
+
+
+def mobilenet_v2() -> Workload:
+    ops: List[Op] = [_conv("stem", 224, 224, 3, 32, 3, 3, 2)]
+    cin, h = 32, 112
+    # (expansion t, out channels c, blocks n, stride s)
+    cfgs = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+            (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    for t, c, n, s in cfgs:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            mid = cin * t
+            if t != 1:
+                ops.append(_conv(f"ir{c}_{i}_expand", h, h, cin, mid))
+            ops.append(_dw(f"ir{c}_{i}_dw", h, h, mid, 3, stride))
+            h = h // stride
+            ops.append(_conv(f"ir{c}_{i}_project", h, h, mid, c))
+            cin = c
+    ops.append(_conv("head", 7, 7, 320, 1280))
+    ops.append(Op("classifier", M=1, K=1280, N=1000))
+    return Workload("MobileNetV2", tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# 2. ResNet50 (ImageNet 224, batch 1)
+# ---------------------------------------------------------------------------
+
+
+def resnet50() -> Workload:
+    ops: List[Op] = [_conv("stem", 224, 224, 3, 64, 7, 7, 2)]
+    h = 56  # after maxpool
+    cin = 64
+    stages = [(64, 256, 3, 1), (128, 512, 4, 2), (256, 1024, 6, 2),
+              (512, 2048, 3, 2)]
+    for mid, cout, blocks, stride in stages:
+        for i in range(blocks):
+            st = stride if i == 0 else 1
+            ops.append(_conv(f"r{cout}_{i}_a", h, h, cin, mid, 1, 1, st))
+            hh = h // st
+            ops.append(_conv(f"r{cout}_{i}_b", hh, hh, mid, mid, 3, 3, 1))
+            ops.append(_conv(f"r{cout}_{i}_c", hh, hh, mid, cout))
+            if i == 0:
+                ops.append(_conv(f"r{cout}_{i}_ds", h, h, cin, cout, 1, 1, st))
+            cin, h = cout, hh
+    ops.append(Op("fc", M=1, K=2048, N=1000))
+    return Workload("ResNet50", tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# Transformer helpers
+# ---------------------------------------------------------------------------
+
+
+def _mha_ops(pre, S, d, heads, hd, kv_heads=None, kv_len=None,
+             q_rows=None) -> List[Op]:
+    """Projections + per-head score/context GEMMs (KV ops are not
+    weight-stationary: K/V come from activations)."""
+    kv = kv_heads or heads
+    T = kv_len or S
+    M = q_rows if q_rows is not None else S
+    ops = [
+        Op(f"{pre}.q", M=M, K=d, N=heads * hd),
+        Op(f"{pre}.k", M=S, K=d, N=kv * hd),
+        Op(f"{pre}.v", M=S, K=d, N=kv * hd),
+        Op(f"{pre}.scores", M=M * (heads // kv), K=hd, N=T, repeat=kv,
+           weight_stationary_reuse=False),
+        Op(f"{pre}.ctx", M=M * (heads // kv), K=T, N=hd, repeat=kv,
+           weight_stationary_reuse=False),
+        Op(f"{pre}.o", M=M, K=heads * hd, N=d),
+    ]
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# 3. ViT-B/16 (224 -> 197 tokens, batch 1)
+# ---------------------------------------------------------------------------
+
+
+def vit_b() -> Workload:
+    S, d, h, ff, L = 197, 768, 12, 3072, 12
+    ops: List[Op] = [Op("patch_embed", M=196, K=16 * 16 * 3, N=d)]
+    for i in range(L):
+        ops += _mha_ops(f"l{i}", S, d, h, d // h)
+        ops += [Op(f"l{i}.ff1", M=S, K=d, N=ff),
+                Op(f"l{i}.ff2", M=S, K=ff, N=d)]
+    ops.append(Op("head", M=1, K=d, N=1000))
+    return Workload("ViT-B", tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# 4. PointNeXt-S (1024 points)
+# ---------------------------------------------------------------------------
+
+
+def pointnext() -> Workload:
+    ops: List[Op] = [Op("stem", M=1024, K=3, N=32)]
+    pts, c = 1024, 32
+    for stage, cout in enumerate((64, 128, 256, 512)):
+        pts //= 4
+        # SA: grouped neighborhood MLP (K neighbors=32) then reduction
+        ops.append(Op(f"sa{stage}.mlp1", M=pts * 32, K=c + 3, N=cout))
+        ops.append(Op(f"sa{stage}.mlp2", M=pts * 32, K=cout, N=cout))
+        # InvResMLP x1: pw -> dw-ish grouped -> pw
+        ops.append(Op(f"s{stage}.pw1", M=pts, K=cout, N=cout * 4))
+        ops.append(Op(f"s{stage}.pw2", M=pts, K=cout * 4, N=cout))
+        c = cout
+    ops.append(Op("cls.fc1", M=1, K=512, N=512))
+    ops.append(Op("cls.fc2", M=1, K=512, N=256))
+    ops.append(Op("cls.fc3", M=1, K=256, N=40))
+    return Workload("PointNeXt", tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# 5. LSTM (hidden 1024, seq 64, batch 8)
+# ---------------------------------------------------------------------------
+
+
+def lstm(batch: int = 8, hidden: int = 1024, seq: int = 64) -> Workload:
+    ops = [
+        Op("x_gates", M=batch, K=hidden, N=4 * hidden, repeat=seq),
+        Op("h_gates", M=batch, K=hidden, N=4 * hidden, repeat=seq),
+        Op("proj", M=batch, K=hidden, N=hidden, repeat=seq),
+    ]
+    return Workload("LSTM", tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# 6. BERT-Base (token size 512, batch 1)
+# ---------------------------------------------------------------------------
+
+
+def bert_base(S: int = 512) -> Workload:
+    d, h, ff, L = 768, 12, 3072, 12
+    ops: List[Op] = []
+    for i in range(L):
+        ops += _mha_ops(f"l{i}", S, d, h, d // h)
+        ops += [Op(f"l{i}.ff1", M=S, K=d, N=ff),
+                Op(f"l{i}.ff2", M=S, K=ff, N=d)]
+    return Workload("BERT-Base", tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# 7/8. LLaMA3.2-3B prefill / decode
+# ---------------------------------------------------------------------------
+
+_LLAMA = dict(L=28, d=3072, heads=24, kv=8, hd=128, ff=8192, vocab=128256)
+
+
+def llama32_3b_prefill(S: int = 256) -> Workload:
+    c = _LLAMA
+    ops: List[Op] = []
+    for i in range(c["L"]):
+        ops += _mha_ops(f"l{i}", S, c["d"], c["heads"], c["hd"], c["kv"])
+        ops += [Op(f"l{i}.gate", M=S, K=c["d"], N=c["ff"]),
+                Op(f"l{i}.up", M=S, K=c["d"], N=c["ff"]),
+                Op(f"l{i}.down", M=S, K=c["ff"], N=c["d"])]
+    ops.append(Op("lm_head", M=1, K=c["d"], N=c["vocab"]))
+    return Workload("LLaMA3.2-3B-prefill", tuple(ops))
+
+
+def llama32_3b_decode(kv_len: int = 256, batch: int = 8) -> Workload:
+    """One decode step at KV length `kv_len` (see module docstring for the
+    batch assumption)."""
+    c = _LLAMA
+    B = batch
+    ops: List[Op] = []
+    for i in range(c["L"]):
+        ops += [
+            Op(f"l{i}.q", M=B, K=c["d"], N=c["heads"] * c["hd"]),
+            Op(f"l{i}.k", M=B, K=c["d"], N=c["kv"] * c["hd"]),
+            Op(f"l{i}.v", M=B, K=c["d"], N=c["kv"] * c["hd"]),
+            # per (batch, kv-head): 3 grouped q rows attend to the cache
+            Op(f"l{i}.scores", M=c["heads"] // c["kv"], K=c["hd"], N=kv_len,
+               repeat=B * c["kv"], weight_stationary_reuse=False),
+            Op(f"l{i}.ctx", M=c["heads"] // c["kv"], K=kv_len, N=c["hd"],
+               repeat=B * c["kv"], weight_stationary_reuse=False),
+            Op(f"l{i}.o", M=B, K=c["heads"] * c["hd"], N=c["d"]),
+            Op(f"l{i}.gate", M=B, K=c["d"], N=c["ff"]),
+            Op(f"l{i}.up", M=B, K=c["d"], N=c["ff"]),
+            Op(f"l{i}.down", M=B, K=c["ff"], N=c["d"]),
+        ]
+    ops.append(Op("lm_head", M=B, K=c["d"], N=c["vocab"]))
+    return Workload("LLaMA3.2-3B-decode", tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# Registry (Fig. 6 order)
+# ---------------------------------------------------------------------------
+
+
+def all_workloads() -> Dict[str, Workload]:
+    return {
+        "mobilenetv2": mobilenet_v2(),
+        "resnet50": resnet50(),
+        "vit_b": vit_b(),
+        "pointnext": pointnext(),
+        "lstm": lstm(),
+        "bert_base": bert_base(),
+        "llama_prefill": llama32_3b_prefill(),
+        "llama_decode": llama32_3b_decode(),
+    }
+
+
+# BERT-Base MHA single head, token 64 — the Fig. 4 example.
+def bert_mha_head(S: int = 64, d: int = 768, hd: int = 64) -> List[Op]:
+    return [
+        Op("q_proj", M=S, K=d, N=hd),
+        Op("k_proj", M=S, K=d, N=hd),
+        Op("v_proj", M=S, K=d, N=hd),
+        Op("scores", M=S, K=hd, N=S, weight_stationary_reuse=False),
+        Op("ctx", M=S, K=S, N=hd, weight_stationary_reuse=False),
+    ]

@@ -1,0 +1,68 @@
+"""Public jit'd wrappers for the kernel layer.
+
+On a real TPU these dispatch to the Pallas kernels (compiled); everywhere
+else they run the kernels in interpret mode (bit-comparable semantics, the
+validation mode this repo uses on CPU) or fall back to the jnp reference.
+The model stack (repro.models) keeps pure-jnp paths so XLA SPMD handles
+sharding; the kernels are the per-chip compute layer a TPU deployment
+swaps in (see DESIGN.md "Kernel integration").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as _attention
+from repro.kernels import conv_im2col as _conv
+from repro.kernels import gemm_os as _gemm
+from repro.kernels import ref as _ref
+from repro.kernels import reshuffle as _reshuffle
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(x: jax.Array, w: jax.Array, *,
+           block: Tuple[int, int, int] = (128, 128, 128),
+           out_dtype=None) -> jax.Array:
+    """Output-stationary 3D-blocked matmul (Voltra C1)."""
+    return _gemm.gemm_os(x, w, block=block, out_dtype=out_dtype,
+                         interpret=not _on_tpu())
+
+
+def quant_matmul(x: jax.Array, w: jax.Array, scale: float, *,
+                 block: Tuple[int, int, int] = (128, 128, 128)
+                 ) -> jax.Array:
+    """INT8 x INT8 -> INT32 accumulate -> fused quant epilogue -> INT8
+    (Voltra C1 + C4)."""
+    return _gemm.gemm_os(x, w, block=block, quant_scale=scale,
+                         interpret=not _on_tpu())
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, kv_valid: Optional[int] = None,
+              bq: int = 128, bk: int = 128) -> jax.Array:
+    """Fused flash-MHA with on-the-fly K^T (Voltra C3/PDMA analogue)."""
+    return _attention.mha(q, k, v, causal=causal, kv_valid=kv_valid,
+                          bq=bq, bk=bk, interpret=not _on_tpu())
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    """Implicit-im2col Conv2D (6-D AGU analogue), SAME padding."""
+    return _conv.conv2d(x, w, stride=stride, interpret=not _on_tpu())
+
+
+def blocked_layout(x: jax.Array, cb: int = 128) -> jax.Array:
+    return _reshuffle.blocked_layout(x, cb, interpret=not _on_tpu())
+
+
+def transpose(x: jax.Array) -> jax.Array:
+    return _reshuffle.tiled_transpose(x, interpret=not _on_tpu())
+
+
+# re-export oracles for tests/benchmarks
+ref = _ref

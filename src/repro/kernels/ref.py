@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every kernel (the correctness contract)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(x: jax.Array, w: jax.Array, *, out_dtype=None,
+             quant_scale: Optional[float] = None) -> jax.Array:
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    acc = jnp.matmul(
+        x, w, preferred_element_type=jnp.int32 if integer else jnp.float32)
+    if quant_scale is not None:
+        q = jnp.round(acc.astype(jnp.float32) * quant_scale)
+        return jnp.clip(q, -128, 127).astype(jnp.int8)
+    if out_dtype is None:
+        out_dtype = jnp.int32 if integer else x.dtype
+    return acc.astype(out_dtype)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, kv_valid: Optional[int] = None
+            ) -> jax.Array:
+    """Exact softmax attention with GQA. q: (B,Sq,H,D); k,v: (B,Sk,KV,D)."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    kv_lim = Sk if kv_valid is None else kv_valid
+    kpos = jnp.arange(Sk)
+    mask = kpos[None, :] < kv_lim
+    if causal:
+        mask = mask & (jnp.arange(Sq)[:, None] >= kpos[None, :])
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,
+               padding: str = "SAME") -> jax.Array:
+    """x: (N,H,W,C); w: (R,S,C,K) -> (N,HO,WO,K)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
+
+
+def blocked_layout_ref(x: jax.Array, cb: int) -> jax.Array:
+    """(H, W, C) -> (C//cb, H, W, cb) — the C/8HWC8 transform at TPU lane
+    granularity."""
+    H, W, C = x.shape
+    assert C % cb == 0
+    return x.reshape(H, W, C // cb, cb).transpose(2, 0, 1, 3)
+
+
+def transpose_ref(x: jax.Array) -> jax.Array:
+    return x.T

@@ -1,0 +1,66 @@
+"""Data-reshuffler kernels — Sec. II-E on TPU.
+
+The chip's reshuffler converts layouts so the streamers can fetch
+conflict-free:
+
+  * ``blocked_layout`` — HWC -> C/cb HWC cb. On the chip cb=8 (one 64-bit
+    bank word of channels); on TPU cb=128 (one lane register) so that a
+    conv window read is lane-contiguous (hardware adaptation, DESIGN.md).
+  * ``tiled_transpose`` — the *dedicated transposer* baseline the paper
+    compares its on-the-fly streamer transposer against (attention.py is
+    the on-the-fly version: it never runs this pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _blocked_kernel(x_ref, o_ref):
+    o_ref[0] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("cb", "interpret"))
+def blocked_layout(x: jax.Array, cb: int = 128, *,
+                   interpret: bool = True) -> jax.Array:
+    """(H, W, C) -> (C//cb, H, W, cb); C padded up to a cb multiple."""
+    H, W, C = x.shape
+    pc = (-C) % cb
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, pc))) if pc else x
+    Cp = C + pc
+    return pl.pallas_call(
+        _blocked_kernel,
+        grid=(Cp // cb,),
+        in_specs=[pl.BlockSpec((H, W, cb), lambda j: (0, 0, j))],
+        out_specs=pl.BlockSpec((1, H, W, cb), lambda j: (j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Cp // cb, H, W, cb), x.dtype),
+        interpret=interpret,
+    )(xp)
+
+
+def _transpose_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def tiled_transpose(x: jax.Array, *, block: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """(M, N) -> (N, M) via VMEM tiles (the dedicated-transposer pass)."""
+    M, N = x.shape
+    b = block
+    pm, pn = (-M) % b, (-N) % b
+    xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
+    Mp, Np = xp.shape
+    out = pl.pallas_call(
+        _transpose_kernel,
+        grid=(Mp // b, Np // b),
+        in_specs=[pl.BlockSpec((b, b), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((b, b), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((Np, Mp), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:N, :M]

@@ -1,0 +1,86 @@
+"""Jittable step functions + their sharding specs for launcher/dry-run use.
+
+The dry-run lowers exactly these steps — the same code the trainer/server
+runs, so a passing dry-run certifies the production path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, input_specs
+from repro.models import api
+from repro.optim import adamw
+from repro.parallel.sharding import Rules
+from repro.runtime import trainer as trainer_mod
+
+BATCH_AXES = {
+    "tokens": "batch,seq",
+    "labels": "batch,seq",
+    "pos": "batch",
+    "enc_embeds": "batch,seq,embed",
+    "frontend_embeds": "batch,seq,embed",
+}
+
+
+def opt_config_for(cfg: ModelConfig) -> adamw.AdamWConfig:
+    return adamw.AdamWConfig(moment_dtype=cfg.moment_dtype)
+
+
+def state_shapes(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    p = api.param_shapes(cfg)
+    return {"params": p,
+            "opt": jax.eval_shape(functools.partial(adamw.init, opt_cfg), p)}
+
+
+def state_axes(cfg: ModelConfig):
+    pa = api.param_axes(cfg)
+    return {"params": pa,
+            "opt": {"m": pa, "v": pa, "step": ""}}
+
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig, rules: Rules):
+    """Returns (fn, in_specs_tree(ShapeDtypeStruct), in_shardings,
+    out_shardings_or_None) for the cell's step kind."""
+    opt_cfg = opt_config_for(cfg)
+    ins = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        step = trainer_mod.make_train_step(cfg, opt_cfg, rules=rules)
+        sshapes = state_shapes(cfg, opt_cfg)
+        saxes = state_axes(cfg)
+        state_sh = rules.tree_shardings(sshapes, saxes)
+        batch_sh = {k: rules.sharding(v.shape, BATCH_AXES[k])
+                    for k, v in ins.items()}
+        args = (sshapes, ins)
+        in_sh = (state_sh, batch_sh)
+        out_sh = (state_sh, None)
+        return step, args, in_sh, out_sh
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            logits, cache, pos = api.prefill(cfg, params, batch, rules=rules)
+            return logits, cache, pos
+
+        pshapes = api.param_shapes(cfg)
+        psh = rules.tree_shardings(pshapes, api.param_axes(cfg))
+        batch_sh = {k: rules.sharding(v.shape, BATCH_AXES[k])
+                    for k, v in ins.items()}
+        return fn, (pshapes, ins), (psh, batch_sh), None
+
+    # decode
+    def fn(params, cache, tokens, pos):
+        return api.decode_step(cfg, params, cache, tokens, pos, rules=rules)
+
+    pshapes = api.param_shapes(cfg)
+    psh = rules.tree_shardings(pshapes, api.param_axes(cfg))
+    cache_sh = rules.tree_shardings(ins["cache"], api.cache_axes(cfg))
+    tok_sh = rules.sharding(ins["tokens"].shape, "batch,seq")
+    pos_sh = rules.sharding(ins["pos"].shape, "batch")
+    args = (pshapes, ins["cache"], ins["tokens"], ins["pos"])
+    in_sh = (psh, cache_sh, tok_sh, pos_sh)
+    out_sh = (None, cache_sh)
+    return fn, args, in_sh, out_sh

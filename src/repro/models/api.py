@@ -1,0 +1,269 @@
+"""Unified model API: init / forward / loss / prefill / decode / cache.
+
+Every assigned architecture is driven through these six functions; the
+launcher, trainer, serving engine and dry-run all sit on top of them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import Maker, norm_apply, norm_init
+from repro.parallel.sharding import NO_RULES, Rules
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _build(cfg, mk: Maker, key=None) -> Dict[str, Any]:
+    vp = tfm.padded_vocab(cfg.vocab)
+    d = cfg.d_model
+    kinds = tfm.pattern_for(cfg)
+    n_super, tail = tfm.layer_plan(cfg)
+    p: Dict[str, Any] = {
+        "embed": mk((vp, d), "wvocab,wembed", scale=0.02),
+        "final_norm": norm_init(mk, d, cfg.norm),
+        "blocks": tfm.stack_init(
+            mk, cfg, kinds, n_super, tail,
+            key=None if mk.mode == "axes" else jax.random.fold_in(key, 1)),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = mk((d, vp), "wembed,wvocab", scale=d ** -0.5)
+    if cfg.is_encdec:
+        ek = None if mk.mode == "axes" else jax.random.fold_in(key, 2)
+        p["enc"] = {
+            "blocks": tfm.stack_init(mk, cfg, ("enc",), cfg.enc_layers, (),
+                                     key=ek),
+            "final_norm": norm_init(mk, d, cfg.norm),
+        }
+    return p
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    mk = Maker("init", key, jnp.dtype(cfg.dtype))
+    return _build(cfg, mk, key)
+
+
+def param_axes(cfg) -> Dict[str, Any]:
+    return _build(cfg, Maker("axes"))
+
+
+def param_shapes(cfg):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _logits(cfg, params, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+
+
+def _encode(cfg, params, enc_embeds, rules):
+    x, _, _ = tfm.stack_apply(cfg, params["enc"]["blocks"], enc_embeds,
+                              ("enc",), (), rules=rules)
+    return norm_apply(params["enc"]["final_norm"], x, cfg.norm)
+
+
+def forward_hidden(cfg, params, batch: Dict[str, Any], *,
+                   rules: Rules = NO_RULES, want_cache: bool = False,
+                   max_len=None):
+    """batch: {tokens [, frontend_embeds | enc_embeds]} -> (hidden, caches,
+    aux). Sequence layout for VLM: [frontend_embeds | token embeds]."""
+    kinds = tfm.pattern_for(cfg)
+    _, tail = tfm.layer_plan(cfg)
+    x = _embed_tokens(cfg, params, batch["tokens"])
+    if cfg.frontend == "patch" and "frontend_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["frontend_embeds"].astype(x.dtype), x], axis=1)
+    x = rules.cons(x, "batch,seq,embed")
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(cfg, params, batch["enc_embeds"].astype(x.dtype),
+                          rules)
+    x, caches, aux = tfm.stack_apply(cfg, params["blocks"], x, kinds, tail,
+                                     rules=rules, positions=positions,
+                                     enc_out=enc_out, want_cache=want_cache,
+                                     max_len=max_len)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, caches, aux
+
+
+def forward(cfg, params, batch: Dict[str, Any], *, rules: Rules = NO_RULES,
+            want_cache: bool = False, max_len=None):
+    """Full-sequence logits (small models / tests; training uses the
+    blockwise-CE path in loss_fn to avoid materializing (B, S, vocab))."""
+    x, caches, aux = forward_hidden(cfg, params, batch, rules=rules,
+                                    want_cache=want_cache, max_len=max_len)
+    logits = _logits(cfg, params, x)
+    logits = rules.cons(logits, "batch,seq,vocab")
+    return logits, caches, aux
+
+
+CE_CHUNK = 512
+
+
+def _ce_chunk(cfg, params, x, labels, rules):
+    """CE over one sequence chunk; logits (B, c, Vp) live only inside."""
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    logits = rules.cons(logits, "batch,seq,vocab")
+    vp = logits.shape[-1]
+    if vp > cfg.vocab:
+        logits = jnp.where(jnp.arange(vp) < cfg.vocab, logits, -1e30)
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, lab[..., None], -1)[..., 0]
+    return ((lse - ll) * mask).sum(), mask.sum()
+
+
+def loss_fn(cfg, params, batch, *, rules: Rules = NO_RULES):
+    """Next-token CE (labels aligned: labels[t] is the target of logits[t]).
+    Blockwise over sequence chunks: full (B, S, vocab) logits are never
+    materialized (checkpointed scan recomputes per-chunk logits in bwd).
+    VLM: loss only over the text segment (last `len(labels)` positions)."""
+    x, _, aux = forward_hidden(cfg, params, batch, rules=rules)
+    labels = batch["labels"]
+    if x.shape[1] != labels.shape[1]:  # VLM frontend positions carry no loss
+        x = x[:, -labels.shape[1]:]
+    B, S, _ = x.shape
+    c = min(CE_CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (S + pad) // c
+    xc = x.reshape(B, nc, c, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xs, ls = inp
+        t, n = jax.checkpoint(
+            lambda a, b: _ce_chunk(cfg, params, a, b, rules))(xs, ls)
+        return (tot + t, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xc, lc))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce
+    if cfg.moe is not None and cfg.moe.num_experts > 0:
+        loss = loss + 0.01 * aux["lb_loss"] + 0.001 * aux["z_loss"]
+    return loss, {"ce": ce, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None):
+    """Run the full prompt; returns (last_logits, cache, next_pos). Full-attn
+    kv caches are padded out to `max_len` slots for subsequent decoding.
+    Logits are computed for the LAST position only (the (B, S, vocab) tensor
+    is never materialized — PDMA-style residency at the serving level)."""
+    x, caches, _ = forward_hidden(cfg, params, batch, rules=rules,
+                                  want_cache=True, max_len=max_len)
+    B, S = x.shape[0], x.shape[1]
+    logits = _logits(cfg, params, x[:, -1:])[:, 0]
+    pos = jnp.full((B,), S, jnp.int32)
+    return logits, caches, pos
+
+
+def decode_step(cfg, params, cache, tokens, pos, *,
+                rules: Rules = NO_RULES):
+    """tokens: (B, 1) int32; pos: (B,) next position. -> (logits, new_cache)."""
+    kinds = tfm.pattern_for(cfg)
+    _, tail = tfm.layer_plan(cfg)
+    x = _embed_tokens(cfg, params, tokens)
+    x = rules.cons(x, "batch,seq,embed")
+    x, new_cache = tfm.stack_decode(cfg, params["blocks"], x, cache, pos,
+                                    kinds, tail, rules=rules)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = _logits(cfg, params, x)[:, 0]
+    return rules.cons(logits, "batch,vocab"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_init(cfg, kind: str, batch: int, seq_len: int):
+    from repro.models import griffin, ssm
+    dt = jnp.dtype(cfg.kv_cache_dtype)   # int8 cache opt-in (§Perf C4)
+    kv, hd = cfg.kv_heads, cfg.resolved_head_dim
+    if kind in ("attn_mlp", "attn_moe"):
+        return {"k": jnp.zeros((batch, seq_len, kv, hd), dt),
+                "v": jnp.zeros((batch, seq_len, kv, hd), dt)}
+    if kind == "dec":
+        return {"k": jnp.zeros((batch, seq_len, kv, hd), dt),
+                "v": jnp.zeros((batch, seq_len, kv, hd), dt),
+                "xk": jnp.zeros((batch, seq_len, kv, hd), dt),
+                "xv": jnp.zeros((batch, seq_len, kv, hd), dt)}
+    if kind == "local_attn":
+        w = cfg.hybrid.window  # ring buffer is always window-sized
+        return {"k": jnp.zeros((batch, w, kv, hd), dt),
+                "v": jnp.zeros((batch, w, kv, hd), dt)}
+    if kind == "ssm":
+        return ssm.ssm_cache_init(cfg, batch)
+    if kind == "rglru":
+        return griffin.rglru_cache_init(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_init(cfg, batch: int, seq_len: int):
+    kinds = tfm.pattern_for(cfg)
+    n_super, tail = tfm.layer_plan(cfg)
+
+    def stacked(kind):
+        one = _block_cache_init(cfg, kind, batch, seq_len)
+        return jax.tree.map(
+            lambda a: jnp.zeros((n_super,) + a.shape, a.dtype), one)
+
+    scan = {str(j): stacked(k) for j, k in enumerate(kinds)} if n_super else {}
+    tailc = [_block_cache_init(cfg, k, batch, seq_len) for k in tail]
+    return {"scan": scan, "tail": tailc}
+
+
+def cache_shapes(cfg, batch: int, seq_len: int):
+    return jax.eval_shape(functools.partial(cache_init, cfg, batch, seq_len))
+
+
+def cache_axes(cfg):
+    """Logical axes tree matching cache_init structure."""
+    shapes = cache_shapes(cfg, 1, 2)
+
+    def ax(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        leafname = str(names[-1]) if names else ""
+        if leafname in ("k", "v", "xk", "xv"):
+            base = "batch,seq,kv_heads"
+        elif leafname == "ssm":
+            base = "batch,heads"
+        elif leafname == "conv":
+            base = "batch"
+        elif leafname == "h":
+            base = "batch,ffn"
+        else:
+            base = "batch"
+        if "scan" in [str(n) for n in names]:
+            base = "layers," + base
+        return base
+
+    return jax.tree_util.tree_map_with_path(ax, shapes)

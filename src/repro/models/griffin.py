@@ -1,0 +1,112 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+Training/prefill runs the diagonal linear recurrence with an associative
+scan; decode is the O(1) step. Local attention blocks of the hybrid pattern
+live in ``layers.attention_*`` with a ring-buffer window cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Maker
+from repro.parallel.sharding import NO_RULES, Rules
+
+_C = 8.0  # RG-LRU constant
+
+
+def lru_dim(cfg) -> int:
+    return cfg.hybrid.lru_dim or cfg.d_model
+
+
+def rglru_init(mk: Maker, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    r = lru_dim(cfg)
+    w = 4  # conv width (temporal conv, RecurrentGemma uses 4)
+    return {
+        "proj_x": mk((d, r), "wembed,wff", scale=d ** -0.5),
+        "proj_y": mk((d, r), "wembed,wff", scale=d ** -0.5),
+        "conv_w": mk((w, r), "", scale=w ** -0.5),
+        "conv_b": mk((r,), "", zeros=True),
+        "gate_a": mk((r, r), "wff,", scale=r ** -0.5),
+        "gate_a_b": mk((r,), "", zeros=True),
+        "gate_x": mk((r, r), "wff,", scale=r ** -0.5),
+        "gate_x_b": mk((r,), "", zeros=True),
+        # Lambda init so that a ~ U(0.9, 0.999)-ish at r=0.5 (paper init)
+        "lam": mk((r,), "ffn", ones=True, dtype=jnp.float32),
+        "proj_out": mk((r, d), "wff,wembed", scale=r ** -0.5),
+    }
+
+
+def _conv(p, x):
+    """Causal depthwise conv, width 4, over axis 1."""
+    w = p["conv_w"].shape[0]
+    out = p["conv_b"] * jnp.ones_like(x)
+    for i in range(w):
+        shift = w - 1 - i
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + p["conv_w"][i] * xs
+    return out
+
+
+def _gates(p, u):
+    """u: (..., r) post-conv branch input -> (a, gated_input) fp32."""
+    uf = u.astype(jnp.float32)
+    r_t = jax.nn.sigmoid(uf @ p["gate_a"].astype(jnp.float32) + p["gate_a_b"])
+    i_t = jax.nn.sigmoid(uf @ p["gate_x"].astype(jnp.float32) + p["gate_x_b"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r_t
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i_t * uf)
+    return a, gated
+
+
+def rglru_apply(cfg, p, x, *, rules: Rules = NO_RULES,
+                return_state: bool = False):
+    """Full-sequence RG-LRU block. x: (B, S, d)."""
+    u = jnp.einsum("bsd,dr->bsr", x, p["proj_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["proj_y"]))
+    u = rules.cons(u, "batch,seq,ffn")
+    conv_in = u
+    u = _conv(p, u)
+    a, b = _gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = hh.astype(x.dtype) * gate
+    out = jnp.einsum("bsr,rd->bsd", h, p["proj_out"])
+    out = rules.cons(out, "batch,seq,embed")
+    if return_state:
+        w = p["conv_w"].shape[0]
+        conv_state = conv_in[:, -(w - 1):]
+        pad = (w - 1) - conv_state.shape[1]
+        if pad > 0:
+            conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"h": hh[:, -1].astype(jnp.float32),
+                     "conv": conv_state.astype(x.dtype)}
+    return out
+
+
+def rglru_cache_init(cfg, batch: int):
+    r = lru_dim(cfg)
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, 3, r), jnp.dtype(cfg.dtype))}
+
+
+def rglru_decode(cfg, p, x, cache, *, rules: Rules = NO_RULES):
+    """One-token step. x: (B, 1, d)."""
+    u = jnp.einsum("bsd,dr->bsr", x, p["proj_x"])[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["proj_y"]))[:, 0]
+    hist = jnp.concatenate([cache["conv"], u[:, None]], 1)        # (B, w, r)
+    conv_out = jnp.einsum("bwr,wr->br", hist, p["conv_w"]) + p["conv_b"]
+    a, b = _gates(p, conv_out)
+    h_new = a * cache["h"] + b
+    h = h_new.astype(x.dtype) * gate
+    out = jnp.einsum("br,rd->bd", h, p["proj_out"])[:, None]
+    out = rules.cons(out, "batch,seq,embed")
+    return out, {"h": h_new, "conv": hist[:, 1:]}

@@ -1,0 +1,472 @@
+"""Layer library: norms, rotary, GQA attention (full/windowed/cross/decode),
+chunked flash attention (pure-jnp online softmax), gated MLP and dropping MoE.
+
+All layers are functional: ``<layer>_init(mk, cfg, ...) -> params`` and
+``<layer>_apply(cfg, params, ...) -> out``. ``mk`` is a ``Maker`` that either
+initializes arrays or records logical sharding axes (same code path for both,
+so the axes tree always matches the params tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import NO_RULES, Rules
+
+# ---------------------------------------------------------------------------
+# Param maker
+# ---------------------------------------------------------------------------
+
+
+class Maker:
+    """mode='init' -> arrays; mode='axes' -> logical-axes strings (leaves)."""
+
+    def __init__(self, mode: str, key=None, dtype=jnp.bfloat16):
+        assert mode in ("init", "axes")
+        self.mode = mode
+        self.key = key
+        self.dtype = dtype
+        self._n = 0
+
+    def __call__(self, shape, axes: str = "", scale: Optional[float] = None,
+                 zeros: bool = False, ones: bool = False, dtype=None):
+        if self.mode == "axes":
+            return axes
+        dt = dtype or self.dtype
+        if ones:
+            return jnp.ones(shape, dt)
+        if zeros:
+            return jnp.zeros(shape, dt)
+        self._n += 1
+        k = jax.random.fold_in(self.key, self._n)
+        sc = scale if scale is not None else (shape[0] ** -0.5 if shape else 1.0)
+        return (jax.random.normal(k, shape, jnp.float32) * sc).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(mk: Maker, d: int, kind: str) -> Dict[str, Any]:
+    p = {"scale": mk((d,), "", ones=True, dtype=jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = mk((d,), "", zeros=True, dtype=jnp.float32)
+    return p
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    ang = ang[..., None, :]                                  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure jnp; online softmax; bounded memory).
+# The PDMA/VMEM-residency analogue at HLO level: per-(q,kv)-block partials
+# only, never the full (S, S) score matrix.
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, kv_valid: Optional[int] = None,
+                    q_chunk: int = 256, kv_chunk: int = 512,
+                    chunked: bool = True):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D). GQA via head grouping.
+
+    window > 0 -> sliding-window causal attention.
+    kv_valid   -> only first `kv_valid` kv positions are real (static or traced).
+    q_offset   -> absolute position of q[0] (scalar or (B,) traced).
+    chunked=False -> one-shot softmax (no scan): the right path under
+    sequence/context parallelism, where the per-device q block is already
+    small — the chunk scan would otherwise materialize its (qc, kc)
+    intermediates at every fusion boundary x trip count (the 36 TiB/step
+    pathology of EXPERIMENTS.md §Perf A4).
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = D ** -0.5
+    if not chunked:
+        qg = q.reshape(B, Sq, KV, G, D)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = jnp.arange(Sk)
+        kv_lim = Sk if kv_valid is None else kv_valid
+        mask = kpos[None, :] < kv_lim
+        if causal:
+            qpos = jnp.arange(Sq) + (
+                q_offset if jnp.ndim(q_offset) == 0 else q_offset[:, None])
+            cm = qpos[..., :, None] >= kpos[None, :]
+            if window:
+                cm &= qpos[..., :, None] - kpos[None, :] < window
+            mask = mask & cm
+        if mask.ndim == 2:
+            mask = mask[None]
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, Sq, H, D).astype(q.dtype)
+    qc, kc = min(q_chunk, Sq), min(kv_chunk, Sk)
+    # pad to chunk multiples
+    pq = (-Sq) % qc
+    pk = (-Sk) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    nq, nk = (Sq + pq) // qc, (Sk + pk) // kc
+    qp = qp.reshape(B, nq, qc, KV, G, D)
+    kp = kp.reshape(B, nk, kc, KV, D)
+    vp = vp.reshape(B, nk, kc, KV, D)
+    kv_lim = Sk if kv_valid is None else kv_valid
+
+    def q_block(carry, qi):
+        qb = qp[:, qi]  # (B, qc, KV, G, D)
+        qpos = qi * qc + jnp.arange(qc) + (
+            q_offset if jnp.ndim(q_offset) == 0 else q_offset[:, None])
+
+        def kv_block(acc, ki):
+            m, l, o = acc
+            kb, vb = kp[:, ki], vp[:, ki]
+            kpos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = (kpos[None, :] < kv_lim)
+            if causal:
+                cm = qpos[..., :, None] >= kpos[None, :]
+                if window:
+                    cm &= qpos[..., :, None] - kpos[None, :] < window
+                mask = mask & cm
+            # mask: (qc, kc) or (B, qc, kc) -> broadcast over (b, k, g, q, c)
+            if mask.ndim == 2:
+                mask = mask[None]
+            s = jnp.where(mask[:, None, None], s, -1e30)
+            m2 = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(-1)
+            o2 = o * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m2, l2, o2), None
+
+        init = (jnp.full((B, KV, G, qc), -jnp.inf, jnp.float32),
+                jnp.zeros((B, KV, G, qc), jnp.float32),
+                jnp.zeros((B, KV, G, qc, D), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        return carry, o.transpose(0, 3, 1, 2, 4)  # (B, qc, KV, G, D)
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attend_decode(q, ck, cv, pos, *, window: int = 0,
+                  kv_chunk: int = 0):
+    """Single-token attention vs a cache. q: (B, 1, H, D); ck/cv: (B, S, KV, D);
+    pos: (B,) absolute position of the NEW token (cache holds <= pos).
+
+    Chunked over the cache length with an online softmax so the (B, KV, G,
+    S) score tensor is never materialized — for a 32k cache this is the
+    difference between streaming the cache once and ~6 fp32 passes over a
+    17 GB intermediate (EXPERIMENTS.md §Perf C3)."""
+    B, _, H, D = q.shape
+    _, S, KV, _ = ck.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    if window:
+        nvalid = jnp.minimum(pos + 1, S)  # ring buffer: slot count
+    else:
+        nvalid = pos + 1
+    c = S if kv_chunk <= 0 else min(kv_chunk, S)
+    if S % c:
+        c = S  # ragged cache lengths: single chunk (small-cache tests)
+    nc = S // c
+    ckc = ck.reshape(B, nc, c, KV, D)
+    cvc = cv.reshape(B, nc, c, KV, D)
+
+    def chunk(acc, i):
+        m, l, o = acc
+        kb = ckc[:, i]
+        vb = cvc[:, i]
+        s = jnp.einsum("bkgd,bckd->bkgc", qg, kb,
+                       preferred_element_type=jnp.float32) * (D ** -0.5)
+        slots = i * c + jnp.arange(c)
+        mask = slots[None, :] < nvalid[:, None]
+        m2 = jnp.maximum(m, jnp.where(mask[:, None, None, :], s,
+                                      -jnp.inf).max(-1))
+        m2 = jnp.maximum(m2, -1e30)       # fully-masked chunk guard
+        p = jnp.where(mask[:, None, None, :],
+                      jnp.exp(s - m2[..., None]), 0.0)
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + p.sum(-1)
+        o2 = o * corr[..., None] + jnp.einsum(
+            "bkgc,bckd->bkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m2, l2, o2), None
+
+    init = (jnp.full((B, KV, G), -1e30, jnp.float32),
+            jnp.zeros((B, KV, G), jnp.float32),
+            jnp.zeros((B, KV, G, D), jnp.float32))
+    if nc == 1:
+        (m, l, o), _ = chunk(init, 0)
+    else:
+        (m, l, o), _ = jax.lax.scan(chunk, init, jnp.arange(nc))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (opt-in int8 storage; the chip's INT8 theme applied
+# to the decode cache — halves cache footprint and read traffic)
+# ---------------------------------------------------------------------------
+
+
+def kv_quant(cfg, x):
+    """bf16 k/v -> cache storage dtype (symmetric, static absmax bound)."""
+    if cfg.kv_cache_dtype != "int8":
+        return x.astype(jnp.dtype(cfg.kv_cache_dtype))
+    q = jnp.round(x.astype(jnp.float32) * (127.0 / cfg.kv_scale))
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def kv_dequant(cfg, x, dtype):
+    if x.dtype != jnp.int8:
+        return x.astype(dtype)
+    return (x.astype(jnp.float32) * (cfg.kv_scale / 127.0)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (GQA, optional bias / window / cross)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(mk: Maker, cfg) -> Dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": mk((d, h, hd), "wembed,wheads", scale=d ** -0.5),
+        "wk": mk((d, kv, hd), "wembed,wkv_heads", scale=d ** -0.5),
+        "wv": mk((d, kv, hd), "wembed,wkv_heads", scale=d ** -0.5),
+        "wo": mk((h, hd, d), "wheads,,wembed", scale=(h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk((h, hd), "wheads", zeros=True)
+        p["bk"] = mk((kv, hd), "wkv_heads", zeros=True)
+        p["bv"] = mk((kv, hd), "wkv_heads", zeros=True)
+    return p
+
+
+def _qkv(cfg, p, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def attention_apply(cfg, p, x, *, rules: Rules = NO_RULES, positions=None,
+                    window: int = 0, cross_kv=None, causal: bool = True):
+    """Full-sequence attention (train/prefill). Returns (out, kv) so callers
+    can build caches. cross_kv=(k,v) for encoder-decoder cross attention."""
+    B, S, _ = x.shape
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        k, v = cross_kv
+        q = rules.cons(q, "batch,seq,heads")
+        out = flash_attention(q, k, v, causal=False)
+        kv = None
+    else:
+        q, k, v = _qkv(cfg, p, x)
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        q = rules.cons(q, "batch,seq,heads")
+        k = rules.cons(k, "batch,seq,kv_heads")
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              chunked=cfg.flash_chunking)
+        kv = (k, v)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return rules.cons(out, "batch,seq,embed"), kv
+
+
+def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
+                     window: int = 0, cross: bool = False):
+    """One-token decode. x: (B, 1, d); cache: {"k","v"}: (B, S, KV, D);
+    pos: (B,). Returns (out, new_cache)."""
+    if cross:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        ck = kv_dequant(cfg, cache["k"], x.dtype)
+        cv = kv_dequant(cfg, cache["v"], x.dtype)
+        n = jnp.full((x.shape[0],), ck.shape[1], jnp.int32)
+        out = attend_decode(q, ck, cv, n - 1)
+        new_cache = cache
+    else:
+        q, k, v = _qkv(cfg, p, x)
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+        S = cache["k"].shape[1]
+        slot = jnp.remainder(pos, S) if window else jnp.minimum(pos, S - 1)
+        # one-hot masked write instead of a per-batch dynamic-update-slice:
+        # elementwise over the cache, so it partitions cleanly when the
+        # cache seq axis is context-parallel sharded (a vmapped DUS at a
+        # traced index forces SPMD to re-materialize the whole cache —
+        # EXPERIMENTS.md §Perf C3).
+        hit = (jnp.arange(S)[None, :] == slot[:, None])[..., None, None]
+        ck = jnp.where(hit, kv_quant(cfg, k), cache["k"])
+        cv = jnp.where(hit, kv_quant(cfg, v), cache["v"])
+        ck = rules.cons(ck, "batch,seq,kv_heads")
+        cv = rules.cons(cv, "batch,seq,kv_heads")
+        out = attend_decode(q, kv_dequant(cfg, ck, q.dtype),
+                            kv_dequant(cfg, cv, q.dtype), pos,
+                            window=window, kv_chunk=cfg.decode_kv_chunk)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    return rules.cons(out, "batch,seq,embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(mk: Maker, cfg, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    p = {"wi": mk((d, f), "wembed,wff", scale=d ** -0.5),
+         "wo": mk((f, d), "wff,wembed", scale=f ** -0.5)}
+    if cfg.gated_ffn:
+        p["wg"] = mk((d, f), "wembed,wff", scale=d ** -0.5)
+    return p
+
+
+def _act(cfg, h):
+    return jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)
+
+
+def mlp_apply(cfg, p, x, *, rules: Rules = NO_RULES):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.gated_ffn:
+        h = _act(cfg, jnp.einsum("bsd,df->bsf", x, p["wg"])) * h
+    else:
+        h = _act(cfg, h)
+    h = rules.cons(h, "batch,seq,ffn")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return rules.cons(out, "batch,seq,embed")
+
+
+# ---------------------------------------------------------------------------
+# Dropping MoE (capacity factor; cumsum position assignment; EP over experts)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(mk: Maker, cfg) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    p = {
+        "router": mk((d, e), "wembed,wexperts", scale=d ** -0.5, dtype=jnp.float32),
+        "wi": mk((e, d, f), "wexperts,wembed,wff", scale=d ** -0.5),
+        "wg": mk((e, d, f), "wexperts,wembed,wff", scale=d ** -0.5),
+        "wo": mk((e, f, d), "wexperts,wff,wembed", scale=f ** -0.5),
+    }
+    if cfg.moe.shared_expert:
+        p["shared"] = mlp_init(mk, cfg)
+    return p
+
+
+def moe_apply(cfg, p, x, *, rules: Rules = NO_RULES):
+    """Token-dropping MoE with GShard-style grouped dispatch.
+
+    Tokens are split into `dispatch_groups` groups; capacity is enforced
+    per group and the group dim carries the batch sharding, so the
+    routing scatter/gather stay local to their data shard while the
+    expert dim is tensor-parallel. Without grouping, SPMD replicates the
+    global-capacity buffer and all-reduces it every layer, and every data
+    rank runs the full expert GEMM (EXPERIMENTS.md §Perf B3/B5/B6).
+    Returns (out, aux_losses)."""
+    B, S, d = x.shape
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    G = m.dispatch_groups if T % max(m.dispatch_groups, 1) == 0 else 1
+    Tg = T // G
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_w, gate_i = jax.lax.top_k(probs, K)                              # (T, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    C = int(max(4, -(-Tg * m.capacity_factor * K) // E))   # per group
+    # priority order within each group: slot-major, matching Switch.
+    eidx = gate_i.reshape(G, Tg, K).transpose(0, 2, 1).reshape(G, K * Tg)
+    oh = jax.nn.one_hot(eidx, E, dtype=jnp.int32)          # (G, K*Tg, E)
+    pos = jnp.cumsum(oh, 1) - 1
+    pos = jnp.take_along_axis(pos, eidx[..., None], 2)[..., 0]
+    keep = pos < C
+    flat = jnp.where(keep, eidx * C + pos, E * C)          # (G, K*Tg)
+
+    xg = xt.reshape(G, Tg, d)
+    xrep = (jnp.broadcast_to(xg[:, None], (G, K, Tg, d))
+            .reshape(G, K * Tg, d))
+    xrep = rules.cons(xrep, "batch,,embed")
+
+    def scatter(fl, xr):
+        return jnp.zeros((E * C + 1, d), x.dtype).at[fl].add(xr)
+
+    buf = jax.vmap(scatter)(flat, xrep)                    # (G, E*C+1, d)
+    buf = rules.cons(buf[:, : E * C].reshape(G, E, C, d), "batch,experts")
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi"])
+    g = jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+    h = rules.cons(jax.nn.silu(g) * h, "batch,experts,,ffn")
+    eo = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    eo = rules.cons(eo, "batch,experts")
+
+    eo_flat = jnp.concatenate(
+        [eo.reshape(G, E * C, d), jnp.zeros((G, 1, d), eo.dtype)], 1)
+    got = jnp.take_along_axis(eo_flat, flat[..., None], 1)  # (G, K*Tg, d)
+    got = rules.cons(got, "batch,,embed").reshape(G, K, Tg, d)
+    w = (gate_w.reshape(G, Tg, K).transpose(0, 2, 1)
+         * keep.reshape(G, K, Tg)).astype(x.dtype)
+    out = jnp.einsum("gkt,gktd->gtd", w, got).reshape(B, S, d)
+    if m.shared_expert:
+        out = out + mlp_apply(cfg, p["shared"], x, rules=rules)
+
+    # aux losses: load-balance (Switch) + router z-loss (global)
+    me = probs.mean(0)                                   # (E,)
+    ce = jnp.zeros((E,)).at[gate_i.reshape(-1)].add(1.0) / (T * K)
+    lb = E * jnp.sum(me * ce)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2)
+    return rules.cons(out, "batch,seq,embed"), {"lb_loss": lb, "z_loss": z}

@@ -1,0 +1,304 @@
+"""Composable decoder (+ optional encoder) built from pattern blocks.
+
+A model is ``embedding -> scan over super-blocks -> tail blocks -> norm ->
+head``. A *super-block* is one period of the arch's block pattern (e.g.
+RecurrentGemma: ``(rglru, rglru, local_attn)``); homogeneous params of each
+pattern position are stacked and scanned (small HLO, production-style).
+Layers that don't fit a whole period form an explicitly-applied tail.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import griffin, ssm
+from repro.models.layers import (Maker, attention_apply, attention_decode,
+                                 attention_init, mlp_apply, mlp_init,
+                                 moe_apply, moe_init, norm_apply, norm_init)
+from repro.parallel.sharding import NO_RULES, Rules
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# Block pattern
+# ---------------------------------------------------------------------------
+
+
+def pattern_for(cfg) -> Tuple[str, ...]:
+    if cfg.is_encdec:
+        return ("dec",)
+    if cfg.family == "ssm":
+        return ("ssm",)
+    if cfg.family == "hybrid":
+        return cfg.hybrid.pattern
+    if cfg.moe is not None and cfg.moe.num_experts > 0:
+        period = cfg.moe.moe_every
+        return tuple(["attn_mlp"] * (period - 1) + ["attn_moe"])
+    return ("attn_mlp",)
+
+
+def layer_plan(cfg) -> Tuple[int, Tuple[str, ...]]:
+    """(n_super, tail_kinds)."""
+    pat = pattern_for(cfg)
+    p = len(pat)
+    return cfg.num_layers // p, pat[: cfg.num_layers % p]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(mk: Maker, cfg, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": norm_init(mk, d, cfg.norm)}
+    if kind in ("attn_mlp", "attn_moe", "local_attn", "enc", "dec"):
+        p["attn"] = attention_init(mk, cfg)
+    elif kind == "ssm":
+        p["mixer"] = ssm.ssm_init(mk, cfg)
+        return p  # pure mamba block: no FFN sublayer
+    elif kind == "rglru":
+        p["mixer"] = griffin.rglru_init(mk, cfg)
+    else:
+        raise ValueError(kind)
+    if kind == "dec":
+        p["lnx"] = norm_init(mk, d, cfg.norm)
+        p["cross"] = attention_init(mk, cfg)
+    p["ln2"] = norm_init(mk, d, cfg.norm)
+    if kind == "attn_moe":
+        p["moe"] = moe_init(mk, cfg)
+    else:
+        p["mlp"] = mlp_init(mk, cfg)
+    return p
+
+
+def _grow(cfg, kv, max_len):
+    """Pad a full-attention prefill kv (B, S, KV, D) out to max_len slots
+    (stored in the cache dtype — int8 when kv_cache_dtype says so)."""
+    from repro.models.layers import kv_quant
+    k, v = kv_quant(cfg, kv[0]), kv_quant(cfg, kv[1])
+    pad = max(0, (max_len or 0) - k.shape[1])
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": k, "v": v}
+
+
+def block_apply(cfg, kind: str, p, x, *, rules: Rules = NO_RULES,
+                positions=None, enc_out=None, want_cache: bool = False,
+                max_len=None):
+    """Full-sequence block. Returns (x, cache_entry, aux)."""
+    aux = {}
+    cache = None
+    h = norm_apply(p["ln1"], x, cfg.norm)
+    if kind in ("attn_mlp", "attn_moe", "dec"):
+        a, kv = attention_apply(cfg, p["attn"], h, rules=rules,
+                                positions=positions)
+        if want_cache:
+            cache = _grow(cfg, kv, max_len)
+    elif kind == "local_attn":
+        w = cfg.hybrid.window
+        a, kv = attention_apply(cfg, p["attn"], h, rules=rules,
+                                positions=positions, window=w)
+        if want_cache:
+            cache = _window_cache(cfg, kv, w)
+    elif kind == "enc":
+        a, _ = attention_apply(cfg, p["attn"], h, rules=rules,
+                               positions=positions, causal=False)
+    elif kind == "ssm":
+        if want_cache:
+            a, cache = ssm.ssm_apply(cfg, p["mixer"], h, rules=rules,
+                                     return_state=True)
+        else:
+            a = ssm.ssm_apply(cfg, p["mixer"], h, rules=rules)
+        return x + a, cache, aux
+    elif kind == "rglru":
+        if want_cache:
+            a, cache = griffin.rglru_apply(cfg, p["mixer"], h, rules=rules,
+                                           return_state=True)
+        else:
+            a = griffin.rglru_apply(cfg, p["mixer"], h, rules=rules)
+        x = x + a
+        h2 = norm_apply(p["ln2"], x, cfg.norm)
+        x = x + mlp_apply(cfg, p["mlp"], h2, rules=rules)
+        return x, cache, aux
+    else:
+        raise ValueError(kind)
+    x = x + a
+    if kind == "dec":
+        hx = norm_apply(p["lnx"], x, cfg.norm)
+        ck = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross"]["wk"])
+        cv = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross"]["wv"])
+        if cfg.qkv_bias:
+            ck, cv = ck + p["cross"]["bk"], cv + p["cross"]["bv"]
+        a, _ = attention_apply(cfg, p["cross"], hx, rules=rules,
+                               cross_kv=(ck, cv))
+        x = x + a
+        if want_cache:
+            from repro.models.layers import kv_quant
+            cache = {**cache, "xk": kv_quant(cfg, ck), "xv": kv_quant(cfg, cv)}
+    h2 = norm_apply(p["ln2"], x, cfg.norm)
+    if kind == "attn_moe":
+        f, aux = moe_apply(cfg, p["moe"], h2, rules=rules)
+    else:
+        f = mlp_apply(cfg, p["mlp"], h2, rules=rules)
+    return x + f, cache, aux
+
+
+def _window_cache(cfg, kv, w):
+    """Ring-buffer (slot = pos % w) cache from a full prefill kv."""
+    from repro.models.layers import kv_quant
+    k, v = kv_quant(cfg, kv[0]), kv_quant(cfg, kv[1])
+    S = k.shape[1]
+    if S <= w:
+        pad = w - S
+        return {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+    pos = jnp.arange(S - w, S)
+    slots = pos % w
+    ck = jnp.zeros((k.shape[0], w) + k.shape[2:], k.dtype).at[:, slots].set(
+        k[:, pos])
+    cv = jnp.zeros((v.shape[0], w) + v.shape[2:], v.dtype).at[:, slots].set(
+        v[:, pos])
+    return {"k": ck, "v": cv}
+
+
+def block_decode(cfg, kind: str, p, x, cache, pos, *,
+                 rules: Rules = NO_RULES):
+    """One-token block step. Returns (x, new_cache)."""
+    h = norm_apply(p["ln1"], x, cfg.norm)
+    if kind in ("attn_mlp", "attn_moe", "dec"):
+        a, cache_a = attention_decode(cfg, p["attn"], h,
+                                      {"k": cache["k"], "v": cache["v"]},
+                                      pos, rules=rules)
+    elif kind == "local_attn":
+        a, cache_a = attention_decode(cfg, p["attn"], h,
+                                      {"k": cache["k"], "v": cache["v"]},
+                                      pos, rules=rules,
+                                      window=cfg.hybrid.window)
+    elif kind == "ssm":
+        a, new_cache = ssm.ssm_decode(cfg, p["mixer"], h, cache, rules=rules)
+        return x + a, new_cache
+    elif kind == "rglru":
+        a, new_cache = griffin.rglru_decode(cfg, p["mixer"], h, cache,
+                                            rules=rules)
+        x = x + a
+        h2 = norm_apply(p["ln2"], x, cfg.norm)
+        return x + mlp_apply(cfg, p["mlp"], h2, rules=rules), new_cache
+    else:
+        raise ValueError(kind)
+    x = x + a
+    new_cache = dict(cache_a)
+    if kind == "dec":
+        hx = norm_apply(p["lnx"], x, cfg.norm)
+        a, _ = attention_decode(cfg, p["cross"], hx,
+                                {"k": cache["xk"], "v": cache["xv"]},
+                                pos, rules=rules, cross=True)
+        x = x + a
+        new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+    h2 = norm_apply(p["ln2"], x, cfg.norm)
+    if kind == "attn_moe":
+        f, _ = moe_apply(cfg, p["moe"], h2, rules=rules)
+    else:
+        f = mlp_apply(cfg, p["mlp"], h2, rules=rules)
+    return x + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over super-blocks + tail)
+# ---------------------------------------------------------------------------
+
+
+def stack_init(mk: Maker, cfg, kinds: Tuple[str, ...], n_super: int,
+               tail: Tuple[str, ...], key=None) -> Dict[str, Any]:
+    """Stacked per-pattern-position params + tail params."""
+    if mk.mode == "axes":
+        one = {str(j): block_init(mk, cfg, k) for j, k in enumerate(kinds)}
+        scan = jax.tree.map(lambda a: ("layers," + a) if a else "layers", one)
+        return {"scan": scan,
+                "tail": [block_init(mk, cfg, k) for k in tail]}
+    keys = jax.random.split(key, n_super)
+
+    def init_one(k):
+        mkk = Maker("init", k, mk.dtype)
+        return {str(j): block_init(mkk, cfg, kd) for j, kd in enumerate(kinds)}
+
+    scan = jax.vmap(init_one)(keys) if n_super > 0 else {}
+    tailp = []
+    for t, kd in enumerate(tail):
+        mkk = Maker("init", jax.random.fold_in(key, 10_000 + t), mk.dtype)
+        tailp.append(block_init(mkk, cfg, kd))
+    return {"scan": scan, "tail": tailp}
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
+                positions=None, enc_out=None, want_cache=False, max_len=None):
+    """Returns (x, caches, aux_sum). caches: {"scan": {j: stacked}, "tail": [..]}"""
+
+    def body(carry, pslice):
+        h, aux_acc = carry
+        caches = {}
+        for j, kd in enumerate(kinds):
+            h, c, aux = block_apply(cfg, kd, pslice[str(j)], h, rules=rules,
+                                    positions=positions, enc_out=enc_out,
+                                    want_cache=want_cache, max_len=max_len)
+            caches[str(j)] = c if c is not None else 0
+            for k, v in aux.items():
+                aux_acc[k] = aux_acc.get(k, 0.0) + v
+        return (h, aux_acc), caches
+
+    aux0 = {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+    n_super = jax.tree.leaves(params["scan"])[0].shape[0] if params["scan"] else 0
+    if n_super:
+        (x, aux0), scan_caches = jax.lax.scan(_remat(cfg, body), (x, aux0),
+                                              params["scan"])
+    else:
+        scan_caches = {}
+    tail_caches = []
+    for tp, kd in zip(params["tail"], tail):
+        x, c, aux = block_apply(cfg, kd, tp, x, rules=rules,
+                                positions=positions, enc_out=enc_out,
+                                want_cache=want_cache, max_len=max_len)
+        tail_caches.append(c if c is not None else 0)
+        for k, v in aux.items():
+            aux0[k] = aux0.get(k, 0.0) + v
+    return x, {"scan": scan_caches, "tail": tail_caches}, aux0
+
+
+def stack_decode(cfg, params, x, caches, pos, kinds, tail, *, rules=NO_RULES):
+    def body(h, sl):
+        pslice, cslice = sl
+        new_c = {}
+        for j, kd in enumerate(kinds):
+            h, nc = block_decode(cfg, kd, pslice[str(j)], h, cslice[str(j)],
+                                 pos, rules=rules)
+            new_c[str(j)] = nc
+        return h, new_c
+
+    n_super = jax.tree.leaves(params["scan"])[0].shape[0] if params["scan"] else 0
+    if n_super:
+        x, new_scan = jax.lax.scan(body, x, (params["scan"], caches["scan"]))
+    else:
+        new_scan = {}
+    new_tail = []
+    for tp, kd, tc in zip(params["tail"], tail, caches["tail"]):
+        x, nc = block_decode(cfg, kd, tp, x, tc, pos, rules=rules)
+        new_tail.append(nc)
+    return x, {"scan": new_scan, "tail": new_tail}

@@ -1,0 +1,84 @@
+"""AdamW with configurable moment dtype, global-norm clipping and schedules.
+
+Built from scratch (no optax in this environment). Moments can be held in
+bf16 for very large models (llama4-maverick) — see DESIGN.md memory notes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init(cfg: AdamWConfig, params) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jnp.zeros(p.shape, mdt)
+    return {"m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, grads, opt_state, params
+          ) -> Tuple[Any, Dict[str, Any], Dict[str, Any]]:
+    """One AdamW update. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    lr = schedule(cfg, step)
+    mdt = jnp.dtype(cfg.moment_dtype)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m2 = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
+        mh, vh = m2 / b1c, v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m2.astype(mdt), v2.astype(mdt))
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    treedef = jax.tree.structure(params)
+    leaves = jax.tree.leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in leaves])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in leaves])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in leaves])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

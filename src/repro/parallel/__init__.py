@@ -1,0 +1,1 @@
+from repro.parallel.sharding import Rules, NO_RULES  # noqa: F401

@@ -1,0 +1,112 @@
+"""Logical-axis sharding rules with divisibility fallbacks.
+
+Models annotate tensors with *logical* axis names (comma-separated strings,
+one name per dim, ``""``/missing = replicated). ``Rules`` maps them onto the
+physical mesh, silently falling back to replication when a dim is not
+divisible by the mapped mesh-axis size (e.g. llama4's 40 heads on a 16-way
+``model`` axis) — the standard production-framework behaviour.
+
+Weight FSDP axes use the dedicated name ``wembed``/``wff`` so that weight
+sharding (over ``pod``+``data``) never collides with activation sharding.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Phys = Union[str, Tuple[str, ...], None]
+
+# logical axis -> mesh axis (tuples compose axes)
+DEFAULT_TABLE: Dict[str, Phys] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",          # sequence parallelism (opt-in)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "state": None,
+    # weights (FSDP axis)
+    "wembed": ("pod", "data"),
+    "wff": "model",             # tensor-parallel weight dim
+    "wvocab": "model",
+    "wheads": "model",
+    "wkv_heads": "model",
+    "wexperts": "model",
+    "layers": None,
+}
+
+
+class Rules:
+    """Maps logical-axes strings to PartitionSpecs for a concrete mesh."""
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
+                 table: Optional[Dict[str, Phys]] = None):
+        self.mesh = mesh
+        self.table = dict(DEFAULT_TABLE)
+        if table:
+            self.table.update(table)
+
+    # -- helpers ----------------------------------------------------------
+    def _axis_size(self, phys: Phys) -> int:
+        if self.mesh is None or phys is None:
+            return 1
+        names = phys if isinstance(phys, tuple) else (phys,)
+        return int(np.prod([self.mesh.shape[a] for a in names]))
+
+    def spec(self, shape: Tuple[int, ...], axes: str) -> P:
+        """PartitionSpec for `shape` given comma-separated logical names."""
+        if self.mesh is None:
+            return P()
+        names = [a.strip() for a in axes.split(",")] if axes else []
+        names += [""] * (len(shape) - len(names))
+        out, used = [], set()
+        for dim, name in zip(shape, names):
+            phys = self.table.get(name)
+            if phys is None:
+                out.append(None)
+                continue
+            pt = tuple(a for a in (phys if isinstance(phys, tuple)
+                                   else (phys,))
+                       if a in self.mesh.shape)    # drop absent axes (pod)
+            if (not pt or any(a in used for a in pt)
+                    or dim % self._axis_size(pt) != 0):
+                out.append(None)            # divisibility / conflict fallback
+                continue
+            out.append(pt if len(pt) > 1 else pt[0])
+            used.update(pt)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, shape: Tuple[int, ...], axes: str) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def cons(self, x, axes: str):
+        """with_sharding_constraint when a mesh is active; identity otherwise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x.shape, axes)))
+
+    def tree_specs(self, shapes_tree, axes_tree):
+        """PartitionSpec pytree from a ShapeDtypeStruct tree + axes-str tree."""
+        return jax.tree.map(lambda s, a: self.spec(s.shape, a),
+                            shapes_tree, axes_tree)
+
+    def tree_shardings(self, shapes_tree, axes_tree):
+        assert self.mesh is not None
+        return jax.tree.map(
+            lambda s, a: NamedSharding(self.mesh, self.spec(s.shape, a)),
+            shapes_tree, axes_tree)
+
+
+NO_RULES = Rules(None)

@@ -1,0 +1,126 @@
+"""Serving engine: batched prefill/decode with slot-based continuous batching.
+
+The engine owns a fixed-slot batch (like vLLM's static batch mode): each slot
+holds one request's cache lane. `submit` prefills a prompt (B=1) and merges
+its cache into the slot; `step` advances every live slot one token; finished
+slots free automatically. Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.parallel.sharding import NO_RULES, Rules
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
+                 rules: Rules = NO_RULES, eos_id: int = -1,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.rules, self.eos_id = rules, eos_id
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+        self.cache = api.cache_init(cfg, slots, max_len)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
+        self.live: List[Optional[Request]] = [None] * slots
+        self._decode = jax.jit(
+            lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos,
+                                                 rules=rules))
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(cfg, p, b, rules=rules,
+                                     max_len=max_len))
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.live):
+            if r is None:
+                return i
+        return None
+
+    def submit(self, req: Request) -> bool:
+        """Prefill `req` and install it into a free slot. False if full."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        last_logits, cache1, pos1 = self._prefill(self.params,
+                                                  {"tokens": toks})
+        tok = self._sample(last_logits)[0]
+        req.generated.append(int(tok))
+        # merge the B=1 cache lane into slot `slot` of the batched cache
+        self.cache = jax.tree.map(
+            lambda big, one: jax.lax.dynamic_update_slice_in_dim(
+                big, one.astype(big.dtype), slot,
+                axis=_batch_axis(big, one)),
+            self.cache, cache1)
+        self.pos = self.pos.at[slot].set(int(pos1[0]))
+        self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
+        self.live[slot] = req
+        return True
+
+    def _sample(self, logits) -> jax.Array:
+        logits = logits[..., : self.cfg.vocab]
+        if self.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self.key, k = jax.random.split(self.key)
+        return jax.random.categorical(
+            k, logits / self.temperature, -1).astype(jnp.int32)
+
+    def step(self) -> None:
+        """Advance every live slot one token."""
+        if not any(r is not None for r in self.live):
+            return
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.cur_tok, self.pos)
+        toks = self._sample(logits)
+        self.pos = self.pos + jnp.asarray(
+            [1 if r is not None else 0 for r in self.live], jnp.int32)
+        self.cur_tok = toks[:, None]
+        for i, r in enumerate(self.live):
+            if r is None:
+                continue
+            t = int(toks[i])
+            r.generated.append(t)
+            if (t == self.eos_id or len(r.generated) >= r.max_new
+                    or int(self.pos[i]) >= self.max_len - 1):
+                r.done = True
+                self.live[i] = None
+
+    def run_to_completion(self, requests: List[Request],
+                          max_steps: int = 10_000) -> List[Request]:
+        pending = list(requests)
+        done: List[Request] = []
+        steps = 0
+        while (pending or any(r is not None for r in self.live)) \
+                and steps < max_steps:
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            self.step()
+            steps += 1
+            done = [r for r in requests if r.done]
+        return done
+
+
+def _batch_axis(big, one) -> int:
+    """Find the batch axis: first axis where shapes differ (slots vs 1)."""
+    for ax, (b, o) in enumerate(zip(big.shape, one.shape)):
+        if b != o:
+            return ax
+    return 0

@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run pins 512 placeholder
+# devices itself and runs out-of-process; never set that here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")

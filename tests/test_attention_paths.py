@@ -1,0 +1,70 @@
+"""Equivalence of the attention execution paths added in §Perf:
+chunked (online-softmax scan) vs one-shot (A4) vs oracle, and the
+single-pass vs chunked decode cache attention (C3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models.layers import attend_decode, flash_attention
+
+
+def _qkv(key, B, Sq, Sk, H, KV, D):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32),
+            jax.random.normal(ks[1], (B, Sk, KV, D), jnp.float32),
+            jax.random.normal(ks[2], (B, Sk, KV, D), jnp.float32))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(2, 64, 64, 4, 2, 16),
+                                   (1, 37, 37, 6, 3, 8),
+                                   (2, 128, 128, 4, 4, 32)])
+def test_oneshot_matches_chunked(shape, causal):
+    B, Sq, Sk, H, KV, D = shape
+    q, k, v = _qkv(jax.random.key(0), B, Sq, Sk, H, KV, D)
+    a = flash_attention(q, k, v, causal=causal, chunked=True,
+                        q_chunk=32, kv_chunk=32)
+    b = flash_attention(q, k, v, causal=causal, chunked=False)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(b, ref.mha_ref(q, k, v, causal=causal),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_oneshot_windowed():
+    q, k, v = _qkv(jax.random.key(1), 1, 96, 96, 4, 1, 16)
+    a = flash_attention(q, k, v, causal=True, window=32, chunked=True,
+                        q_chunk=32, kv_chunk=32)
+    b = flash_attention(q, k, v, causal=True, window=32, chunked=False)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_oneshot_kv_valid_and_offset():
+    q, k, v = _qkv(jax.random.key(2), 2, 8, 64, 4, 2, 16)
+    off = jnp.array([17, 40])
+    a = flash_attention(q, k, v, causal=True, q_offset=off, kv_valid=50,
+                        chunked=True, q_chunk=8, kv_chunk=16)
+    b = flash_attention(q, k, v, causal=True, q_offset=off, kv_valid=50,
+                        chunked=False)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(8, 96), st.integers(1, 4),
+       st.booleans())
+def test_decode_chunked_matches_single_pass(B, S, KV, windowed):
+    """attend_decode with any kv_chunk equals the single-pass result."""
+    D, G = 8, 2
+    key = jax.random.key(B * 1000 + S)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, 1, KV * G, D), jnp.float32)
+    ck = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    cv = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    pos = jax.random.randint(ks[3], (B,), 0, S)
+    kw = dict(window=S if windowed else 0)
+    single = attend_decode(q, ck, cv, pos, kv_chunk=0, **kw)
+    for c in (4, 16, S):
+        chunked = attend_decode(q, ck, cv, pos, kv_chunk=c, **kw)
+        np.testing.assert_allclose(chunked, single, rtol=2e-3, atol=2e-3)

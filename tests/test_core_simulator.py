@@ -1,0 +1,96 @@
+"""End-to-end simulator — Table I / Fig. 6(c) / Fig. 7 anchors."""
+import math
+
+import pytest
+
+from repro.core import simulator as sim
+from repro.core import workloads
+from repro.core.accel import VOLTRA
+
+
+def test_table1_headline_numbers():
+    t = sim.table1()
+    assert t["peak_tops"] == pytest.approx(0.8192)          # 512 MACs @800MHz
+    assert t["area_eff_tops_mm2"] == pytest.approx(1.25, abs=0.01)
+    assert t["peak_tops_per_w"] == pytest.approx(1.60, rel=0.05)
+    # measured band 171-981 mW; the calibrated model sits within ~12%
+    assert t["power_mw_min"] == pytest.approx(171, rel=0.15)
+    assert t["power_mw_max"] == pytest.approx(981, rel=0.15)
+
+
+def test_fig6c_latency_band():
+    gains = []
+    for wl in workloads.all_workloads().values():
+        r = sim.latency_report(wl)
+        gains.append(r["gain_serial"])
+        # sanity: both sides do the same MACs
+        assert r["voltra_compute_cycles"] > 0
+    # paper band 1.15-2.36x; shared+PDMA never loses
+    assert min(gains) >= 0.99
+    assert 1.8 <= max(gains) <= 2.6
+    geo = math.prod(gains) ** (1 / len(gains))
+    assert geo > 1.25
+
+
+def test_separated_has_higher_temporal_util_but_loses_on_dma():
+    """The paper's own observation: separated buffers avoid contention
+    (slightly fewer compute cycles) yet lose overall to DMA traffic."""
+    wl = workloads.bert_base()
+    v = sim.simulate_workload(wl, "voltra")
+    s = sim.simulate_workload(wl, "separated")
+    assert s.cycles_compute <= v.cycles_compute          # fewer stalls
+    assert s.cycles_dma > 1.5 * v.cycles_dma             # much more DMA
+    assert s.latency_serial > v.latency_serial
+
+
+def test_plain_shared_much_slower_than_voltra():
+    wl = workloads.vit_b()
+    v = sim.simulate_workload(wl, "voltra")
+    p = sim.simulate_workload(wl, "plain_shared")
+    assert p.cycles_compute > 2.0 * v.cycles_compute     # Fig 6(b) regime
+
+
+def test_fig7b_efficiency_falls_with_voltage():
+    effs = [sim.gemm_efficiency(96, 96, 96, vdd=v)["tops_per_w"]
+            for v in (0.6, 0.7, 0.8, 0.9, 1.0)]
+    assert all(a > b for a, b in zip(effs, effs[1:]))
+    tops = [sim.gemm_efficiency(96, 96, 96, vdd=v)["tops"]
+            for v in (0.6, 0.8, 1.0)]
+    assert all(a < b for a, b in zip(tops, tops[1:]))    # throughput rises
+
+
+def test_fig7d_efficiency_rises_with_size_onchip():
+    """Bigger on-chip GEMMs amortize retire/edge effects (the paper's
+    size trend, within the preloaded regime it measures)."""
+    effs = [sim.gemm_efficiency(n, n, n)["tops_per_w"]
+            for n in (32, 64, 96, 128)]
+    assert all(a <= b + 1e-9 for a, b in zip(effs, effs[1:]))
+
+
+def test_fig7d_k_dim_strongest():
+    """K growth (output-stationary reuse) helps more than M/N growth."""
+    base = sim.gemm_efficiency(96, 96, 96)["tops_per_w"]
+    k4 = sim.gemm_efficiency(96, 384, 96)["tops_per_w"]
+    m4 = sim.gemm_efficiency(384, 96, 96)["tops_per_w"]
+    assert k4 >= base
+    assert k4 >= m4
+
+
+def test_fig7c_sparsity_raises_efficiency():
+    e0 = sim.sparsity_efficiency(96, 96, 96, weight_sparsity=0.0)
+    e5 = sim.sparsity_efficiency(96, 96, 96, weight_sparsity=0.5)
+    e9 = sim.sparsity_efficiency(96, 96, 96, weight_sparsity=0.9)
+    assert e0 < e5 < e9
+    lo_toggle = sim.sparsity_efficiency(96, 96, 96, weight_sparsity=0.0,
+                                        toggle_rate=0.2)
+    assert lo_toggle > e0
+
+
+def test_energy_scales_quadratically_with_v():
+    st = sim.simulate_workload(workloads.Workload(
+        "g", (workloads.Op("g", M=96, K=96, N=96),)), "voltra")
+    e6 = sim.energy_pj(st, vdd=0.6)
+    e12 = sim.energy_pj(st, vdd=1.0)
+    # dynamic part scales ~(1/0.6)^2 = 2.78; static energy shrinks with
+    # runtime (higher f) and dram is unscaled, so the blend sits between
+    assert 1.4 < e12 / e6 < 2.9

@@ -1,0 +1,82 @@
+"""C1: 3D spatial-utilization model — properties + paper anchors."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import spatial, workloads
+from repro.core.accel import BASELINE_2D, VOLTRA
+from repro.core.workloads import Op
+
+dims = st.integers(min_value=1, max_value=4096)
+
+
+@given(dims, dims, dims)
+def test_util_in_unit_interval(M, K, N):
+    op = Op("x", M=M, K=K, N=N)
+    for mode in ("strict", "flexible"):
+        u = spatial.op_spatial_util_3d(op, mode=mode)
+        assert 0.0 < u <= 1.0
+    assert 0.0 < spatial.op_spatial_util_2d(op) <= 1.0
+
+
+@given(dims, dims, dims)
+def test_flexible_never_worse_than_strict(M, K, N):
+    op = Op("x", M=M, K=K, N=N)
+    assert (spatial.op_spatial_util_3d(op, mode="flexible")
+            >= spatial.op_spatial_util_3d(op, mode="strict") - 1e-12)
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64))
+def test_divisible_dims_are_perfect(m8, k8, n8):
+    op = Op("x", M=8 * m8, K=8 * k8, N=8 * n8)
+    assert spatial.op_spatial_util_3d(op) == pytest.approx(1.0)
+
+
+@given(dims, dims, dims)
+def test_cycles_cover_flops(M, K, N):
+    """Ideal cycles x peak MACs >= useful MACs, equality iff util == 1."""
+    op = Op("x", M=M, K=K, N=N)
+    cyc = spatial.spatial_cycles(op)
+    assert cyc * VOLTRA.macs >= op.macs
+    u = spatial.op_spatial_util_3d(op)
+    assert cyc * VOLTRA.macs * u == pytest.approx(op.macs, rel=1e-9)
+
+
+def test_gemv_ratio_is_exactly_2x():
+    """The paper's headline: a GEMV-dominated workload gains 2.0x over the
+    16x32 2D baseline (1/8 vs 1/16 M-edge efficiency)."""
+    op = Op("gemv", M=1, K=4096, N=4096)
+    u3 = spatial.op_spatial_util_3d(op)
+    u2 = spatial.op_spatial_util_2d(op)
+    assert u3 == pytest.approx(1 / 8)
+    assert u2 == pytest.approx(1 / 16)
+    assert u3 / u2 == pytest.approx(2.0)
+
+
+def test_3d_loses_on_ragged_k():
+    """3D is not uniformly better: K=27 (ResNet stem) wastes the K unroll
+    that the 2D baseline (temporal K) does not."""
+    op = Op("stem", M=12544, K=27, N=64)
+    assert spatial.op_spatial_util_3d(op) < spatial.op_spatial_util_2d(op)
+
+
+def test_paper_band_fig6a():
+    """All 8 workloads: 3D util high band; max gain over 2D == 2.0x."""
+    gains, utils = [], []
+    for wl in workloads.all_workloads().values():
+        r = spatial.spatial_report(wl)
+        utils.append(r["util_3d"])
+        gains.append(r["gain"])
+    assert min(utils) > 0.65          # paper floor 69.71%
+    assert max(utils) <= 1.0
+    assert max(gains) == pytest.approx(2.0, abs=0.01)   # "up to 2.0x"
+    geo = math.prod(gains) ** (1 / len(gains))
+    assert geo > 1.1                  # 3D wins on aggregate
+
+
+def test_workload_flops_sane():
+    wl = workloads.resnet50()
+    assert wl.flops == pytest.approx(7.7e9, rel=0.15)   # ~3.8 GMACs
+    wl = workloads.bert_base()
+    assert wl.flops == pytest.approx(9.7e10, rel=0.15)

@@ -1,0 +1,89 @@
+"""C2: MGDP temporal model — event sim vs closed form + paper anchors."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import temporal, workloads
+from repro.core.workloads import Op
+
+
+@pytest.mark.parametrize("k_beats", [2, 4, 8, 32, 128, 384])
+@pytest.mark.parametrize("strided", [False, True])
+def test_mgdp_beats_plain_in_sim(k_beats, strided):
+    s_m = temporal.simulate_tile(k_beats, mgdp=True, strided_input=strided)
+    s_p = temporal.simulate_tile(k_beats, mgdp=False, strided_input=strided)
+    assert s_m.util >= s_p.util - 0.02
+    assert s_m.compute_cycles == s_p.compute_cycles  # same work done
+
+
+@pytest.mark.parametrize("k_beats", [8, 32, 128, 384])
+def test_closed_form_tracks_sim_mgdp(k_beats):
+    sim = temporal.simulate_tile(k_beats, mgdp=True, n_tiles=16)
+    op = Op("x", M=8, K=k_beats * 8, N=8)
+    closed = temporal.op_temporal_util(op, mgdp=True)
+    assert abs(sim.util - closed) < 0.15
+
+
+@pytest.mark.parametrize("k_beats", [8, 32, 128, 384])
+def test_closed_form_tracks_sim_plain(k_beats):
+    sim = temporal.simulate_tile(k_beats, mgdp=False, n_tiles=16,
+                                 strided_input=False)
+    op = Op("x", M=8, K=k_beats * 8, N=8)
+    closed = temporal.op_temporal_util(op, mgdp=False, strided_input=False)
+    # plain is a structural model; agree in regime, not in decimals
+    assert abs(sim.util - closed) < 0.2
+    assert closed < 0.6 and sim.util < 0.6
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 4096))
+def test_util_bounds_and_order(M, K, N):
+    op = Op("x", M=M, K=K, N=N)
+    um = temporal.op_temporal_util(op, mgdp=True)
+    up = temporal.op_temporal_util(op, mgdp=False)
+    assert 0.0 < up < um <= 1.0
+
+
+@given(st.integers(2, 512))
+def test_util_monotone_in_k(k):
+    """Longer K sweeps amortize the retire path: util non-decreasing."""
+    u1 = temporal.op_temporal_util(Op("a", M=8, K=8 * k, N=8))
+    u2 = temporal.op_temporal_util(Op("b", M=8, K=8 * (k + 1), N=8))
+    assert u2 >= u1 - 1e-9
+
+
+def test_paper_band_fig6b():
+    """MGDP utilization band and gains vs the paper's 76.99-97.32% /
+    2.12-2.94x."""
+    utils, gains = [], []
+    for wl in workloads.all_workloads().values():
+        r = temporal.temporal_report(wl)
+        utils.append(r["util_mgdp"])
+        gains.append(r["gain"])
+    assert 0.74 <= min(utils) <= 0.82      # paper floor 0.7699
+    assert 0.95 <= max(utils) <= 0.99      # paper ceiling 0.9732
+    assert all(2.0 <= g <= 3.0 for g in gains)   # paper 2.12-2.94
+
+
+def test_simd_drain_binds_only_short_k():
+    """C4 anchor: the 8-lane quant SIMD costs ~nothing on ResNet50-like
+    K (>=576) but caps depthwise-like K=9 tiles — the 0.7% claim."""
+    long_k = temporal.op_temporal_util(Op("r", M=3136, K=576, N=64))
+    short_k = temporal.op_temporal_util(Op("d", M=3136, K=9, N=1))
+    assert long_k > 0.95
+    assert short_k <= 0.25 + 1e-6
+    # ResNet50 aggregate loses <2% to the drain limit
+    wl = workloads.resnet50()
+    r = temporal.workload_temporal_util(wl, mgdp=True)
+    no_drain = temporal.workload_temporal_util(
+        workloads.Workload("nodrain", tuple(
+            Op(o.name, M=o.M, K=max(o.K, 64), N=o.N, repeat=o.repeat,
+               kind=o.kind) for o in wl.ops)), mgdp=True)
+    assert (no_drain - r) / no_drain < 0.05
+
+
+@settings(max_examples=10)
+@given(st.integers(2, 64), st.booleans())
+def test_sim_conserves_work(k_beats, mgdp):
+    n_tiles = 8
+    s = temporal.simulate_tile(k_beats, mgdp=mgdp, n_tiles=n_tiles)
+    assert s.compute_cycles == k_beats * n_tiles
+    assert s.total_cycles >= s.compute_cycles

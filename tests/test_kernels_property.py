@@ -1,0 +1,59 @@
+"""Hypothesis property tests for the kernel layer: random shapes/blocks
+always match the oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.gemm_os import gemm_os
+
+dim = st.integers(min_value=1, max_value=96)
+blk = st.sampled_from([8, 16, 32, 64])
+
+
+@settings(max_examples=15, deadline=None)
+@given(dim, dim, dim, blk, blk, blk)
+def test_gemm_any_shape_any_block(M, K, N, bm, bn, bk):
+    x = jax.random.normal(jax.random.key(M * 7 + K), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.key(N * 13 + K), (K, N), jnp.float32)
+    got = gemm_os(x, w, block=(bm, bn, bk), interpret=True)
+    np.testing.assert_allclose(got, ref.gemm_ref(x, w),
+                               rtol=3e-3, atol=3e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 128), st.integers(1, 64),
+       st.floats(1e-4, 1.0))
+def test_quant_gemm_matches_exactly(M, K, N, scale):
+    x = jax.random.randint(jax.random.key(M + K), (M, K), -128, 128
+                           ).astype(jnp.int8)
+    w = jax.random.randint(jax.random.key(N + K), (K, N), -128, 128
+                           ).astype(jnp.int8)
+    got = ops.quant_matmul(x, w, float(scale), block=(32, 32, 32))
+    np.testing.assert_array_equal(
+        got, ref.gemm_ref(x, w, quant_scale=float(scale)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(4, 48), st.integers(1, 4),
+       st.integers(1, 2), st.sampled_from([8, 16, 32]))
+def test_mha_any_shape(B, S, KV, G, D):
+    H = KV * G
+    q = jax.random.normal(jax.random.key(B * S), (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(B + S), (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(B - S), (B, S, KV, D), jnp.float32)
+    got = ops.attention(q, k, v, bq=16, bk=16)
+    np.testing.assert_allclose(got, ref.mha_ref(q, k, v),
+                               rtol=3e-3, atol=3e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 12), st.sampled_from([8, 16]),
+       st.sampled_from([1, 3]), st.sampled_from([1, 2]))
+def test_conv_any_shape(H, W, C, R, stride):
+    x = jax.random.normal(jax.random.key(H * W), (1, H, W, C), jnp.float32)
+    w = jax.random.normal(jax.random.key(C), (R, R, C, 8), jnp.float32)
+    got = ops.conv2d(x, w, stride=stride)
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, w, stride=stride),
+                               rtol=3e-3, atol=3e-3)
