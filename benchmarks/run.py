@@ -9,7 +9,8 @@ import sys
 import time
 
 from benchmarks import (fig1c_memory, fig4c_mha, fig6_latency, fig6_spatial,
-                        fig6_temporal, fig7_efficiency, kernel_bench, table1)
+                        fig6_temporal, fig7_efficiency, kernel_bench,
+                        serve_bench, table1)
 from benchmarks.common import emit
 
 SUITES = {
@@ -21,6 +22,7 @@ SUITES = {
     "fig7": fig7_efficiency.run,
     "table1": table1.run,
     "kernels": kernel_bench.run,
+    "serve": serve_bench.run,
 }
 
 

@@ -1,7 +1,9 @@
-"""Serve a small LM with batched requests through the slot-based engine.
+"""Serve a small LM with batched requests through the paged KV-cache engine.
 
-Demonstrates: prefill -> slot merge -> batched decode -> continuous
-batching (more requests than slots), with throughput stats.
+Demonstrates: bucketed prefill -> paged cache install -> batched decode ->
+continuous batching (more requests than slots) with allocate-on-demand
+pages, plus throughput and KV-pool utilization stats. Recurrent archs
+(mamba2, recurrentgemma) transparently fall back to the dense-slot engine.
 
   PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
            [--slots 4] [--requests 8] [--max-new 16]
@@ -13,7 +15,7 @@ import jax
 
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import api
-from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.serving import PagedServingEngine, Request, ServingEngine
 
 
 def main() -> None:
@@ -23,6 +25,7 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -30,7 +33,9 @@ def main() -> None:
           f"{args.slots} slots, {args.requests} requests")
     params = api.init_params(cfg, jax.random.key(0))
     eng = ServingEngine(cfg, params, slots=args.slots, max_len=128,
+                        page_size=args.page_size,
                         temperature=args.temperature)
+    print(f"[serve] engine: {type(eng).__name__}")
 
     reqs = [Request(rid=i, prompt=[(7 * i + j) % cfg.vocab
                                    for j in range(5 + i % 7)],
@@ -41,7 +46,14 @@ def main() -> None:
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
     print(f"[serve] {len(done)}/{len(reqs)} done, {toks} tokens in "
-          f"{dt:.2f}s ({toks/dt:.1f} tok/s CPU)")
+          f"{dt:.2f}s ({toks/dt:.1f} tok/s CPU), "
+          f"{eng.prefill_traces} prefill traces")
+    if isinstance(eng, PagedServingEngine):
+        st = eng.pool_stats()
+        print(f"[serve] kv pool: page={st.page_size} peak "
+              f"{st.peak_pages}/{st.num_pages} pages "
+              f"({st.peak_pages * st.page_size} tokens reserved at peak vs "
+              f"{st.dense_equiv_tokens} dense-slot)")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt {r.prompt[:4]}... -> "
               f"{r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")

@@ -1,0 +1,70 @@
+"""JAX version-compat shims (feature-detected, no version-string parsing).
+
+Supported range: JAX 0.4.37 – 0.6.x. Policy (see ROADMAP.md "Open items"):
+every API that was renamed/added across that range is resolved HERE, once,
+by feature detection — call sites import from ``repro.compat`` and never
+touch ``hasattr`` themselves. Shims are detected at import time so a
+missing symbol fails loudly and early, not mid-kernel.
+
+Current shims:
+
+* ``tpu_compiler_params`` — ``pltpu.TPUCompilerParams`` (<= 0.4.x) was
+  renamed ``pltpu.CompilerParams`` (>= 0.5). Both take the same
+  ``dimension_semantics=...`` kwargs we use.
+* ``make_mesh`` — ``jax.make_mesh`` grew an ``axis_types=`` kwarg (and
+  ``jax.sharding.AxisType``) in 0.5. On older JAX every axis is already
+  implicitly Auto, so dropping the kwarg is semantics-preserving.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# --------------------------------------------------------------------------
+# Pallas TPU compiler params: CompilerParams (new) vs TPUCompilerParams (old)
+# --------------------------------------------------------------------------
+
+if hasattr(pltpu, "CompilerParams"):
+    _COMPILER_PARAMS_CLS = pltpu.CompilerParams
+else:
+    _COMPILER_PARAMS_CLS = pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(
+        *, dimension_semantics: Optional[Tuple[str, ...]] = None,
+        **kwargs: Any):
+    """Version-portable ``compiler_params=`` value for ``pl.pallas_call``."""
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = dimension_semantics
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+# --------------------------------------------------------------------------
+# Mesh construction: axis_types= only exists on JAX >= 0.5
+# --------------------------------------------------------------------------
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager installing `mesh` as the ambient mesh.
+
+    ``jax.set_mesh`` appeared in 0.5; on 0.4.x ``Mesh`` itself is the
+    context manager with the same enter/exit semantics.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              ) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with every axis explicitly Auto where the concept
+    exists (JAX >= 0.5) and implicitly Auto where it doesn't (0.4.x)."""
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

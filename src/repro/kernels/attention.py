@@ -18,19 +18,20 @@ dedicated transpose pass. The TPU analogue keeps the chain in VMEM:
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 _NEG = -1e30
 
 
-def _mha_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                n_kv: int, bq: int, bk: int, scale: float, causal: bool,
-                group: int, kv_valid: int):
+def _mha_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref,
+                acc_ref, *, n_kv: int, bq: int, bk: int, scale: float,
+                causal: bool, group: int):
     kv = pl.program_id(2)
 
     @pl.when(kv == 0)
@@ -45,7 +46,9 @@ def _mha_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
 
     kv_pos = kv * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = kv_pos < kv_valid
+    # per-sequence valid length arrives as data (page-aware kv_valid), so
+    # one compiled kernel serves every prompt length in a bucket
+    mask = kv_pos < valid_ref[0]
     if causal:
         # q rows are (group, rows) flattened; absolute position of row r
         # is (r % (bq//group)) + query block offset
@@ -73,22 +76,42 @@ def _mha_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                     ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "bq", "bk", "kv_valid", "interpret"))
 def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
-        bq: int = 128, bk: int = 128, kv_valid: Optional[int] = None,
+        bq: int = 128, bk: int = 128, kv_valid=None,
         interpret: bool = True) -> jax.Array:
     """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0.
 
     Returns (B, Sq, H, D). The (Sq, Sk) score matrix is never materialized
     outside VMEM tiles.
+
+    kv_valid: None (all Sk positions real), an int, or a (B,) int32 array —
+    only the first kv_valid[b] kv positions of sequence b attend. It is a
+    TRACED operand (streamed into the kernel per batch row), never a trace
+    constant, so one compiled kernel serves every valid-length in a padded
+    batch — the same bucket-stability contract the serving engine's
+    bucketed prefill relies on (serving's jnp path lives in
+    models/layers.flash_attention; this Pallas kernel is the TPU analogue
+    reached via kernels/ops.attention).
     """
+    B = q.shape[0]
+    Sk = k.shape[1]
+    if kv_valid is None:
+        kv_valid = Sk
+    kv_valid = jnp.broadcast_to(
+        jnp.asarray(kv_valid, jnp.int32), (B,))
+    return _mha(q, k, v, kv_valid, causal=causal, bq=bq, bk=bk,
+                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "bq", "bk", "interpret"))
+def _mha(q: jax.Array, k: jax.Array, v: jax.Array, kv_valid: jax.Array, *,
+         causal: bool, bq: int, bk: int, interpret: bool) -> jax.Array:
     B, Sq, H, D = q.shape
     _, Sk, KV, _ = k.shape
     assert H % KV == 0
     G = H // KV
     scale = D ** -0.5
-    kv_valid = Sk if kv_valid is None else kv_valid
 
     # fold (kv_head, group) into the batch/q-row axes so grouped heads
     # share each streamed K/V block. Row layout inside a q block is
@@ -112,15 +135,18 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     Skp = Sk + pk
     n_kv = Skp // bk
 
+    validf = jnp.repeat(kv_valid, KV)   # (B*KV,) — one row per b/kv program
+
     out = pl.pallas_call(
         functools.partial(
             _mha_kernel, n_kv=n_kv, bq=bq_eff, bk=bk, scale=scale,
-            causal=causal, group=G, kv_valid=kv_valid),
+            causal=causal, group=G),
         grid=(B * KV, nq, n_kv),
         in_specs=[
             pl.BlockSpec((1, bq_eff, D), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1,), lambda b, i, j: (b,)),
         ],
         out_specs=pl.BlockSpec((1, bq_eff, D), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B * KV, nq * G * bq0, D), q.dtype),
@@ -129,10 +155,10 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
             pltpu.VMEM((bq_eff,), jnp.float32),
             pltpu.VMEM((bq_eff, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(qf, kf, vf)
+    )(qf, kf, vf, validf)
 
     out = (out.reshape(B, KV, nq, G, bq0, D).transpose(0, 2, 4, 1, 3, 5)
            .reshape(B, Sqp, KV, G, D))

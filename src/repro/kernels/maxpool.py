@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _maxpool_kernel(x_ref, o_ref, *, R: int, S: int, stride: int, OW: int):
     oh = pl.program_id(1)
@@ -44,7 +46,7 @@ def maxpool2d(x: jax.Array, *, window: int = 2, stride: int = 2,
         in_specs=[pl.BlockSpec((1, H, W, C), lambda n, oh: (n, 0, 0, 0))],
         out_specs=pl.BlockSpec((1, 1, OW, C), lambda n, oh: (n, oh, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((N, OH, OW, C), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x)

@@ -4,24 +4,26 @@ A function (not a module-level constant) so importing this module never
 touches jax device state. Single pod: 16x16 = 256 chips ("data", "model").
 Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") — the "pod" axis
 composes with "data" for batch/FSDP by default (see parallel/sharding.py).
+
+Mesh construction goes through ``repro.compat.make_mesh`` so the
+``axis_types=Auto`` annotation is applied on JAX >= 0.5 and dropped on
+0.4.x (where every axis is implicitly Auto and the kwarg doesn't exist).
 """
 from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Tiny mesh over the actually-available devices (tests/examples)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))

@@ -1,7 +1,12 @@
 """Serving launcher: batched request serving for any assigned arch.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
-      [--slots 4] [--requests 8] [--max-new 12]
+      [--slots 4] [--requests 8] [--max-new 12] [--engine paged|dense] \
+      [--page-size 16] [--num-pages N]
+
+Attention-only stacks default to the paged KV-cache engine (continuous
+batching over a shared page pool, bucketed prefill); recurrent stacks fall
+back to the dense-slot engine automatically.
 """
 from __future__ import annotations
 
@@ -12,7 +17,8 @@ import jax
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.models import api
-from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.serving import (DenseServingEngine, PagedServingEngine,
+                                   Request, ServingEngine)
 
 
 def main() -> None:
@@ -24,14 +30,28 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--engine", choices=["auto", "paged", "dense"],
+                    default="auto")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="usable KV pages (default: slots*max_len/page)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     print(f"[launch.serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"{args.slots} slots")
     params = api.init_params(cfg, jax.random.key(0))
-    eng = ServingEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                        temperature=args.temperature)
+    common = dict(slots=args.slots, max_len=args.max_len,
+                  temperature=args.temperature)
+    if args.engine == "dense":
+        eng = DenseServingEngine(cfg, params, **common)
+    elif args.engine == "paged":
+        eng = PagedServingEngine(cfg, params, page_size=args.page_size,
+                                 num_pages=args.num_pages, **common)
+    else:
+        eng = ServingEngine(cfg, params, page_size=args.page_size,
+                            num_pages=args.num_pages, **common)
+    print(f"[launch.serve] engine: {type(eng).__name__}")
     reqs = [Request(rid=i,
                     prompt=[(11 * i + j) % cfg.vocab for j in range(4 + i % 5)],
                     max_new=args.max_new)
@@ -41,7 +61,12 @@ def main() -> None:
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
     print(f"[launch.serve] {len(done)}/{len(reqs)} requests, {toks} tokens, "
-          f"{toks/dt:.1f} tok/s")
+          f"{toks/dt:.1f} tok/s, {eng.prefill_traces} prefill traces")
+    if isinstance(eng, PagedServingEngine):
+        st = eng.pool_stats()
+        print(f"[launch.serve] kv pages: peak {st.peak_pages}/{st.num_pages} "
+              f"({st.peak_pages * st.page_size} tokens reserved at peak vs "
+              f"{st.dense_equiv_tokens} dense)")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,8 @@ import argparse
 
 import jax
 
+from repro import compat
+
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.data.synthetic import DataConfig, SyntheticDataset
 from repro.launch.mesh import make_host_mesh
@@ -40,7 +42,7 @@ def main() -> None:
     if args.model_parallel > 1:
         mesh = make_host_mesh(model=args.model_parallel)
         rules = Rules(mesh)
-        ctx = jax.set_mesh(mesh)
+        ctx = compat.set_mesh(mesh)
     else:
         rules, ctx = NO_RULES, None
 

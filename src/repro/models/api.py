@@ -172,28 +172,49 @@ def loss_fn(cfg, params, batch, *, rules: Rules = NO_RULES):
 # ---------------------------------------------------------------------------
 
 
-def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None):
+def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None,
+            length=None):
     """Run the full prompt; returns (last_logits, cache, next_pos). Full-attn
     kv caches are padded out to `max_len` slots for subsequent decoding.
     Logits are computed for the LAST position only (the (B, S, vocab) tensor
-    is never materialized — PDMA-style residency at the serving level)."""
+    is never materialized — PDMA-style residency at the serving level).
+
+    `length` (scalar or (B,) int32, may be traced) marks the number of REAL
+    tokens when `tokens` is right-padded to a bucket size: logits are taken
+    at position length-1 and next_pos = length. Causal masking already
+    keeps positions < length independent of the padding, so one trace
+    serves every prompt length in the bucket (the serving engine's
+    mixed-grained-prefetch analogue). Only valid for attention-only stacks:
+    recurrent blocks (ssm/rglru) and windowed ring buffers carry padding
+    into their state, so those callers must pass exact-length tokens."""
     x, caches, _ = forward_hidden(cfg, params, batch, rules=rules,
                                   want_cache=True, max_len=max_len)
     B, S = x.shape[0], x.shape[1]
-    logits = _logits(cfg, params, x[:, -1:])[:, 0]
-    pos = jnp.full((B,), S, jnp.int32)
+    if length is None:
+        logits = _logits(cfg, params, x[:, -1:])[:, 0]
+        pos = jnp.full((B,), S, jnp.int32)
+    else:
+        length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+        idx = jnp.clip(length - 1, 0, S - 1)[:, None, None]
+        xl = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (B, 1, x.shape[-1])), axis=1)
+        logits = _logits(cfg, params, xl)[:, 0]
+        pos = length
     return logits, caches, pos
 
 
 def decode_step(cfg, params, cache, tokens, pos, *,
-                rules: Rules = NO_RULES):
-    """tokens: (B, 1) int32; pos: (B,) next position. -> (logits, new_cache)."""
+                rules: Rules = NO_RULES, block_table=None):
+    """tokens: (B, 1) int32; pos: (B,) next position. -> (logits, new_cache).
+    block_table: (B, n_blocks) int32 switches full-attention cache entries
+    to the shared paged pool layout (see paged_cache_init)."""
     kinds = tfm.pattern_for(cfg)
     _, tail = tfm.layer_plan(cfg)
     x = _embed_tokens(cfg, params, tokens)
     x = rules.cons(x, "batch,seq,embed")
     x, new_cache = tfm.stack_decode(cfg, params["blocks"], x, cache, pos,
-                                    kinds, tail, rules=rules)
+                                    kinds, tail, rules=rules,
+                                    block_table=block_table)
     x = norm_apply(params["final_norm"], x, cfg.norm)
     logits = _logits(cfg, params, x)[:, 0]
     return rules.cons(logits, "batch,vocab"), new_cache
@@ -239,6 +260,39 @@ def cache_init(cfg, batch: int, seq_len: int):
     scan = {str(j): stacked(k) for j, k in enumerate(kinds)} if n_super else {}
     tailc = [_block_cache_init(cfg, k, batch, seq_len) for k in tail]
     return {"scan": scan, "tail": tailc}
+
+
+PAGEABLE_KINDS = ("attn_mlp", "attn_moe")
+
+
+def paged_cache_init(cfg, batch: int, num_pages: int, page_size: int):
+    """Cache tree for paged serving: full-attention k/v entries become a
+    shared page pool (num_pages, page_size, KV, D) instead of per-slot
+    dense lanes (batch, max_len, KV, D); every other cache kind keeps its
+    per-slot layout (recurrent state / ring buffers are O(1) per slot and
+    gain nothing from paging). The pool is indexed by the block tables of
+    repro.runtime.kv_cache.PageAllocator (page 0 = scratch); the SAME
+    logical->physical mapping serves every layer, each layer owning its own
+    pool — so one host-side table drives the whole stack."""
+    kinds = tfm.pattern_for(cfg)
+    n_super, tail = tfm.layer_plan(cfg)
+    unpageable = [k for k in kinds if k not in PAGEABLE_KINDS]
+    if unpageable:
+        raise ValueError(
+            f"paged cache needs an attention-only stack, got {unpageable}")
+    dt = jnp.dtype(cfg.kv_cache_dtype)
+    kv, hd = cfg.kv_heads, cfg.resolved_head_dim
+
+    def pool():
+        return {"k": jnp.zeros((num_pages, page_size, kv, hd), dt),
+                "v": jnp.zeros((num_pages, page_size, kv, hd), dt)}
+
+    def stacked():
+        return jax.tree.map(
+            lambda a: jnp.zeros((n_super,) + a.shape, a.dtype), pool())
+
+    scan = {str(j): stacked() for j in range(len(kinds))} if n_super else {}
+    return {"scan": scan, "tail": [pool() for _ in tail]}
 
 
 def cache_shapes(cfg, batch: int, seq_len: int):

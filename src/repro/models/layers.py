@@ -323,9 +323,18 @@ def attention_apply(cfg, p, x, *, rules: Rules = NO_RULES, positions=None,
 
 
 def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
-                     window: int = 0, cross: bool = False):
-    """One-token decode. x: (B, 1, d); cache: {"k","v"}: (B, S, KV, D);
-    pos: (B,). Returns (out, new_cache)."""
+                     window: int = 0, cross: bool = False,
+                     block_table=None):
+    """One-token decode. x: (B, 1, d); pos: (B,). Returns (out, new_cache).
+
+    Dense mode (block_table=None): cache {"k","v"}: (B, S, KV, D), one lane
+    per batch slot.
+    Paged mode: cache {"k","v"}: (P, page, KV, D) — a shared page pool —
+    and block_table: (B, n_blocks) int32 mapping each request's logical
+    blocks to physical pages (repro.runtime.kv_cache). The new token is
+    scattered into its owner's page; attention gathers the request's pages
+    and masks by pos (page-aware kv_valid), so pool garbage — scratch page,
+    not-yet-written tail — never contributes probability mass."""
     if cross:
         q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
         if cfg.qkv_bias:
@@ -335,6 +344,27 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
         n = jnp.full((x.shape[0],), ck.shape[1], jnp.int32)
         out = attend_decode(q, ck, cv, n - 1)
         new_cache = cache
+    elif block_table is not None:
+        B = x.shape[0]
+        q, k, v = _qkv(cfg, p, x)
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+        page = cache["k"].shape[1]
+        # physical destination of the new token: page block_table[b,
+        # pos//page], row pos%page. Dead slots carry an all-scratch table,
+        # so their write lands on the scratch page, never a live lane.
+        phys = jnp.take_along_axis(block_table, (pos // page)[:, None],
+                                   axis=1)[:, 0]
+        off = pos % page
+        ck = cache["k"].at[phys, off].set(kv_quant(cfg, k[:, 0]))
+        cv = cache["v"].at[phys, off].set(kv_quant(cfg, v[:, 0]))
+        n_blk = block_table.shape[1]
+        kg = ck[block_table].reshape(B, n_blk * page, *ck.shape[2:])
+        vg = cv[block_table].reshape(B, n_blk * page, *cv.shape[2:])
+        out = attend_decode(q, kv_dequant(cfg, kg, q.dtype),
+                            kv_dequant(cfg, vg, q.dtype), pos,
+                            kv_chunk=cfg.decode_kv_chunk)
+        new_cache = {"k": ck, "v": cv}
     else:
         q, k, v = _qkv(cfg, p, x)
         q = rope(q, pos[:, None], cfg.rope_theta)

@@ -172,13 +172,16 @@ def _window_cache(cfg, kv, w):
 
 
 def block_decode(cfg, kind: str, p, x, cache, pos, *,
-                 rules: Rules = NO_RULES):
-    """One-token block step. Returns (x, new_cache)."""
+                 rules: Rules = NO_RULES, block_table=None):
+    """One-token block step. Returns (x, new_cache). block_table switches
+    the full-attention cache entries to the paged-pool layout (see
+    layers.attention_decode); other cache kinds ignore it."""
     h = norm_apply(p["ln1"], x, cfg.norm)
     if kind in ("attn_mlp", "attn_moe", "dec"):
         a, cache_a = attention_decode(cfg, p["attn"], h,
                                       {"k": cache["k"], "v": cache["v"]},
-                                      pos, rules=rules)
+                                      pos, rules=rules,
+                                      block_table=block_table)
     elif kind == "local_attn":
         a, cache_a = attention_decode(cfg, p["attn"], h,
                                       {"k": cache["k"], "v": cache["v"]},
@@ -282,13 +285,14 @@ def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
     return x, {"scan": scan_caches, "tail": tail_caches}, aux0
 
 
-def stack_decode(cfg, params, x, caches, pos, kinds, tail, *, rules=NO_RULES):
+def stack_decode(cfg, params, x, caches, pos, kinds, tail, *, rules=NO_RULES,
+                 block_table=None):
     def body(h, sl):
         pslice, cslice = sl
         new_c = {}
         for j, kd in enumerate(kinds):
             h, nc = block_decode(cfg, kd, pslice[str(j)], h, cslice[str(j)],
-                                 pos, rules=rules)
+                                 pos, rules=rules, block_table=block_table)
             new_c[str(j)] = nc
         return h, new_c
 
@@ -299,6 +303,7 @@ def stack_decode(cfg, params, x, caches, pos, kinds, tail, *, rules=NO_RULES):
         new_scan = {}
     new_tail = []
     for tp, kd, tc in zip(params["tail"], tail, caches["tail"]):
-        x, nc = block_decode(cfg, kd, tp, x, tc, pos, rules=rules)
+        x, nc = block_decode(cfg, kd, tp, x, tc, pos, rules=rules,
+                             block_table=block_table)
         new_tail.append(nc)
     return x, {"scan": new_scan, "tail": new_tail}

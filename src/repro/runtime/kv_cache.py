@@ -1,0 +1,162 @@
+"""Paged KV-cache bookkeeping: fixed-size pages, per-request block tables.
+
+The software analogue of Voltra's dynamic shared-memory allocation
+(PAPER.md): instead of giving every batch slot a dense ``max_len`` cache
+lane ("separated, statically partitioned memory"), the KV pool is a flat
+array of fixed-size pages, and each request owns exactly the pages its
+live tokens need — allocated on demand as decode crosses page boundaries
+and reclaimed the moment the request finishes. Utilization counters mirror
+the paper's temporal-utilization measurement: live tokens over allocated
+capacity, vs. the dense baseline's ``slots * max_len``.
+
+This module is host-side only (no jax import): the allocator hands out
+*physical page ids*; the device-side pools and gathers live in
+``repro.models.api`` / ``repro.models.layers``, which consume the block
+tables built here.
+
+Page 0 is reserved as the scratch page: dead slots and beyond-allocation
+prefill blocks are redirected there, so a finished request can never
+scribble over a page that has been reclaimed and re-issued to a live
+neighbor. Scratch contents are garbage by design and are always masked
+out by ``kv_valid`` (= per-request token count) on the read side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+SCRATCH_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list page allocator with per-request block tables.
+
+    ``num_pages`` counts *usable* pages; one extra scratch page (id 0) is
+    implicit, so physical ids run 0..num_pages (inclusive) and the device
+    pool must be sized ``num_pages + 1``.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 1 and page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list keeps the working set hot (ids 1..num_pages).
+        self._free: List[int] = list(range(num_pages, 0, -1))
+        self._tables: Dict[int, List[int]] = {}   # rid -> physical pages
+        self._tokens: Dict[int, int] = {}         # rid -> live token count
+        self.peak_pages = 0                        # high-water mark
+        self.alloc_events = 0                      # pages handed out, total
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def live_tokens(self) -> int:
+        return sum(self._tokens.values())
+
+    @property
+    def live_requests(self) -> int:
+        return len(self._tables)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` (>= 1 page once admitted)."""
+        return max(1, -(-n_tokens // self.page_size))
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= len(self._free)
+
+    def block_table(self, rid: int) -> List[int]:
+        return list(self._tables[rid])
+
+    def tokens(self, rid: int) -> int:
+        return self._tokens[rid]
+
+    def utilization(self) -> float:
+        """Live tokens over allocated page capacity (1.0 = no slack)."""
+        cap = self.allocated_pages * self.page_size
+        return self.live_tokens / cap if cap else 1.0
+
+    # -- lifecycle --------------------------------------------------------
+    def allocate(self, rid: int, n_tokens: int) -> Optional[List[int]]:
+        """Admit ``rid`` with ``n_tokens`` live tokens. Returns its block
+        table, or None (state unchanged) if the pool can't cover it."""
+        assert rid not in self._tables, f"rid {rid} already admitted"
+        need = self.pages_for(n_tokens)
+        if need > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(need)]
+        self._tables[rid] = pages
+        self._tokens[rid] = n_tokens
+        self.alloc_events += need
+        self.peak_pages = max(self.peak_pages, self.allocated_pages)
+        return list(pages)
+
+    def extend_to(self, rid: int, n_tokens: int) -> Optional[int]:
+        """Grow ``rid`` to cover ``n_tokens`` tokens (allocate-on-demand).
+
+        Returns the newly allocated physical page id if a page boundary was
+        crossed, 0 if the current pages already cover it, or None if the
+        pool is exhausted (state unchanged — caller preempts)."""
+        assert rid in self._tables
+        need = self.pages_for(n_tokens)
+        have = len(self._tables[rid])
+        assert need <= have + 1, "extend_to must grow by <= 1 page"
+        if need <= have:
+            self._tokens[rid] = max(self._tokens[rid], n_tokens)
+            return 0
+        if not self._free:
+            return None
+        page = self._free.pop()
+        self._tables[rid].append(page)
+        self._tokens[rid] = n_tokens
+        self.alloc_events += 1
+        self.peak_pages = max(self.peak_pages, self.allocated_pages)
+        return page
+
+    def free_request(self, rid: int) -> int:
+        """Reclaim every page of ``rid``. Returns the number reclaimed."""
+        pages = self._tables.pop(rid)
+        del self._tokens[rid]
+        self._free.extend(reversed(pages))   # LIFO: reuse hottest first
+        return len(pages)
+
+    # -- invariants (cheap; used by tests and debug asserts) --------------
+    def check_no_aliasing(self) -> None:
+        """No physical page appears in two live block tables or in both a
+        live table and the free list; scratch is never handed out."""
+        seen: Dict[int, int] = {}
+        for rid, pages in self._tables.items():
+            for p in pages:
+                assert p != SCRATCH_PAGE, f"rid {rid} holds scratch page"
+                assert p not in seen, (
+                    f"page {p} aliased by rids {seen[p]} and {rid}")
+                seen[p] = rid
+        for p in self._free:
+            assert p not in seen, f"page {p} both free and owned"
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Snapshot of pool utilization for benchmark/telemetry output."""
+    page_size: int
+    num_pages: int
+    allocated_pages: int
+    peak_pages: int
+    live_tokens: int
+    utilization: float
+    dense_equiv_tokens: int    # what the dense engine would have reserved
+
+    @staticmethod
+    def of(alloc: PageAllocator, slots: int, max_len: int) -> "PoolStats":
+        return PoolStats(
+            page_size=alloc.page_size, num_pages=alloc.num_pages,
+            allocated_pages=alloc.allocated_pages,
+            peak_pages=alloc.peak_pages, live_tokens=alloc.live_tokens,
+            utilization=alloc.utilization(),
+            dense_equiv_tokens=slots * max_len)

@@ -1,0 +1,63 @@
+"""Request scheduler: admission control + prefill/decode interleaving.
+
+The loop is the serving-level analogue of Voltra's shared-memory arbiter:
+each iteration admits as many pending requests as slots AND pages allow
+(prefill), tops up pages the next decode step will write into (allocate-
+on-demand, preempting the youngest request on exhaustion — preempted
+requests re-enter the queue and resume by re-prefilling prompt +
+generated-so-far), then advances every live request one token (decode).
+
+Works with both engines: the dense engine's ``ensure_decode_capacity`` is
+a no-op (its lanes are statically reserved — the anti-pattern the paged
+engine removes).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.runtime.serving import Request
+
+
+class Scheduler:
+    def __init__(self, engine, *, max_admits_per_step: Optional[int] = None):
+        self.engine = engine
+        self.pending: Deque[Request] = deque()
+        self.max_admits_per_step = max_admits_per_step
+        self.steps = 0
+        self.admitted = 0
+        self.preempted = 0
+
+    def add(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _admit(self) -> None:
+        budget = self.max_admits_per_step
+        while self.pending and (budget is None or budget > 0):
+            if not self.engine.submit(self.pending[0]):
+                break                       # out of slots or pages
+            req = self.pending.popleft()
+            self.admitted += 1
+            if budget is not None:
+                budget -= 1
+            if req.done:                    # finished at prefill (eos/budget)
+                continue
+
+    def tick(self) -> None:
+        """One scheduling round: admit -> decode (the engine's step tops up
+        pages itself and reports who it had to preempt)."""
+        self._admit()
+        evicted = self.engine.step() or []
+        if evicted:
+            self.preempted += len(evicted)
+            # resume order: oldest evictee first, ahead of fresh arrivals.
+            # evicted[] is youngest-first, so pushing it front-to-back
+            # leaves the oldest evictee at the head of the queue.
+            for r in evicted:
+                self.pending.appendleft(r)
+        self.steps += 1
+
+    def drain(self, max_steps: int = 10_000) -> None:
+        while (self.pending or self.engine.has_live()) \
+                and self.steps < max_steps:
+            self.tick()

@@ -1,13 +1,33 @@
-"""Serving engine: batched prefill/decode with slot-based continuous batching.
+"""Serving engines: paged KV-cache continuous batching (default) and the
+legacy dense-slot engine (baseline / fallback for recurrent stacks).
 
-The engine owns a fixed-slot batch (like vLLM's static batch mode): each slot
-holds one request's cache lane. `submit` prefills a prompt (B=1) and merges
-its cache into the slot; `step` advances every live slot one token; finished
-slots free automatically. Greedy or temperature sampling.
+``PagedServingEngine`` is the software analogue of Voltra's shared-memory
+architecture (PAPER.md):
+
+* **Dynamic allocation** — full-attention KV lives in a shared page pool
+  (``models/api.paged_cache_init``) addressed through per-request block
+  tables (``runtime/kv_cache.PageAllocator``). Pages are allocated on
+  demand as decode crosses page boundaries and reclaimed on finish, so
+  allocated capacity tracks *live tokens*, not ``slots * max_len``.
+* **Mixed-grained prefetch** — prompts are right-padded to power-of-two
+  length buckets, so ``jax.jit`` traces the prefill once per bucket
+  instead of once per distinct prompt length (the dense engine's
+  pathology on mixed-length traffic).
+* **Shared-memory access efficiency** — ``step()`` keeps position / EOS /
+  budget bookkeeping on device and does ONE host sync per step (a single
+  ``device_get`` of (tokens, done)), where the dense engine pays one sync
+  per live slot per step.
+
+``DenseServingEngine`` is the seed engine, kept verbatim as the measured
+baseline (benchmarks/serve_bench.py) and as the serving path for stacks
+with recurrent state (ssm / rglru / windowed ring buffers), where neither
+paging nor bucket padding applies. ``ServingEngine(cfg, ...)`` picks the
+right one from the block pattern.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -15,7 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
+from repro.models import transformer as tfm
 from repro.parallel.sharding import NO_RULES, Rules
+from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PoolStats
 
 
 @dataclasses.dataclass
@@ -25,9 +47,332 @@ class Request:
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    preemptions: int = 0
 
 
-class ServingEngine:
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _sample_logits(cfg, logits, temperature, key) -> jax.Array:
+    logits = logits[..., : cfg.vocab]
+    if temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, -1).astype(jnp.int32)
+
+
+def _pageable(cfg) -> bool:
+    return set(tfm.pattern_for(cfg)) <= set(api.PAGEABLE_KINDS)
+
+
+def ServingEngine(cfg, params, **kwargs):
+    """Engine factory: paged engine for attention-only stacks, dense-slot
+    engine otherwise (recurrent state can't be paged or bucket-padded)."""
+    if _pageable(cfg):
+        return PagedServingEngine(cfg, params, **kwargs)
+    kwargs.pop("page_size", None)
+    kwargs.pop("num_pages", None)
+    return DenseServingEngine(cfg, params, **kwargs)
+
+
+# ===========================================================================
+# Paged engine
+# ===========================================================================
+
+
+class PagedServingEngine:
+    """Continuous batching over a paged KV cache with bucketed prefill."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 rules: Rules = NO_RULES, eos_id: int = -1,
+                 temperature: float = 0.0, seed: int = 0):
+        if not _pageable(cfg):
+            raise ValueError("paged serving needs an attention-only stack; "
+                             "use DenseServingEngine")
+        assert page_size >= 1 and page_size & (page_size - 1) == 0, \
+            "page_size must be a power of two"
+        self.cfg, self.params = cfg, params
+        self.page_size = page_size
+        self.max_len = -(-max_len // page_size) * page_size
+        self.max_blocks = self.max_len // page_size
+        self.slots = slots
+        self.rules, self.eos_id = rules, eos_id
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+
+        usable = num_pages if num_pages is not None \
+            else slots * self.max_blocks
+        self.alloc = PageAllocator(usable, page_size)
+        # pool row 0 is the scratch page -> usable + 1 physical rows
+        self.cache = api.paged_cache_init(cfg, slots, usable + 1, page_size)
+        self.block_table = jnp.zeros((slots, self.max_blocks), jnp.int32)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
+        self.live_mask = jnp.zeros((slots,), bool)
+        self.gen_cnt = jnp.zeros((slots,), jnp.int32)
+        self.max_new_arr = jnp.zeros((slots,), jnp.int32)
+
+        self.live: List[Optional[Request]] = [None] * slots
+        self._pos_host = [0] * slots          # mirror of self.pos for live
+        self._admit_seq = [0] * slots         # admission order (preemption)
+        self._admit_counter = 0
+
+        # telemetry
+        self.prefill_traces = 0               # == number of length buckets
+        self.decode_steps = 0
+        self.decoded_tokens = 0
+        self.first_token_at: Dict[int, float] = {}
+
+        self._step_fn = jax.jit(self._make_step())
+        self._prefill_fn = jax.jit(self._make_prefill())
+        self._seen_buckets: set = set()
+
+    # -- jitted device programs -------------------------------------------
+
+    def _make_step(self):
+        cfg, rules = self.cfg, self.rules
+        eos, max_len, temp = self.eos_id, self.max_len, self.temperature
+
+        def step(params, cache, block_table, cur_tok, pos, live, gen,
+                 max_new, key):
+            logits, cache = api.decode_step(cfg, params, cache, cur_tok, pos,
+                                            rules=rules,
+                                            block_table=block_table)
+            key, sub = jax.random.split(key)
+            toks = _sample_logits(cfg, logits, temp, sub)
+            livei = live.astype(jnp.int32)
+            pos2 = pos + livei
+            gen2 = gen + livei
+            done = live & ((toks == eos) | (gen2 >= max_new)
+                           | (pos2 >= max_len - 1))
+            live2 = live & ~done
+            cur2 = jnp.where(live[:, None], toks[:, None], cur_tok)
+            return cache, cur2, pos2, gen2, live2, done, toks, key
+
+        return step
+
+    def _make_prefill(self):
+        cfg, rules, temp = self.cfg, self.rules, self.temperature
+        page = self.page_size
+
+        def pf(params, cache, block_table, pos, cur_tok, live, gen,
+               max_new_arr, tokens, length, pages, row, slot, req_max_new,
+               key):
+            logits, cache1, _ = api.prefill(cfg, params, {"tokens": tokens},
+                                            rules=rules, length=length)
+            key, sub = jax.random.split(key)
+            tok = _sample_logits(cfg, logits, temp, sub)[0]
+
+            # scatter the prompt's kv blocks into the page pools. Blocks
+            # past the allocation (bucket padding) carry `pages` entries of
+            # SCRATCH_PAGE, so they land on the scratch page.
+            def merge_scan(pool, one):          # (L,P,pg,..) <- (L,1,Sb,..)
+                L = pool.shape[0]
+                nb = one.shape[2] // page
+                blocks = one.reshape((L, nb, page) + one.shape[3:])
+                return pool.at[:, pages].set(blocks.astype(pool.dtype))
+
+            def merge_tail(pool, one):          # (P,pg,..) <- (1,Sb,..)
+                nb = one.shape[1] // page
+                blocks = one.reshape((nb, page) + one.shape[2:])
+                return pool.at[pages].set(blocks.astype(pool.dtype))
+
+            new_cache = {
+                "scan": jax.tree.map(merge_scan, cache["scan"],
+                                     cache1["scan"]),
+                "tail": [jax.tree.map(merge_tail, cp, c1)
+                         for cp, c1 in zip(cache["tail"], cache1["tail"])],
+            }
+            block_table = block_table.at[slot].set(row)
+            pos = pos.at[slot].set(length)
+            cur_tok = cur_tok.at[slot, 0].set(tok)
+            live = live.at[slot].set(True)
+            gen = gen.at[slot].set(1)
+            max_new_arr = max_new_arr.at[slot].set(req_max_new)
+            return (new_cache, block_table, pos, cur_tok, live, gen,
+                    max_new_arr, tok, key)
+
+        return pf
+
+    def _prefill_for(self, bucket: int):
+        """One jitted installer; jax.jit's shape cache gives one trace per
+        bucket. The seen-bucket set just drives the trace counter."""
+        if bucket not in self._seen_buckets:
+            self._seen_buckets.add(bucket)
+            self.prefill_traces += 1
+        return self._prefill_fn
+
+    # -- host-side engine -------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.live):
+            if r is None:
+                return i
+        return None
+
+    def _bucket(self, n: int) -> int:
+        return min(max(self.page_size, _next_pow2(n)), self.max_len)
+
+    def submit(self, req: Request) -> bool:
+        """Prefill `req` into a free slot. False if out of slots or pages
+        (admission rejection — never corrupts a live neighbor's pages)."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        toks = list(req.prompt) + list(req.generated)   # resume-on-preempt
+        L = len(toks)
+        remaining = req.max_new - len(req.generated)
+        # decode stops at max_len-1 regardless of max_new, so the worst-
+        # case footprint is bounded by max_len tokens
+        worst = min(L + remaining, self.max_len)
+        if (L >= self.max_len - 1 or remaining <= 0
+                or self.alloc.pages_for(worst) > self.alloc.num_pages):
+            # can't (or needn't) ever serve this request: drop it as done
+            # with whatever it has, rather than crash the loop or let the
+            # scheduler retry an admission that can never succeed
+            req.done = True
+            return True
+        table = self.alloc.allocate(req.rid, L)
+        if table is None:
+            return False             # pool full: reject admission
+        bucket = self._bucket(L)
+        nb = bucket // self.page_size
+        pages = np.full((nb,), SCRATCH_PAGE, np.int32)
+        pages[: len(table)] = table[:nb]
+        row = np.zeros((self.max_blocks,), np.int32)
+        row[: len(table)] = table
+        tok_arr = np.zeros((1, bucket), np.int32)
+        tok_arr[0, :L] = toks
+
+        pf = self._prefill_for(bucket)
+        (self.cache, self.block_table, self.pos, self.cur_tok,
+         self.live_mask, self.gen_cnt, self.max_new_arr, tok, self.key) = pf(
+            self.params, self.cache, self.block_table, self.pos,
+            self.cur_tok, self.live_mask, self.gen_cnt, self.max_new_arr,
+            jnp.asarray(tok_arr), jnp.int32(L), jnp.asarray(pages),
+            jnp.asarray(row), jnp.int32(slot), jnp.int32(remaining),
+            self.key)
+
+        self.live[slot] = req
+        self._pos_host[slot] = L
+        self._admit_counter += 1
+        self._admit_seq[slot] = self._admit_counter
+        t = int(tok)
+        req.generated.append(t)
+        if req.rid not in self.first_token_at:
+            self.first_token_at[req.rid] = time.perf_counter()
+        if (t == self.eos_id or len(req.generated) >= req.max_new):
+            self._finish_slot(slot)
+        return True
+
+    def _release_slot(self, slot: int) -> Request:
+        """Reclaim a slot's pages; the slot's table becomes all-scratch so
+        a dead slot can only ever write to the scratch page."""
+        req = self.live[slot]
+        self.live[slot] = None
+        self.alloc.free_request(req.rid)
+        self.block_table = self.block_table.at[slot].set(SCRATCH_PAGE)
+        self.live_mask = self.live_mask.at[slot].set(False)
+        return req
+
+    def _finish_slot(self, slot: int) -> None:
+        self._release_slot(slot).done = True
+
+    def _evict_slot(self, slot: int) -> Request:
+        """Preempt: reclaim pages, return the request for re-admission
+        (it resumes by re-prefilling prompt + generated-so-far)."""
+        req = self._release_slot(slot)
+        req.preemptions += 1
+        return req
+
+    def ensure_decode_capacity(self) -> List[Request]:
+        """Allocate the pages the next decode step will write into
+        (allocate-on-demand); on pool exhaustion, preempt the youngest
+        live requests until the remaining ones fit. Returns preempted
+        requests (resubmit them to resume)."""
+        preempted: List[Request] = []
+        for slot in sorted((s for s, r in enumerate(self.live)
+                            if r is not None),
+                           key=lambda s: self._admit_seq[s]):
+            req = self.live[slot]
+            if req is None:
+                continue
+            while True:
+                got = self.alloc.extend_to(req.rid, self._pos_host[slot] + 1)
+                if got is not None:
+                    if got:          # fresh page: publish to device table
+                        blk = self._pos_host[slot] // self.page_size
+                        self.block_table = self.block_table.at[
+                            slot, blk].set(got)
+                    break
+                victims = [s for s, r in enumerate(self.live)
+                           if r is not None and s != slot]
+                if not victims:
+                    raise RuntimeError(
+                        "page pool too small for a single request")
+                youngest = max(victims, key=lambda s: self._admit_seq[s])
+                preempted.append(self._evict_slot(youngest))
+        return preempted
+
+    def step(self) -> List[Request]:
+        """Advance every live slot one token: one device program, one host
+        sync (tokens + done flags fetched together). Tops up the pages the
+        step will write into first (a bare submit/step loop must never
+        cross a page boundary unallocated — that write would land on the
+        scratch page and silently corrupt the request); returns any
+        requests preempted by that top-up, for the caller to resubmit."""
+        if not any(r is not None for r in self.live):
+            return []
+        evicted = self.ensure_decode_capacity()
+        (self.cache, self.cur_tok, self.pos, self.gen_cnt, self.live_mask,
+         done_d, toks_d, self.key) = self._step_fn(
+            self.params, self.cache, self.block_table, self.cur_tok,
+            self.pos, self.live_mask, self.gen_cnt, self.max_new_arr,
+            self.key)
+        toks, done = jax.device_get((toks_d, done_d))
+        self.decode_steps += 1
+        for i, r in enumerate(self.live):
+            if r is None:
+                continue
+            r.generated.append(int(toks[i]))
+            self._pos_host[i] += 1
+            self.decoded_tokens += 1
+            if done[i]:
+                self._finish_slot(i)
+        return evicted
+
+    def has_live(self) -> bool:
+        return any(r is not None for r in self.live)
+
+    def pool_stats(self) -> PoolStats:
+        return PoolStats.of(self.alloc, self.slots, self.max_len)
+
+    def run_to_completion(self, requests: List[Request],
+                          max_steps: int = 10_000) -> List[Request]:
+        from repro.runtime.scheduler import Scheduler
+        sched = Scheduler(self)
+        for r in requests:
+            sched.add(r)
+        sched.drain(max_steps=max_steps)
+        return [r for r in requests if r.done]
+
+
+# ===========================================================================
+# Dense-slot engine (seed baseline; serves recurrent stacks)
+# ===========================================================================
+
+
+class DenseServingEngine:
+    """Fixed-slot batch: each slot owns a dense max_len cache lane. Kept as
+    the measured baseline for the paged engine and as the serving path for
+    stacks with recurrent state. Retraces prefill per distinct prompt
+    length and syncs the host once per live slot per step."""
+
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  rules: Rules = NO_RULES, eos_id: int = -1,
                  temperature: float = 0.0, seed: int = 0):
@@ -46,6 +391,14 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, b: api.prefill(cfg, p, b, rules=rules,
                                      max_len=max_len))
+        self._seen_lengths: set = set()
+        self.decode_steps = 0
+        self.decoded_tokens = 0
+        self.first_token_at: Dict[int, float] = {}
+
+    @property
+    def prefill_traces(self) -> int:
+        return len(self._seen_lengths)
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -59,11 +412,14 @@ class ServingEngine:
         slot = self._free_slot()
         if slot is None:
             return False
+        self._seen_lengths.add(len(req.prompt))
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         last_logits, cache1, pos1 = self._prefill(self.params,
                                                   {"tokens": toks})
         tok = self._sample(last_logits)[0]
         req.generated.append(int(tok))
+        if req.rid not in self.first_token_at:
+            self.first_token_at[req.rid] = time.perf_counter()
         # merge the B=1 cache lane into slot `slot` of the batched cache
         self.cache = jax.tree.map(
             lambda big, one: jax.lax.dynamic_update_slice_in_dim(
@@ -76,32 +432,38 @@ class ServingEngine:
         return True
 
     def _sample(self, logits) -> jax.Array:
-        logits = logits[..., : self.cfg.vocab]
-        if self.temperature <= 0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
         self.key, k = jax.random.split(self.key)
-        return jax.random.categorical(
-            k, logits / self.temperature, -1).astype(jnp.int32)
+        return _sample_logits(self.cfg, logits, self.temperature, k)
 
-    def step(self) -> None:
-        """Advance every live slot one token."""
+    def step(self) -> List[Request]:
+        """Advance every live slot one token. Returns [] (dense lanes are
+        statically reserved, so a step never preempts)."""
         if not any(r is not None for r in self.live):
-            return
+            return []
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.cur_tok, self.pos)
         toks = self._sample(logits)
         self.pos = self.pos + jnp.asarray(
             [1 if r is not None else 0 for r in self.live], jnp.int32)
         self.cur_tok = toks[:, None]
+        self.decode_steps += 1
         for i, r in enumerate(self.live):
             if r is None:
                 continue
             t = int(toks[i])
             r.generated.append(t)
+            self.decoded_tokens += 1
             if (t == self.eos_id or len(r.generated) >= r.max_new
                     or int(self.pos[i]) >= self.max_len - 1):
                 r.done = True
                 self.live[i] = None
+        return []
+
+    def has_live(self) -> bool:
+        return any(r is not None for r in self.live)
+
+    def ensure_decode_capacity(self) -> List[Request]:
+        return []                     # dense lanes never run out mid-flight
 
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10_000) -> List[Request]:

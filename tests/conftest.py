@@ -4,7 +4,58 @@ import os
 # devices itself and runs out-of-process; never set that here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
+# hypothesis is an optional dependency: when it's missing, install a stub
+# that turns every @given property test into a clean pytest skip, so the
+# plain tests in the same modules still collect and run (a bare import
+# error here used to abort collection of the whole suite).
+try:
+    from hypothesis import settings
+except ImportError:
+    import sys
+    import types
 
-settings.register_profile("ci", max_examples=30, deadline=None)
-settings.load_profile("ci")
+    import pytest
+
+    def _strategy(*args, **kwargs):
+        return None
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in ("booleans", "floats", "integers", "just", "lists",
+                  "sampled_from", "text", "tuples"):
+        setattr(_st, _name, _strategy)
+
+    def _given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg replacement: pytest must not try to resolve the
+            # property test's strategy parameters as fixtures
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    class _Settings:
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+else:
+    settings.register_profile("ci", max_examples=30, deadline=None)
+    settings.load_profile("ci")

@@ -11,6 +11,9 @@ from repro.models import api
 from repro.optim import adamw
 from repro.runtime import trainer
 
+# interpret-mode model/kernel tests: minutes on a throttled CPU
+pytestmark = pytest.mark.slow
+
 B, S = 2, 16
 
 

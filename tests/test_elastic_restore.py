@@ -1,9 +1,12 @@
 """Elastic restart: a checkpoint saved under one mesh restores onto a
 DIFFERENT mesh shape (cross-mesh resharding), bitwise. Runs in a
 subprocess with 4 forced host devices."""
+import os
 import subprocess
 import sys
 import textwrap
+
+import pytest
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -33,9 +36,16 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_cross_mesh_restore():
+    # The child MUST pin JAX_PLATFORMS=cpu: without it jax probes the TPU
+    # backend (libtpu ships in this image) and blocks for minutes before
+    # falling back — the original stripped env dropped the variable and
+    # died on TimeoutExpired. The forced 4-device view composes with cpu.
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       text=True, timeout=900, env=env)
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr

@@ -8,6 +8,9 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.gemm_os import gemm_os, spatial_utilization
 
+# interpret-mode model/kernel tests: minutes on a throttled CPU
+pytestmark = pytest.mark.slow
+
 
 def _rand(key, shape, dtype):
     if jnp.issubdtype(dtype, jnp.integer):

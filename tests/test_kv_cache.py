@@ -1,0 +1,176 @@
+"""Paged KV-cache: allocator invariants (host-side, no jax) + paged-engine
+behavior (reclamation, admission rejection, dense-engine equivalence)."""
+import pytest
+
+from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PoolStats
+
+
+# ---------------------------------------------------------------------------
+# Allocator (pure host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_pages_track_live_tokens_not_slots_times_max_len():
+    """The paper's dynamic-allocation claim: allocated capacity follows
+    live tokens, not the dense slots*max_len reservation."""
+    slots, max_len, page = 4, 256, 16
+    a = PageAllocator(slots * max_len // page, page)
+    a.allocate(0, 10)     # 10 tokens -> 1 page
+    a.allocate(1, 17)     # 17 tokens -> 2 pages
+    assert a.allocated_pages == 3
+    assert a.live_tokens == 27
+    stats = PoolStats.of(a, slots, max_len)
+    assert stats.allocated_pages * page == 48         # 3 pages
+    assert stats.dense_equiv_tokens == 1024           # what dense reserves
+    assert stats.utilization == pytest.approx(27 / 48)
+    # growing by one token inside a page allocates nothing
+    assert a.extend_to(0, 11) == 0
+    assert a.allocated_pages == 3
+    # crossing the boundary allocates exactly one page
+    assert a.extend_to(0, 17) not in (0, None)
+    assert a.allocated_pages == 4
+
+
+def test_pages_reclaimed_on_finish():
+    a = PageAllocator(8, 16)
+    t0 = a.allocate(0, 40)    # 3 pages
+    a.allocate(1, 20)         # 2 pages
+    assert a.free_pages == 3
+    assert a.free_request(0) == 3
+    assert a.free_pages == 6
+    assert a.live_tokens == 20
+    # reclaimed pages are reissued to the next request
+    t2 = a.allocate(2, 33)    # 3 pages
+    assert set(t2) & set(t0)
+    a.check_no_aliasing()
+
+
+def test_block_tables_never_alias_across_live_requests():
+    a = PageAllocator(32, 8)
+    for rid in range(6):
+        a.allocate(rid, 5 + 7 * rid)
+    a.check_no_aliasing()
+    # grow everyone a few times; invariant must hold throughout
+    for step in range(30):
+        for rid in range(6):
+            a.extend_to(rid, a.tokens(rid) + 1)
+        a.check_no_aliasing()
+    # scratch page is never handed out
+    for rid in range(6):
+        assert SCRATCH_PAGE not in a.block_table(rid)
+
+
+def test_full_pool_rejects_admission_without_corruption():
+    a = PageAllocator(4, 16)
+    t0 = a.allocate(0, 33)          # 3 pages
+    assert a.allocate(1, 32) is None   # needs 2, only 1 free -> reject
+    # rejection left every structure untouched
+    assert a.allocated_pages == 3
+    assert a.block_table(0) == t0
+    assert a.live_requests == 1
+    a.check_no_aliasing()
+    # and a fitting request still gets in
+    assert a.allocate(2, 10) is not None
+    a.check_no_aliasing()
+
+
+def test_extend_exhaustion_leaves_state_unchanged():
+    a = PageAllocator(2, 4)
+    a.allocate(0, 4)
+    a.allocate(1, 4)
+    assert a.free_pages == 0
+    before = a.block_table(0)
+    assert a.extend_to(0, 5) is None    # pool dry: caller must preempt
+    assert a.block_table(0) == before
+    assert a.tokens(0) == 4
+    a.check_no_aliasing()
+
+
+# ---------------------------------------------------------------------------
+# Engine-level (jax; small smoke model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import api
+    cfg = get_smoke_config("qwen2.5-3b")
+    return cfg, api.init_params(cfg, jax.random.key(0))
+
+
+@pytest.mark.slow
+def test_paged_engine_matches_dense_engine(qwen):
+    """Greedy outputs of the paged engine must be identical to the seed
+    dense-slot engine, request for request."""
+    from repro.runtime.serving import (DenseServingEngine,
+                                       PagedServingEngine, Request)
+    cfg, params = qwen
+
+    def mk():
+        return [Request(rid=0, prompt=[3, 1, 4, 1, 5], max_new=5),
+                Request(rid=1, prompt=[2, 7], max_new=6),
+                Request(rid=2, prompt=[9, 9, 8, 2, 6, 5, 3], max_new=4)]
+
+    dense = DenseServingEngine(cfg, params, slots=2, max_len=32)
+    d = {r.rid: r.generated
+         for r in dense.run_to_completion(mk(), max_steps=60)}
+    paged = PagedServingEngine(cfg, params, slots=2, max_len=32,
+                               page_size=8)
+    p = {r.rid: r.generated
+         for r in paged.run_to_completion(mk(), max_steps=60)}
+    assert d == p
+
+
+@pytest.mark.slow
+def test_paged_engine_rejects_admission_when_pool_full(qwen):
+    """With a pool too small for two prompts, the second submit must be
+    rejected (not corrupt the first), then succeed after the first frees."""
+    from repro.runtime.serving import PagedServingEngine, Request
+    cfg, params = qwen
+    eng = PagedServingEngine(cfg, params, slots=4, max_len=32, page_size=8,
+                             num_pages=3)      # 24 usable token slots
+    r0 = Request(rid=0, prompt=[1, 2, 3, 4, 5, 6, 7, 8, 9], max_new=3)
+    r1 = Request(rid=1, prompt=[8, 9, 1, 2, 3, 4, 5, 6, 7], max_new=3)
+    assert eng.submit(r0)
+    assert not eng.submit(r1)          # slots free, pages aren't -> reject
+    while eng.has_live():
+        eng.ensure_decode_capacity()
+        eng.step()
+    assert r0.done and len(r0.generated) == 3
+    assert eng.alloc.allocated_pages == 0       # reclaimed on finish
+    assert eng.submit(r1)              # now it fits
+    eng.alloc.check_no_aliasing()
+
+
+@pytest.mark.slow
+def test_paged_engine_preempts_and_resumes(qwen):
+    """When decode outgrows the pool, the youngest request is preempted and
+    later resumed — and still produces its full greedy output."""
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import (DenseServingEngine,
+                                       PagedServingEngine, Request)
+    cfg, params = qwen
+
+    def mk():
+        return [Request(rid=0, prompt=[5, 4, 3, 2, 1, 6, 7], max_new=8),
+                Request(rid=1, prompt=[1, 2, 3, 4, 5, 6], max_new=8)]
+
+    dense = DenseServingEngine(cfg, params, slots=2, max_len=32)
+    want = {r.rid: r.generated
+            for r in dense.run_to_completion(mk(), max_steps=60)}
+
+    # 4 pages of 4 = 16 tokens: both fit at admission, but decode growth
+    # (7+8 and 6+8 tokens) must force at least one preemption.
+    eng = PagedServingEngine(cfg, params, slots=2, max_len=32, page_size=4,
+                             num_pages=4)
+    reqs = mk()
+    sched = Scheduler(eng)
+    for r in reqs:
+        sched.add(r)
+    sched.drain(max_steps=400)
+    assert sched.preempted >= 1
+    assert {r.rid: r.generated for r in reqs} == want
+    eng.alloc.check_no_aliasing()
+    assert eng.alloc.allocated_pages == 0

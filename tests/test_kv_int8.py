@@ -9,6 +9,9 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import api
 
+# interpret-mode model/kernel tests: minutes on a throttled CPU
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "seamless-m4t-large-v2"])
 def test_int8_cache_decode_tracks_bf16(arch):

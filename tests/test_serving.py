@@ -10,6 +10,7 @@ from repro.models import api
 from repro.runtime.serving import Request, ServingEngine
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "granite-3-2b",
                                   "mamba2-2.7b", "recurrentgemma-9b"])
 def test_decode_matches_full_forward(arch):

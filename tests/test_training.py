@@ -26,6 +26,7 @@ def _mk_trainer(tmp, **kw):
                    log_fn=lambda s: None, **kw)
 
 
+@pytest.mark.slow
 def test_loss_decreases(tmp_path):
     tr = _mk_trainer(None, save_every=0, log_every=1)
     tr.run(40)
@@ -34,6 +35,7 @@ def test_loss_decreases(tmp_path):
     assert last < first - 0.3, (first, last)
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_full_batch():
     cfg = get_smoke_config("granite-3-2b")
     opt = adamw.AdamWConfig(lr=1e-3, warmup_steps=0)
@@ -69,6 +71,7 @@ def test_checkpoint_roundtrip(tmp_path):
         state, restored)
 
 
+@pytest.mark.slow
 def test_preemption_resume(tmp_path):
     """Kill after 10 steps, restart, confirm step counter + data cursor
     resume and training continues to the same state as an uninterrupted
