@@ -9,7 +9,9 @@ def emit(rows: Iterable[Dict], header: bool = True) -> str:
     rows = list(rows)
     if not rows:
         return ""
-    keys = list(rows[0].keys())
+    # union of keys across rows (insertion-ordered): suites may add
+    # columns mid-stream (e.g. kernel_bench's peak_live_bytes)
+    keys = list(dict.fromkeys(k for r in rows for k in r))
     out = []
     if header:
         out.append(",".join(keys))

@@ -4,6 +4,7 @@ FLOPs analytically from the block schedule (the dry-run methodology at
 kernel granularity). 197 TFLOP/s bf16, 819 GB/s HBM per chip."""
 from __future__ import annotations
 
+import functools
 from typing import Dict, List
 
 import jax
@@ -11,7 +12,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import time_call
 from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
-from repro.kernels import ops
+from repro.kernels import ops, ref
 from repro.kernels.gemm_os import spatial_utilization
 
 
@@ -25,9 +26,55 @@ def _gemm_terms(M, K, N, block, dtype_bytes=2):
     return flops, bytes_hbm
 
 
-def run() -> List[Dict]:
+def _paged_attn_rows(smoke: bool) -> List[Dict]:
+    """In-kernel block-table gather vs the dense pool gather, at decode
+    shapes. The roofline story: the kernel reads each live page once
+    (sum ceil(len/page) page tiles); the gather path reads the whole
+    table-width pool slice AND round-trips the materialized (B, S, KV, D)
+    buffer through HBM."""
+    B, KV, G, D = (2, 2, 4, 64) if smoke else (4, 2, 4, 64)
+    page, n_blocks = (16, 4) if smoke else (16, 16)
+    H, S = KV * G, page * n_blocks
+    P = 1 + B * n_blocks
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, page, KV, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, page, KV, D), jnp.float32)
+    bt = jnp.arange(1, P, dtype=jnp.int32).reshape(B, n_blocks)
+    lengths = jnp.asarray([S // 4, S // 2, 3 * S // 4, S][:B], jnp.int32)
+    reps = 2 if smoke else 3
+    t_kernel = time_call(
+        lambda: ops.paged_attention(q, kp, vp, bt, lengths), reps=reps)
+    gather = jax.jit(functools.partial(ref.paged_attention_ref,
+                                       kv_scale=None))
+    t_gather = time_call(lambda: gather(q, kp, vp, bt, lengths), reps=reps)
+    live = int(sum(-(-int(n) // page) * page for n in lengths))
+    fl = 4.0 * H * D * float(sum(int(n) for n in lengths))
+    rows = []
+    for name, t, kv_bytes, live_bytes in (
+            ("kernel_paged_attn", t_kernel,
+             2 * live * KV * D * 4,            # each live page read once
+             2 * page * KV * D * 4),           # one K+V tile resident
+            ("kernel_paged_attn_gather", t_gather,
+             2 * 3 * B * S * KV * D * 4,       # pool read + scratch w/r
+             2 * B * S * KV * D * 4)):         # full gathered KV live
+        rows.append({
+            "bench": name, "shape": f"B{B}H{H}kv{KV}D{D}p{page}x{n_blocks}",
+            "interpret_ms": t * 1e3,
+            "tpu_t_compute_us": fl / PEAK_FLOPS * 1e6,
+            "tpu_t_memory_us": kv_bytes / HBM_BW * 1e6,
+            "bound": "memory",                 # decode attention always is
+            "spatial_util": "",
+            "peak_live_bytes": live_bytes,
+        })
+    return rows
+
+
+def run(smoke: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     shapes = [(512, 512, 512), (1024, 1024, 1024), (128, 4096, 128)]
+    if smoke:
+        shapes = [(256, 256, 256)]
     for (M, K, N) in shapes:
         block = (128, 128, 128)
         x = jax.random.normal(jax.random.key(0), (M, K), jnp.float32)
@@ -58,7 +105,7 @@ def run() -> List[Dict]:
         "bound": "fused-epilogue", "spatial_util": 1.0,
     })
     # attention
-    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    B, S, H, KV, D = (1, 256, 8, 2, 64) if smoke else (1, 1024, 8, 2, 64)
     q = jax.random.normal(jax.random.key(4), (B, S, H, D), jnp.float32)
     k = jax.random.normal(jax.random.key(5), (B, S, KV, D), jnp.float32)
     v = jax.random.normal(jax.random.key(6), (B, S, KV, D), jnp.float32)
@@ -84,4 +131,5 @@ def run() -> List[Dict]:
         "tpu_t_compute_us": fl / PEAK_FLOPS * 1e6,
         "tpu_t_memory_us": "", "bound": "", "spatial_util": "",
     })
+    rows.extend(_paged_attn_rows(smoke))
     return rows

@@ -1,10 +1,16 @@
 """Benchmark harness: one module per paper table/figure. Prints CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6a,table1]
+  PYTHONPATH=src python -m benchmarks.run [--only fig6a,table1] [--smoke]
+      [--out results.csv]
+
+``--smoke`` asks each suite that supports it (kernels, serve) for tiny
+shapes — seconds instead of minutes — so CI can replay the perf-sensitive
+suites per PR and upload the CSV as an artifact (``--out``).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -30,16 +36,30 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for suites that support it (CI)")
+    ap.add_argument("--out", default=None,
+                    help="also write the CSV output to this file")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
     t0 = time.time()
+    chunks = []
     for name in names:
         if name not in SUITES:
             raise SystemExit(f"unknown suite {name!r}")
+        fn = SUITES[name]
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         print(f"# === {name} ===", flush=True)
-        rows = SUITES[name]()
-        print(emit(rows), flush=True)
+        csv = emit(fn(**kwargs))
+        chunks.append(f"# === {name} ===\n{csv}\n")
+        print(csv, flush=True)
         print()
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(chunks))
+        print(f"# wrote {args.out}", file=sys.stderr)
     print(f"# all suites done in {time.time() - t0:.1f}s", file=sys.stderr)
 
 

@@ -1,12 +1,24 @@
-"""Serving engine benchmark: voltra-paged vs seed dense-slot engine.
+"""Serving engine benchmark: paged (in-kernel vs dense-gather decode
+attention) vs the seed dense-slot engine.
 
 A mixed-length request trace (every prompt a different length — the
-production case the dense engine handles worst) is replayed through both
-engines on the same model/params. Reported per engine:
+production case the dense engine handles worst) is replayed through three
+engines on the same model/params: the dense-slot baseline, the paged
+engine with the PR-1 per-layer ``pool[block_table]`` dense gather
+(``attn_impl="gather"``), and the paged engine with the Pallas flash-
+decode kernel that performs the block-table gather inside the kernel
+(``attn_impl="kernel"``, the default). Reported per engine:
 
-* ``decode_tok_s``  — generated tokens / wall time for the whole trace
-  (the number a capacity planner cares about; includes the per-length
-  retrace tax the dense engine pays on mixed traffic)
+* ``decode_tok_s``  — decoded tokens / wall time spent inside decode
+  steps (engine ``step_wall_s`` telemetry), measured WARM (every engine
+  is pre-compiled over the trace's lengths/buckets first): the steady-
+  state decode throughput a capacity planner cares about. On CPU the
+  kernel runs in Pallas interpret mode, whose per-grid-step dispatch
+  cost is the same order as these toy attention shapes — wall deltas
+  between gather and kernel here are noise-bound; the structural win is
+  ``attn_peak_live_bytes`` (see DESIGN.md "Paged attention")
+* ``trace_tok_s``   — generated tokens / whole-trace wall (prefill +
+  scheduling included)
 * ``ttft_mean_s``   — mean time-to-first-token across requests
 * ``prefill_traces``— distinct prefill compilations: once per LENGTH
   BUCKET for paged (mixed-grained-prefetch analogue), once per distinct
@@ -14,6 +26,11 @@ engines on the same model/params. Reported per engine:
 * ``kv_util`` / ``peak_kv_tokens`` — live tokens over allocated page
   capacity at peak, vs the dense engine's static ``slots * max_len``
   reservation (the paper's dynamic-allocation utilization claim)
+* ``attn_peak_live_bytes`` — peak live bytes of the per-layer decode-
+  attention KV working set: the gather path materializes the full
+  (B, n_blocks*page, KV, D) K and V scratch every layer; the kernel path
+  keeps one (page, KV, D) K/V tile resident (the paper's separated-vs-
+  shared memory access cost, measured at the serving level)
 
   PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen2.5-3b]
 """
@@ -43,7 +60,39 @@ def _trace(cfg, n_requests: int, max_new: int) -> List[Request]:
             for i in range(n_requests)]
 
 
-def _drive(engine, reqs: List[Request], max_steps: int) -> Dict:
+def _warm(engine, cfg, n_requests: int) -> None:
+    """Compile-warm the engine: replay the trace's prompt lengths (covers
+    every prefill trace/bucket for dense AND paged) with max_new=2 for a
+    couple of decode steps, so the timed replay measures steady-state
+    serving rather than jit tracing — the number a capacity planner
+    wants is the warm one."""
+    sched = Scheduler(engine)
+    for r in _trace(cfg, n_requests, 2):
+        sched.add(r)
+    sched.drain(max_steps=1000)
+    # warmup compiled + ran; zero the telemetry the timed replay reports
+    engine.decode_steps = 0
+    engine.decoded_tokens = 0
+    engine.step_wall_s = 0.0
+    engine.first_token_at.clear()
+
+
+def _attn_peak_live_bytes(cfg, engine) -> int:
+    """Peak live bytes of the per-layer decode-attention KV working set."""
+    kv, hd = cfg.kv_heads, cfg.resolved_head_dim
+    if isinstance(engine, PagedServingEngine) \
+            and engine.attn_impl == "kernel":
+        # one K + one V page tile resident per kernel program, in the
+        # pool's storage dtype (int8 pools dequantize inside the kernel)
+        itemsize = 1 if cfg.kv_cache_dtype == "int8" else 2
+        return 2 * engine.page_size * kv * hd * itemsize
+    # dense lanes / dense gather: the whole (B, max_len, KV, D) K and V,
+    # materialized DEQUANTIZED to the 2-byte activation dtype
+    # (layers.kv_dequant) regardless of the cache storage dtype
+    return 2 * engine.slots * engine.max_len * kv * hd * 2
+
+
+def _drive(engine, reqs: List[Request], max_steps: int, cfg) -> Dict:
     sched = Scheduler(engine)
     for r in reqs:
         sched.add(r)
@@ -54,12 +103,17 @@ def _drive(engine, reqs: List[Request], max_steps: int) -> Dict:
     toks = sum(len(r.generated) for r in done)
     ttfts = [engine.first_token_at[r.rid] - t0 for r in done
              if r.rid in engine.first_token_at]
+    name = type(engine).__name__
+    if isinstance(engine, PagedServingEngine):
+        name += f"[{engine.attn_impl}]"
     row = {
-        "engine": type(engine).__name__,
+        "engine": name,
         "requests_done": len(done),
         "tokens": toks,
         "wall_s": wall,
-        "decode_tok_s": toks / wall if wall else 0.0,
+        "decode_tok_s": engine.decoded_tokens / engine.step_wall_s
+        if engine.step_wall_s else 0.0,
+        "trace_tok_s": toks / wall if wall else 0.0,
         "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
         "prefill_traces": engine.prefill_traces,
     }
@@ -71,31 +125,51 @@ def _drive(engine, reqs: List[Request], max_steps: int) -> Dict:
     else:
         row["peak_kv_tokens"] = engine.slots * engine.max_len
         row["kv_util_vs_dense"] = 1.0
+    row["attn_peak_live_bytes"] = _attn_peak_live_bytes(cfg, engine)
     return row
 
 
 def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
-        n_requests: int = 12, max_new: int = 8) -> List[Dict]:
+        n_requests: int = 12, max_new: int = 8,
+        smoke: bool = False) -> List[Dict]:
+    if smoke:       # decode-heavy but small: seconds, not minutes, with
+        # enough steps that decode_tok_s isn't measuring scheduler noise
+        slots, max_len, n_requests, max_new = 2, 128, 4, 24
     cfg = get_smoke_config(arch)
     params = api.init_params(cfg, jax.random.key(0))
     rows = []
     dense = DenseServingEngine(cfg, params, slots=slots, max_len=max_len)
-    rows.append(_drive(dense, _trace(cfg, n_requests, max_new), 4000))
-    paged = PagedServingEngine(cfg, params, slots=slots, max_len=max_len)
-    rows.append(_drive(paged, _trace(cfg, n_requests, max_new), 4000))
-    d, p = rows[0], rows[1]
-    rows.append({
-        "engine": "paged/dense",
-        "requests_done": p["requests_done"] - d["requests_done"],
-        "tokens": p["tokens"] - d["tokens"],
-        "wall_s": d["wall_s"] / p["wall_s"],
-        "decode_tok_s": p["decode_tok_s"] / d["decode_tok_s"],
-        "ttft_mean_s": d["ttft_mean_s"] / p["ttft_mean_s"]
-        if p["ttft_mean_s"] else 0.0,
-        "prefill_traces": p["prefill_traces"] - d["prefill_traces"],
-        "peak_kv_tokens": p["peak_kv_tokens"] - d["peak_kv_tokens"],
-        "kv_util_vs_dense": p["kv_util_vs_dense"],
-    })
+    _warm(dense, cfg, n_requests)
+    rows.append(_drive(dense, _trace(cfg, n_requests, max_new), 4000, cfg))
+    for impl in ("gather", "kernel"):
+        paged = PagedServingEngine(cfg, params, slots=slots,
+                                   max_len=max_len, attn_impl=impl)
+        _warm(paged, cfg, n_requests)
+        rows.append(_drive(paged, _trace(cfg, n_requests, max_new), 4000,
+                           cfg))
+    d, g, k = rows[0], rows[1], rows[2]
+
+    def ratio_row(name: str, base: Dict) -> Dict:
+        """Summary row: kernel engine vs `base` (counts as deltas,
+        times/bytes as base/kernel speedup or kernel/base footprint)."""
+        return {
+            "engine": name,
+            "requests_done": k["requests_done"] - base["requests_done"],
+            "tokens": k["tokens"] - base["tokens"],
+            "wall_s": base["wall_s"] / k["wall_s"],
+            "decode_tok_s": k["decode_tok_s"] / base["decode_tok_s"],
+            "trace_tok_s": k["trace_tok_s"] / base["trace_tok_s"],
+            "ttft_mean_s": base["ttft_mean_s"] / k["ttft_mean_s"]
+            if k["ttft_mean_s"] else 0.0,
+            "prefill_traces": k["prefill_traces"] - base["prefill_traces"],
+            "peak_kv_tokens": k["peak_kv_tokens"] - base["peak_kv_tokens"],
+            "kv_util_vs_dense": k["kv_util_vs_dense"],
+            "attn_peak_live_bytes": k["attn_peak_live_bytes"]
+            / base["attn_peak_live_bytes"],
+        }
+
+    rows.append(ratio_row("kernel/gather", g))
+    rows.append(ratio_row("kernel/dense", d))
     return rows
 
 
@@ -106,9 +180,11 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace (seconds): CI per-PR regression signal")
     args = ap.parse_args()
     rows = run(args.arch, args.slots, args.max_len, args.requests,
-               args.max_new)
+               args.max_new, smoke=args.smoke)
     print(emit(rows))
 
 

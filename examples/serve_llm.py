@@ -26,6 +26,10 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--paged-attn", choices=["kernel", "gather"],
+                    default="kernel",
+                    help="decode attention: in-kernel block-table gather "
+                         "(Pallas flash-decode) or the dense-gather baseline")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -34,7 +38,8 @@ def main() -> None:
     params = api.init_params(cfg, jax.random.key(0))
     eng = ServingEngine(cfg, params, slots=args.slots, max_len=128,
                         page_size=args.page_size,
-                        temperature=args.temperature)
+                        temperature=args.temperature,
+                        attn_impl=args.paged_attn)
     print(f"[serve] engine: {type(eng).__name__}")
 
     reqs = [Request(rid=i, prompt=[(7 * i + j) % cfg.vocab

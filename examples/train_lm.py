@@ -11,7 +11,6 @@ Presets:
            [--ckpt-dir DIR] [--grad-accum N] [--compress-grads]
 """
 import argparse
-import dataclasses
 
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import DataConfig, SyntheticDataset

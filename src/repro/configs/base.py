@@ -86,6 +86,13 @@ class ModelConfig:
     # One-shot is the right path under sequence/context parallelism where
     # the per-device q block is small (EXPERIMENTS.md §Perf A4).
     flash_chunking: bool = True
+    # paged-decode attention implementation: "kernel" (Pallas flash-decode,
+    # block-table gather inside the kernel — the default and the only path
+    # that never materializes the gathered KV) | "gather" (PR-1 baseline:
+    # dense pool[block_table] gather per layer, kept as the measured
+    # anti-pattern in benchmarks/serve_bench.py). Dense-slot decode ignores
+    # this.
+    paged_attn_impl: str = "kernel"
     # KV-cache storage dtype: "bfloat16" | "int8". int8 halves decode
     # cache traffic + footprint (the chip's INT8 theme applied to the KV
     # cache); values are stored as round(x * 127 / kv_scale) with a

@@ -10,7 +10,6 @@ paper's *system-level* results (Table I peak 0.82 TOPS / 1.60 TOPS/W).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,7 +19,7 @@ Two pieces:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 from repro.core.accel import VOLTRA, VoltraConfig
 

@@ -23,7 +23,6 @@ Mapper modes (see DESIGN.md "Spatial mapper"):
 from __future__ import annotations
 
 import math
-from typing import Iterable, Tuple
 
 from repro.core.accel import BASELINE_2D, VOLTRA, Baseline2DConfig, VoltraConfig
 from repro.core.workloads import Op, Workload

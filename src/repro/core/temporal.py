@@ -38,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import lru_cache
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.core.accel import VOLTRA, VoltraConfig
 from repro.core.workloads import Op, Workload

@@ -8,9 +8,8 @@ files needed, same contract as a sharded tokenized corpus reader.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator
 
-import jax
 import numpy as np
 
 

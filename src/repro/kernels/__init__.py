@@ -6,6 +6,9 @@
   conv_im2col — 6-D AGU analogue: implicit-im2col Conv2D
   reshuffle   — data reshuffler: blocked layouts + tiled transpose
   maxpool     — Sec. II-E maxpool unit (arbitrary windows, lane-parallel)
+  paged_attention — §III shared-memory streamers at serving time: flash-
+                decode with the block-table gather inside the kernel
+                (scalar-prefetched table, page-granular KV tiles)
   ops         — public jit'd wrappers (TPU: compiled; CPU: interpret)
   ref         — pure-jnp oracles (the correctness contract for tests)
 """

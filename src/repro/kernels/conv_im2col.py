@@ -20,12 +20,10 @@ strip BlockSpec for the large early layers (recorded in DESIGN.md).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 

@@ -9,15 +9,14 @@ swaps in (see DESIGN.md "Kernel integration").
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import attention as _attention
 from repro.kernels import conv_im2col as _conv
 from repro.kernels import gemm_os as _gemm
+from repro.kernels import paged_attention as _paged
 from repro.kernels import ref as _ref
 from repro.kernels import reshuffle as _reshuffle
 
@@ -49,6 +48,20 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """Fused flash-MHA with on-the-fly K^T (Voltra C3/PDMA analogue)."""
     return _attention.mha(q, k, v, causal=causal, kv_valid=kv_valid,
                           bq=bq, bk=bk, interpret=not _on_tpu())
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_table: jax.Array, lengths, *,
+                    kv_scale: Optional[float] = None) -> jax.Array:
+    """Flash-decode over a paged KV pool: the block-table indirection runs
+    INSIDE the kernel (scalar-prefetched table, page-granular KV tiles,
+    online softmax), so the per-layer dense gather of the PR-1 serving
+    path never materializes (Voltra's shared-memory streamers; DESIGN.md
+    "Paged attention"). q: (B, H, D); pools: (P, page, KV, D);
+    block_table: (B, n_blocks); lengths: (B,) live tokens (pos + 1)."""
+    return _paged.paged_attention(q, k_pool, v_pool, block_table, lengths,
+                                  kv_scale=kv_scale,
+                                  interpret=not _on_tpu())
 
 
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:

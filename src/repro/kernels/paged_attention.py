@@ -1,0 +1,172 @@
+"""Paged flash-decode attention kernel — the in-kernel block-table gather.
+
+The serving engine's paged KV cache (repro.runtime.kv_cache) keeps every
+layer's K/V in a shared page pool ``(P, page, KV, D)`` addressed through
+per-request block tables. The PR-1 decode path gathered each request's
+pages into a dense ``(B, n_blocks * page, KV, D)`` buffer per layer before
+attending — exactly the "separated memory" data movement the paper's
+shared-memory streamers avoid (PAPER.md §III: the flexible streamers fetch
+the tiles the PEs consume, nothing else). This kernel moves the block-table
+indirection *inside* the attention kernel, vLLM-style:
+
+* the block table and per-request valid lengths ride in as **scalar
+  prefetch** operands (``pltpu.PrefetchScalarGridSpec``), so the index map
+  of the K/V pool can pick the physical page of grid step ``(b, h, i)``
+  *before* the body runs — the pool is only ever touched one page at a
+  time, straight from HBM into a VMEM tile;
+* the grid walks ``(batch, logical_block)`` with the block axis
+  innermost; one grid step streams one whole pool page ``(page, KV, D)``
+  — the pool's contiguous unit, so the DMA is a single dense copy, never
+  a strided per-head slice. Running max / denominator / output
+  accumulator live in VMEM scratch across the page sweep (online
+  softmax), so neither the gathered KV nor the score matrix ever exists
+  outside a page-sized tile;
+* GQA: all ``H = KV * G`` query heads ride the same streamed page (the
+  chip's 3D-reuse argument applied to the KV stream) — the per-head
+  score is a KV-batched ``(G, D) x (D, page)`` contraction;
+* blocks past a request's valid length are skipped (``pl.when``), so a
+  short request in a long-table batch pays for the pages it owns, not for
+  ``max_blocks``;
+* int8 KV pools are dequantized tile-by-tile inside the kernel
+  (``kv_scale``), so the f32 view of the cache never materializes either.
+
+The pure-jnp oracle (dense gather + masked softmax) is
+``repro.kernels.ref.paged_attention_ref``; dispatch (TPU compiled vs
+interpret elsewhere) is ``repro.kernels.ops.paged_attention``. See
+DESIGN.md "Paged attention".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+
+_NEG = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, page: int, n_blocks: int, scale: float,
+                  dequant: Optional[float]):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    # skip pages entirely past this request's live tokens: the sweep costs
+    # ceil(length/page) page tiles, not max_blocks (decode step >= 1 token,
+    # so block 0 always runs and the init above is never skipped)
+    @pl.when(i * page < length)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)             # (KV, G, D)
+        k = k_ref[0]                                 # (page, KV, D) — the
+        v = v_ref[0]                                 # pool's contiguous unit
+        if dequant is not None:                      # int8 pool: tile dequant
+            k = k.astype(jnp.float32) * dequant
+            v = v.astype(jnp.float32) * dequant
+        # KV-batched (G, D) x (D, page) contraction: every query head of
+        # the group scores against the page it shares
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32),
+            dimension_numbers=(((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale   # (KV, G, page)
+        pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        mask = pos < length
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        acc_ref[...] = (acc_ref[...] * corr[..., None]
+                        + jax.lax.dot_general(
+                            p, v.astype(jnp.float32),
+                            dimension_numbers=(((2,), (0,)), ((0,), (1,))),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(i == n_blocks - 1)
+    def _fin():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_table: jax.Array, lengths, *,
+                    kv_scale: Optional[float] = None,
+                    interpret: bool = True) -> jax.Array:
+    """Flash-decode over a paged KV pool. Returns (B, H, D).
+
+    q:           (B, H, D)  — one new token per request (post-rope).
+    k/v_pool:    (P, page, KV, D) shared page pools (bf16/f32 or int8).
+    block_table: (B, n_blocks) int32 — logical block j of request b lives
+                 in physical page ``block_table[b, j]`` (scratch page 0 for
+                 never-written tails; masked out by ``lengths``).
+    lengths:     (B,) int32 (or scalar) — live tokens per request
+                 INCLUDING the token just written (i.e. pos + 1). Traced.
+    kv_scale:    static absmax bound when the pools are int8
+                 (dequant = kv_scale / 127, matching layers.kv_dequant).
+    """
+    B = q.shape[0]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    return _paged(q, k_pool, v_pool, block_table, lengths,
+                  kv_scale=kv_scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_scale", "interpret"))
+def _paged(q, k_pool, v_pool, block_table, lengths, *,
+           kv_scale: Optional[float], interpret: bool) -> jax.Array:
+    B, H, D = q.shape
+    P, page, KV, _ = k_pool.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    n_blocks = block_table.shape[1]
+    dequant = None
+    if jnp.issubdtype(k_pool.dtype, jnp.integer):
+        assert kv_scale is not None, "int8 pools need kv_scale"
+        dequant = kv_scale / 127.0
+
+    # (B, H, D) -> (B, KV, G, D): heads h*G..(h+1)*G-1 share kv head h,
+    # matching layers._qkv head order, so the whole group rides one q block
+    qg = q.reshape(B, KV, G, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # block_table, lengths
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, D), lambda b, i, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, i, bt, ln: (bt[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, i, bt, ln: (bt[b, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, D),
+                               lambda b, i, bt, ln: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),      # running max
+            pltpu.VMEM((KV, G), jnp.float32),      # running denominator
+            pltpu.VMEM((KV, G, D), jnp.float32),   # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, page=page, n_blocks=n_blocks,
+                          scale=D ** -0.5, dequant=dequant),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, lengths, qg, k_pool, v_pool)
+    return out.reshape(B, H, D)

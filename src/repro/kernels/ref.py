@@ -41,6 +41,38 @@ def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return o.reshape(B, Sq, H, D).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_table: jax.Array, lengths, *,
+                        kv_scale: Optional[float] = None) -> jax.Array:
+    """Dense-gather oracle for the paged flash-decode kernel.
+
+    Deliberately does the thing the kernel exists to avoid — gather every
+    request's pages into a (B, n_blocks*page, KV, D) buffer — then runs an
+    exact masked softmax. q: (B, H, D); pools: (P, page, KV, D);
+    block_table: (B, n_blocks); lengths: (B,) live tokens (pos + 1).
+    """
+    B, H, D = q.shape
+    _, page, KV, _ = k_pool.shape
+    G = H // KV
+    n_blocks = block_table.shape[1]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    def dq(x):
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return x.astype(jnp.float32) * (kv_scale / 127.0)
+        return x.astype(jnp.float32)
+
+    kg = dq(k_pool[block_table]).reshape(B, n_blocks * page, KV, D)
+    vg = dq(v_pool[block_table]).reshape(B, n_blocks * page, KV, D)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg) * (D ** -0.5)
+    mask = jnp.arange(n_blocks * page)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vg)
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
 def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,
                padding: str = "SAME") -> jax.Array:
     """x: (N,H,W,C); w: (R,S,C,K) -> (N,HO,WO,K)."""

@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       [--slots 4] [--requests 8] [--max-new 12] [--engine paged|dense] \
-      [--page-size 16] [--num-pages N]
+      [--page-size 16] [--num-pages N] [--paged-attn kernel|gather]
 
 Attention-only stacks default to the paged KV-cache engine (continuous
 batching over a shared page pool, bucketed prefill); recurrent stacks fall
@@ -35,6 +35,11 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None,
                     help="usable KV pages (default: slots*max_len/page)")
+    ap.add_argument("--paged-attn", choices=["kernel", "gather"],
+                    default="kernel",
+                    help="paged decode attention: in-kernel block-table "
+                         "gather (Pallas flash-decode) or the PR-1 dense "
+                         "pool gather baseline")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -47,10 +52,12 @@ def main() -> None:
         eng = DenseServingEngine(cfg, params, **common)
     elif args.engine == "paged":
         eng = PagedServingEngine(cfg, params, page_size=args.page_size,
-                                 num_pages=args.num_pages, **common)
+                                 num_pages=args.num_pages,
+                                 attn_impl=args.paged_attn, **common)
     else:
         eng = ServingEngine(cfg, params, page_size=args.page_size,
-                            num_pages=args.num_pages, **common)
+                            num_pages=args.num_pages,
+                            attn_impl=args.paged_attn, **common)
     print(f"[launch.serve] engine: {type(eng).__name__}")
     reqs = [Request(rid=i,
                     prompt=[(11 * i + j) % cfg.vocab for j in range(4 + i % 5)],

@@ -6,10 +6,8 @@ runs, so a passing dry-run certifies the production path.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig, input_specs
 from repro.models import api

@@ -6,7 +6,7 @@ launcher, trainer, serving engine and dry-run all sit on top of them.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -207,7 +207,10 @@ def decode_step(cfg, params, cache, tokens, pos, *,
                 rules: Rules = NO_RULES, block_table=None):
     """tokens: (B, 1) int32; pos: (B,) next position. -> (logits, new_cache).
     block_table: (B, n_blocks) int32 switches full-attention cache entries
-    to the shared paged pool layout (see paged_cache_init)."""
+    to the shared paged pool layout (see paged_cache_init); attention then
+    runs the block-table indirection inside the Pallas flash-decode kernel
+    (kernels/ops.paged_attention) unless cfg.paged_attn_impl == "gather"
+    pins the dense-gather baseline."""
     kinds = tfm.pattern_for(cfg)
     _, tail = tfm.layer_plan(cfg)
     x = _embed_tokens(cfg, params, tokens)

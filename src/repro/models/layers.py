@@ -8,12 +8,12 @@ so the axes tree always matches the params tree).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.parallel.sharding import NO_RULES, Rules
 
 # ---------------------------------------------------------------------------
@@ -332,9 +332,13 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
     Paged mode: cache {"k","v"}: (P, page, KV, D) — a shared page pool —
     and block_table: (B, n_blocks) int32 mapping each request's logical
     blocks to physical pages (repro.runtime.kv_cache). The new token is
-    scattered into its owner's page; attention gathers the request's pages
-    and masks by pos (page-aware kv_valid), so pool garbage — scratch page,
-    not-yet-written tail — never contributes probability mass."""
+    scattered into its owner's page; attention then runs the block-table
+    indirection INSIDE the flash-decode kernel (ops.paged_attention), one
+    page tile at a time, masked by pos + 1 — so pool garbage (scratch
+    page, not-yet-written tail) never contributes probability mass and the
+    dense (B, n_blocks*page, KV, D) gathered KV never materializes.
+    cfg.paged_attn_impl == "gather" keeps the PR-1 dense-gather path as
+    the measured baseline (benchmarks/serve_bench.py)."""
     if cross:
         q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
         if cfg.qkv_bias:
@@ -358,12 +362,19 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
         off = pos % page
         ck = cache["k"].at[phys, off].set(kv_quant(cfg, k[:, 0]))
         cv = cache["v"].at[phys, off].set(kv_quant(cfg, v[:, 0]))
-        n_blk = block_table.shape[1]
-        kg = ck[block_table].reshape(B, n_blk * page, *ck.shape[2:])
-        vg = cv[block_table].reshape(B, n_blk * page, *cv.shape[2:])
-        out = attend_decode(q, kv_dequant(cfg, kg, q.dtype),
-                            kv_dequant(cfg, vg, q.dtype), pos,
-                            kv_chunk=cfg.decode_kv_chunk)
+        if cfg.paged_attn_impl == "gather":
+            # PR-1 baseline: dense per-layer pool gather (the "separated
+            # memory" anti-pattern; kept only for serve_bench comparison)
+            n_blk = block_table.shape[1]
+            kg = ck[block_table].reshape(B, n_blk * page, *ck.shape[2:])
+            vg = cv[block_table].reshape(B, n_blk * page, *cv.shape[2:])
+            out = attend_decode(q, kv_dequant(cfg, kg, q.dtype),
+                                kv_dequant(cfg, vg, q.dtype), pos,
+                                kv_chunk=cfg.decode_kv_chunk)
+        else:
+            scale = cfg.kv_scale if ck.dtype == jnp.int8 else None
+            out = ops.paged_attention(q[:, 0], ck, cv, block_table,
+                                      pos + 1, kv_scale=scale)[:, None]
         new_cache = {"k": ck, "v": cv}
     else:
         q, k, v = _qkv(cfg, p, x)

@@ -8,8 +8,7 @@ Layers that don't fit a whole period form an explicitly-applied tail.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -39,7 +39,10 @@ def schedule(cfg: AdamWConfig, step):
 
 def init(cfg: AdamWConfig, params) -> Dict[str, Any]:
     mdt = jnp.dtype(cfg.moment_dtype)
-    z = lambda p: jnp.zeros(p.shape, mdt)
+
+    def z(p):
+        return jnp.zeros(p.shape, mdt)
+
     return {"m": jax.tree.map(z, params),
             "v": jax.tree.map(z, params),
             "step": jnp.zeros((), jnp.int32)}

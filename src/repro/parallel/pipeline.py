@@ -15,7 +15,6 @@ sequential stack on a forced-multi-device CPU.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -14,7 +14,7 @@ engine removes).
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Optional
 
 from repro.runtime.serving import Request
 

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +76,7 @@ def ServingEngine(cfg, params, **kwargs):
         return PagedServingEngine(cfg, params, **kwargs)
     kwargs.pop("page_size", None)
     kwargs.pop("num_pages", None)
+    kwargs.pop("attn_impl", None)
     return DenseServingEngine(cfg, params, **kwargs)
 
 
@@ -90,12 +91,21 @@ class PagedServingEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  rules: Rules = NO_RULES, eos_id: int = -1,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 attn_impl: str = "kernel"):
         if not _pageable(cfg):
             raise ValueError("paged serving needs an attention-only stack; "
                              "use DenseServingEngine")
         assert page_size >= 1 and page_size & (page_size - 1) == 0, \
             "page_size must be a power of two"
+        if attn_impl not in ("kernel", "gather"):
+            raise ValueError(f"attn_impl must be kernel|gather: {attn_impl}")
+        # decode attention impl rides on the (frozen) config so it reaches
+        # layers.attention_decode through the jitted step without an extra
+        # traced operand; "kernel" = in-kernel block-table gather (Pallas
+        # flash-decode), "gather" = PR-1 dense pool gather (bench baseline)
+        cfg = dataclasses.replace(cfg, paged_attn_impl=attn_impl)
+        self.attn_impl = attn_impl
         self.cfg, self.params = cfg, params
         self.page_size = page_size
         self.max_len = -(-max_len // page_size) * page_size
@@ -126,6 +136,7 @@ class PagedServingEngine:
         self.prefill_traces = 0               # == number of length buckets
         self.decode_steps = 0
         self.decoded_tokens = 0
+        self.step_wall_s = 0.0                # wall time inside step() only
         self.first_token_at: Dict[int, float] = {}
 
         self._step_fn = jax.jit(self._make_step())
@@ -329,12 +340,14 @@ class PagedServingEngine:
         if not any(r is not None for r in self.live):
             return []
         evicted = self.ensure_decode_capacity()
+        t0 = time.perf_counter()
         (self.cache, self.cur_tok, self.pos, self.gen_cnt, self.live_mask,
          done_d, toks_d, self.key) = self._step_fn(
             self.params, self.cache, self.block_table, self.cur_tok,
             self.pos, self.live_mask, self.gen_cnt, self.max_new_arr,
             self.key)
         toks, done = jax.device_get((toks_d, done_d))
+        self.step_wall_s += time.perf_counter() - t0
         self.decode_steps += 1
         for i, r in enumerate(self.live):
             if r is None:
@@ -394,6 +407,7 @@ class DenseServingEngine:
         self._seen_lengths: set = set()
         self.decode_steps = 0
         self.decoded_tokens = 0
+        self.step_wall_s = 0.0                # wall time inside step() only
         self.first_token_at: Dict[int, float] = {}
 
     @property
@@ -440,12 +454,15 @@ class DenseServingEngine:
         statically reserved, so a step never preempts)."""
         if not any(r is not None for r in self.live):
             return []
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.cur_tok, self.pos)
         toks = self._sample(logits)
         self.pos = self.pos + jnp.asarray(
             [1 if r is not None else 0 for r in self.live], jnp.int32)
         self.cur_tok = toks[:, None]
+        jax.block_until_ready(toks)     # keep the sync inside the timer
+        self.step_wall_s += time.perf_counter() - t0
         self.decode_steps += 1
         for i, r in enumerate(self.live):
             if r is None:

@@ -20,7 +20,7 @@ except ImportError:
         return None
 
     _st = types.ModuleType("hypothesis.strategies")
-    for _name in ("booleans", "floats", "integers", "just", "lists",
+    for _name in ("booleans", "data", "floats", "integers", "just", "lists",
                   "sampled_from", "text", "tuples"):
         setattr(_st, _name, _strategy)
 

@@ -5,7 +5,6 @@ import pytest
 
 from repro.core import simulator as sim
 from repro.core import workloads
-from repro.core.accel import VOLTRA
 
 
 def test_table1_headline_numbers():

@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, strategies as st
 
 from repro.core import spatial, workloads
-from repro.core.accel import BASELINE_2D, VOLTRA
+from repro.core.accel import VOLTRA
 from repro.core.workloads import Op
 
 dims = st.integers(min_value=1, max_value=4096)

@@ -1,0 +1,219 @@
+"""Paged flash-decode kernel: dense-MHA equivalence across page sizes,
+ragged per-request lengths, preemption-reshuffled block tables, int8
+pools, and an end-to-end engine check on the kernel path.
+
+The oracle chain: ops.paged_attention (in-kernel block-table gather) ==
+ref.paged_attention_ref (dense gather + masked softmax) == ref.mha_ref
+(plain dense attention on the contiguously laid-out cache). All
+comparisons are fp32-tolerance — the kernel's per-page online softmax
+reorders the accumulation vs the one-shot dense softmax, so bit equality
+is not the contract (see test_kv_cache.py for the exact-token bookkeeping
+tests, which pin the gather path)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator
+
+
+def _paged_case(key, B, H, KV, D, page, n_blocks, lengths, dtype=jnp.float32,
+                shuffle_key=None):
+    """Build (q, pools, block_table, dense_k, dense_v) where request b's
+    tokens 0..lengths[b]-1 are laid out contiguously in dense_k/v and
+    scattered page-by-page into the pools via a (optionally shuffled)
+    block table. Unowned table entries point at the scratch page."""
+    P = 1 + B * n_blocks                       # page 0 = scratch
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32).astype(dtype)
+    S = n_blocks * page
+    dense_k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    dense_v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    phys = np.arange(1, P, dtype=np.int32)
+    if shuffle_key is not None:
+        phys = np.asarray(jax.random.permutation(shuffle_key, phys))
+    table = np.full((B, n_blocks), SCRATCH_PAGE, np.int32)
+    kp = np.zeros((P, page, KV, D), np.float32)
+    vp = np.zeros((P, page, KV, D), np.float32)
+    nxt = 0
+    for b in range(B):
+        for j in range(-(-int(lengths[b]) // page)):
+            pid = int(phys[nxt]); nxt += 1
+            table[b, j] = pid
+            kp[pid] = np.asarray(dense_k[b, j * page:(j + 1) * page])
+            vp[pid] = np.asarray(dense_v[b, j * page:(j + 1) * page])
+    return (q, jnp.asarray(kp).astype(dtype), jnp.asarray(vp).astype(dtype),
+            jnp.asarray(table), dense_k.astype(dtype), dense_v.astype(dtype))
+
+
+@pytest.mark.parametrize("page", [8, 16, 64])
+def test_matches_dense_mha_across_page_sizes(page):
+    """Kernel output == plain dense MHA over the contiguous cache, for
+    every page size the serving engine uses."""
+    B, H, KV, D, n_blocks = 3, 8, 2, 32, 128 // page
+    lengths = [5, 97, 128][:B]
+    lengths = [min(n, n_blocks * page) for n in lengths]
+    q, kp, vp, table, dk, dv = _paged_case(
+        jax.random.key(page), B, H, KV, D, page, n_blocks, lengths)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths))
+    for b in range(B):
+        want = ref.mha_ref(q[b][None, None], dk[b][None], dv[b][None],
+                           causal=False, kv_valid=lengths[b])[0, 0]
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(want),
+                                   rtol=3e-3, atol=3e-3)
+
+
+def test_ragged_lengths_ignore_pool_garbage():
+    """Positions past each request's length — including whole scratch-page
+    blocks — must contribute zero probability mass."""
+    B, H, KV, D, page, n_blocks = 4, 4, 4, 16, 8, 4
+    lengths = [1, 7, 9, 32]
+    key = jax.random.key(1)
+    q, kp, vp, table, dk, dv = _paged_case(key, B, H, KV, D, page, n_blocks,
+                                           lengths)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths))
+    # poison everything the lengths say is dead: unwritten pool rows AND
+    # the scratch page; output must not move at all
+    kp2 = kp.at[SCRATCH_PAGE].set(1e4)
+    vp2 = vp.at[SCRATCH_PAGE].set(1e4)
+    for b, n in enumerate(lengths):
+        blk, off = n // page, n % page
+        if off:
+            kp2 = kp2.at[table[b, blk], off:].set(1e4)
+            vp2 = vp2.at[table[b, blk], off:].set(1e4)
+    got2 = ops.paged_attention(q, kp2, vp2, table, jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+
+
+def test_preemption_reshuffled_block_table():
+    """After preempt + resume the allocator hands back DIFFERENT physical
+    pages (LIFO free list); same logical contents under a reshuffled
+    table must give identical outputs."""
+    B, H, KV, D, page, n_blocks = 3, 6, 3, 16, 8, 4
+    lengths = [9, 17, 25]
+    key = jax.random.key(2)
+    q, kp1, vp1, t1, _, _ = _paged_case(key, B, H, KV, D, page, n_blocks,
+                                        lengths)
+    q2, kp2, vp2, t2, _, _ = _paged_case(key, B, H, KV, D, page, n_blocks,
+                                         lengths,
+                                         shuffle_key=jax.random.key(3))
+    assert not np.array_equal(np.asarray(t1), np.asarray(t2))
+    a = ops.paged_attention(q, kp1, vp1, t1, jnp.asarray(lengths))
+    b = ops.paged_attention(q2, kp2, vp2, t2, jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_allocator_tables_drive_kernel():
+    """Reuse the PageAllocator harness: allocate/extend/free/re-allocate,
+    then run the kernel on the resulting (fragmented) tables."""
+    page, n_blocks = 8, 4
+    B, H, KV, D = 2, 4, 2, 16
+    a = PageAllocator(2 * n_blocks, page)
+    a.allocate(0, 12)                 # 2 pages
+    a.allocate(1, 20)                 # 3 pages
+    a.free_request(0)                 # rid 0 preempted
+    a.allocate(2, 10)                 # resumes into rid 0's LIFO'd pages
+    a.check_no_aliasing()
+    lengths = [a.tokens(2), a.tokens(1)]
+    rows = np.full((B, n_blocks), SCRATCH_PAGE, np.int32)
+    for i, rid in enumerate((2, 1)):
+        t = a.block_table(rid)
+        rows[i, :len(t)] = t
+    key = jax.random.key(4)
+    kp = jax.random.normal(key, (1 + 2 * n_blocks, page, KV, D), jnp.float32)
+    vp = jax.random.normal(jax.random.key(5), kp.shape, jnp.float32)
+    q = jax.random.normal(jax.random.key(6), (B, H, D), jnp.float32)
+    got = ops.paged_attention(q, kp, vp, jnp.asarray(rows),
+                              jnp.asarray(lengths))
+    want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(rows),
+                                   jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_int8_pool_dequant_in_kernel():
+    B, H, KV, D, page, n_blocks = 2, 8, 2, 32, 16, 2
+    lengths = [13, 32]
+    q, kp, vp, table, _, _ = _paged_case(jax.random.key(7), B, H, KV, D,
+                                         page, n_blocks, lengths)
+    scale = 8.0
+    kq = jnp.clip(jnp.round(kp * 127 / scale), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(vp * 127 / scale), -127, 127).astype(jnp.int8)
+    got = ops.paged_attention(q, kq, vq, table, jnp.asarray(lengths),
+                              kv_scale=scale)
+    want = ref.paged_attention_ref(q, kq, vq, table, jnp.asarray(lengths),
+                                   kv_scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    page=st.sampled_from([8, 16]),
+    n_blocks=st.integers(min_value=1, max_value=4),
+    kv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    data=st.data(),
+)
+def test_property_kernel_matches_ref(page, n_blocks, kv, group, seed, data):
+    """Property: for random shapes, tables and ragged lengths, the kernel
+    matches the dense-gather oracle to fp32 tolerance. Skips cleanly when
+    hypothesis is absent (tests/conftest.py stub)."""
+    B, D = 2, 16
+    lengths = [data.draw(st.integers(min_value=1,
+                                     max_value=page * n_blocks))
+               for _ in range(B)]
+    q, kp, vp, table, _, _ = _paged_case(
+        jax.random.key(seed), B, kv * group, kv, D, page, n_blocks, lengths,
+        shuffle_key=jax.random.key(seed + 1))
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths))
+    want = ref.paged_attention_ref(q, kp, vp, table, jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the serving engine on the kernel path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_kernel_engine_matches_dense_engine_fp32():
+    """With float32 weights the accumulation-order wobble is ~1e-6, far
+    below any logit gap — so the kernel-path engine must reproduce the
+    dense engine's greedy tokens exactly, through admission, page growth,
+    preemption and resume."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models import api
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import (DenseServingEngine,
+                                       PagedServingEngine, Request)
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-3b"),
+                              dtype="float32")
+    params = api.init_params(cfg, jax.random.key(0))
+
+    def mk():
+        return [Request(rid=0, prompt=[5, 4, 3, 2, 1, 6, 7], max_new=8),
+                Request(rid=1, prompt=[1, 2, 3, 4, 5, 6], max_new=8)]
+
+    dense = DenseServingEngine(cfg, params, slots=2, max_len=32)
+    want = {r.rid: r.generated
+            for r in dense.run_to_completion(mk(), max_steps=60)}
+
+    eng = PagedServingEngine(cfg, params, slots=2, max_len=32, page_size=4,
+                             num_pages=4, attn_impl="kernel")
+    reqs = mk()
+    sched = Scheduler(eng)
+    for r in reqs:
+        sched.add(r)
+    sched.drain(max_steps=400)
+    assert sched.preempted >= 1          # the pool is sized to force it
+    assert {r.rid: r.generated for r in reqs} == want
+    eng.alloc.check_no_aliasing()
+    assert eng.alloc.allocated_pages == 0

@@ -1,7 +1,6 @@
 """Serving: prefill/decode consistency with the full forward pass, and the
 slot-based continuous-batching engine."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
