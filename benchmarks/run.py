@@ -40,6 +40,10 @@ def main() -> None:
                     help="tiny shapes for suites that support it (CI)")
     ap.add_argument("--out", default=None,
                     help="also write the CSV output to this file")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed for suites that generate random "
+                         "traffic (serve): same seed -> same trace, so "
+                         "CI CSV artifacts diff cleanly run-to-run")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
     t0 = time.time()
@@ -51,6 +55,8 @@ def main() -> None:
         kwargs = {}
         if args.smoke and "smoke" in inspect.signature(fn).parameters:
             kwargs["smoke"] = True
+        if "seed" in inspect.signature(fn).parameters:
+            kwargs["seed"] = args.seed
         print(f"# === {name} ===", flush=True)
         csv = emit(fn(**kwargs))
         chunks.append(f"# === {name} ===\n{csv}\n")

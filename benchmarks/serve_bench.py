@@ -1,8 +1,11 @@
 """Serving engine benchmark: paged (in-kernel vs dense-gather decode
-attention) vs the seed dense-slot engine.
+attention) vs the seed dense-slot engine, plus the prefix-sharing scenario.
 
-A mixed-length request trace (every prompt a different length — the
-production case the dense engine handles worst) is replayed through three
+Two scenarios, both generated deterministically from ``--seed`` so the CI
+bench-smoke CSV artifacts are comparable run-to-run:
+
+**mixed** — a mixed-length request trace (every prompt a different length —
+the production case the dense engine handles worst) replayed through three
 engines on the same model/params: the dense-slot baseline, the paged
 engine with the PR-1 per-layer ``pool[block_table]`` dense gather
 (``attn_impl="gather"``), and the paged engine with the Pallas flash-
@@ -32,13 +35,25 @@ decode kernel that performs the block-table gather inside the kernel
   keeps one (page, KV, D) K/V tile resident (the paper's separated-vs-
   shared memory access cost, measured at the serving level)
 
+**shared-prefix** — every request opens with the same system prompt
+(the "millions of users" overlap pattern); the paged[kernel] engine runs
+WITHOUT and WITH the prefix cache (``runtime/prefix_cache.py``). Extra
+columns: ``prefill_tokens`` (actually computed — the FLOPs proxy, since
+prefill compute is linear in prefilled tokens for fixed model),
+``prefill_saved_frac``, ``prefix_hit_rate`` / ``shared_token_frac``
+(radix-tree telemetry), and ``peak_kv_tokens`` now reflects refcounted
+page reuse. The ``prefix/noshare`` ratio row is the paper-style claim:
+prefill compute and peak paging, sharing vs private.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen2.5-3b]
+      [--seed 0] [--scenario mixed|shared-prefix|all]
 """
 from __future__ import annotations
 
 import argparse
+import random
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 
@@ -50,24 +65,40 @@ from repro.runtime.serving import (DenseServingEngine, PagedServingEngine,
                                    Request)
 
 
-def _trace(cfg, n_requests: int, max_new: int) -> List[Request]:
+def _trace(cfg, n_requests: int, max_new: int, seed: int) -> List[Request]:
     """Mixed-length trace: all prompt lengths distinct (3, 8, 13, ...),
-    spanning several power-of-two buckets."""
+    spanning several power-of-two buckets; token ids drawn from the seeded
+    rng so the trace is identical for identical seeds."""
+    rng = random.Random(seed)
     return [Request(rid=i,
-                    prompt=[(13 * i + j) % cfg.vocab
-                            for j in range(3 + 5 * i)],
+                    prompt=[rng.randrange(cfg.vocab)
+                            for _ in range(3 + 5 * i)],
                     max_new=max_new)
             for i in range(n_requests)]
 
 
-def _warm(engine, cfg, n_requests: int) -> None:
+def _shared_trace(cfg, n_requests: int, max_new: int, seed: int,
+                  sys_len: int) -> List[Request]:
+    """Shared-system-prompt trace: every request = the same ``sys_len``
+    token system prompt + a short per-request tail (deterministic in
+    ``seed``)."""
+    rng = random.Random(seed)
+    sys_prompt = [rng.randrange(cfg.vocab) for _ in range(sys_len)]
+    return [Request(rid=i,
+                    prompt=sys_prompt + [rng.randrange(cfg.vocab)
+                                         for _ in range(2 + i % 5)],
+                    max_new=max_new)
+            for i in range(n_requests)]
+
+
+def _warm(engine, mk_trace) -> None:
     """Compile-warm the engine: replay the trace's prompt lengths (covers
     every prefill trace/bucket for dense AND paged) with max_new=2 for a
     couple of decode steps, so the timed replay measures steady-state
     serving rather than jit tracing — the number a capacity planner
     wants is the warm one."""
     sched = Scheduler(engine)
-    for r in _trace(cfg, n_requests, 2):
+    for r in mk_trace(2):
         sched.add(r)
     sched.drain(max_steps=1000)
     # warmup compiled + ran; zero the telemetry the timed replay reports
@@ -75,6 +106,14 @@ def _warm(engine, cfg, n_requests: int) -> None:
     engine.decoded_tokens = 0
     engine.step_wall_s = 0.0
     engine.first_token_at.clear()
+    if isinstance(engine, PagedServingEngine):
+        engine.prompt_tokens = 0
+        engine.prefilled_tokens = 0
+        engine.cow_copies = 0
+        if engine.prefix is not None:
+            # keep the warmed radix tree (steady-state cache) but zero the
+            # hit counters so the timed replay's telemetry is its own
+            engine.prefix.reset_hit_counters()
 
 
 def _attn_peak_live_bytes(cfg, engine) -> int:
@@ -92,20 +131,22 @@ def _attn_peak_live_bytes(cfg, engine) -> int:
     return 2 * engine.slots * engine.max_len * kv * hd * 2
 
 
-def _drive(engine, reqs: List[Request], max_steps: int, cfg) -> Dict:
+def _drive(engine, reqs: List[Request], max_steps: int, cfg,
+           name: Optional[str] = None) -> Dict:
     sched = Scheduler(engine)
     for r in reqs:
         sched.add(r)
     t0 = time.perf_counter()
-    sched.drain(max_steps=max_steps)
+    sched.drain(max_steps=max_steps, on_exhaust="warn")
     wall = time.perf_counter() - t0
     done = [r for r in reqs if r.done]
     toks = sum(len(r.generated) for r in done)
     ttfts = [engine.first_token_at[r.rid] - t0 for r in done
              if r.rid in engine.first_token_at]
-    name = type(engine).__name__
-    if isinstance(engine, PagedServingEngine):
-        name += f"[{engine.attn_impl}]"
+    if name is None:
+        name = type(engine).__name__
+        if isinstance(engine, PagedServingEngine):
+            name += f"[{engine.attn_impl}]"
     row = {
         "engine": name,
         "requests_done": len(done),
@@ -116,6 +157,7 @@ def _drive(engine, reqs: List[Request], max_steps: int, cfg) -> Dict:
         "trace_tok_s": toks / wall if wall else 0.0,
         "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
         "prefill_traces": engine.prefill_traces,
+        "sched_exhausted": int(sched.exhausted),
     }
     if isinstance(engine, PagedServingEngine):
         st = engine.pool_stats()
@@ -129,24 +171,20 @@ def _drive(engine, reqs: List[Request], max_steps: int, cfg) -> Dict:
     return row
 
 
-def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
-        n_requests: int = 12, max_new: int = 8,
-        smoke: bool = False) -> List[Dict]:
-    if smoke:       # decode-heavy but small: seconds, not minutes, with
-        # enough steps that decode_tok_s isn't measuring scheduler noise
-        slots, max_len, n_requests, max_new = 2, 128, 4, 24
-    cfg = get_smoke_config(arch)
-    params = api.init_params(cfg, jax.random.key(0))
+def _run_mixed(cfg, params, slots, max_len, n_requests, max_new,
+               seed) -> List[Dict]:
+    def mk(new):
+        return _trace(cfg, n_requests, new, seed)
+
     rows = []
     dense = DenseServingEngine(cfg, params, slots=slots, max_len=max_len)
-    _warm(dense, cfg, n_requests)
-    rows.append(_drive(dense, _trace(cfg, n_requests, max_new), 4000, cfg))
+    _warm(dense, mk)
+    rows.append(_drive(dense, mk(max_new), 4000, cfg))
     for impl in ("gather", "kernel"):
         paged = PagedServingEngine(cfg, params, slots=slots,
                                    max_len=max_len, attn_impl=impl)
-        _warm(paged, cfg, n_requests)
-        rows.append(_drive(paged, _trace(cfg, n_requests, max_new), 4000,
-                           cfg))
+        _warm(paged, mk)
+        rows.append(_drive(paged, mk(max_new), 4000, cfg))
     d, g, k = rows[0], rows[1], rows[2]
 
     def ratio_row(name: str, base: Dict) -> Dict:
@@ -173,6 +211,69 @@ def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
     return rows
 
 
+def _run_shared_prefix(cfg, params, slots, max_len, n_requests, max_new,
+                       seed, sys_len) -> List[Dict]:
+    def mk(new):
+        return _shared_trace(cfg, n_requests, new, seed, sys_len)
+
+    rows = []
+    for share, name in ((False, "paged[kernel,noshare]"),
+                        (True, "paged[kernel,prefix]")):
+        eng = PagedServingEngine(cfg, params, slots=slots, max_len=max_len,
+                                 attn_impl="kernel", prefix_cache=share)
+        _warm(eng, mk)
+        row = _drive(eng, mk(max_new), 4000, cfg, name=name)
+        ps = eng.prefix_stats()
+        row["prefill_tokens"] = int(ps["prefilled_tokens"])
+        row["prefill_saved_frac"] = ps["prefill_saved_frac"]
+        row["prefix_hit_rate"] = ps.get("hit_rate", 0.0)
+        row["shared_token_frac"] = ps.get("shared_token_frac", 0.0)
+        row["cow_copies"] = int(ps["cow_copies"])
+        rows.append(row)
+    base, pref = rows
+    rows.append({
+        "engine": "prefix/noshare",
+        "requests_done": pref["requests_done"] - base["requests_done"],
+        "tokens": pref["tokens"] - base["tokens"],
+        "wall_s": base["wall_s"] / pref["wall_s"] if pref["wall_s"] else 0.0,
+        "trace_tok_s": pref["trace_tok_s"] / base["trace_tok_s"]
+        if base["trace_tok_s"] else 0.0,
+        "ttft_mean_s": base["ttft_mean_s"] / pref["ttft_mean_s"]
+        if pref["ttft_mean_s"] else 0.0,
+        # the two headline savings: prefill compute (token-linear FLOPs
+        # proxy) and peak physical paging, sharing vs no sharing
+        "prefill_tokens": pref["prefill_tokens"] - base["prefill_tokens"],
+        "prefill_saved_frac": 1.0 - (pref["prefill_tokens"]
+                                     / base["prefill_tokens"])
+        if base["prefill_tokens"] else 0.0,
+        "peak_kv_tokens": pref["peak_kv_tokens"] - base["peak_kv_tokens"],
+        "kv_util_vs_dense": pref["kv_util_vs_dense"],
+        "prefix_hit_rate": pref["prefix_hit_rate"],
+        "shared_token_frac": pref["shared_token_frac"],
+    })
+    return rows
+
+
+def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
+        n_requests: int = 12, max_new: int = 8, smoke: bool = False,
+        seed: int = 0, scenario: str = "all",
+        sys_len: int = 48) -> List[Dict]:
+    if smoke:       # decode-heavy but small: seconds, not minutes, with
+        # enough steps that decode_tok_s isn't measuring scheduler noise
+        slots, max_len, n_requests, max_new = 2, 128, 4, 24
+        sys_len = 24
+    cfg = get_smoke_config(arch)
+    params = api.init_params(cfg, jax.random.key(0))
+    rows: List[Dict] = []
+    if scenario in ("mixed", "all"):
+        rows += _run_mixed(cfg, params, slots, max_len, n_requests,
+                           max_new, seed)
+    if scenario in ("shared-prefix", "all"):
+        rows += _run_shared_prefix(cfg, params, slots, max_len,
+                                   n_requests, max_new, seed, sys_len)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
@@ -180,11 +281,19 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace-generation seed (same seed -> same trace, "
+                         "so CI CSV artifacts are comparable run-to-run)")
+    ap.add_argument("--scenario", choices=["mixed", "shared-prefix", "all"],
+                    default="all")
+    ap.add_argument("--sys-len", type=int, default=48,
+                    help="shared system-prompt length for shared-prefix")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace (seconds): CI per-PR regression signal")
     args = ap.parse_args()
     rows = run(args.arch, args.slots, args.max_len, args.requests,
-               args.max_new, smoke=args.smoke)
+               args.max_new, smoke=args.smoke, seed=args.seed,
+               scenario=args.scenario, sys_len=args.sys_len)
     print(emit(rows))
 
 

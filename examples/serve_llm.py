@@ -2,11 +2,14 @@
 
 Demonstrates: bucketed prefill -> paged cache install -> batched decode ->
 continuous batching (more requests than slots) with allocate-on-demand
-pages, plus throughput and KV-pool utilization stats. Recurrent archs
-(mamba2, recurrentgemma) transparently fall back to the dense-slot engine.
+pages, plus throughput and KV-pool utilization stats. Every request opens
+with the same "system prompt", so --prefix-cache shows cross-request KV
+sharing (radix-tree match, refcounted pages, suffix-only prefill).
+Recurrent archs (mamba2, recurrentgemma) transparently fall back to the
+dense-slot engine.
 
   PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
-           [--slots 4] [--requests 8] [--max-new 16]
+           [--slots 4] [--requests 8] [--max-new 16] [--prefix-cache]
 """
 import argparse
 import time
@@ -30,6 +33,9 @@ def main() -> None:
                     default="kernel",
                     help="decode attention: in-kernel block-table gather "
                          "(Pallas flash-decode) or the dense-gather baseline")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share the common system-prompt KV across "
+                         "requests (refcounted copy-on-write pages)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -39,11 +45,13 @@ def main() -> None:
     eng = ServingEngine(cfg, params, slots=args.slots, max_len=128,
                         page_size=args.page_size,
                         temperature=args.temperature,
-                        attn_impl=args.paged_attn)
+                        attn_impl=args.paged_attn,
+                        prefix_cache=args.prefix_cache)
     print(f"[serve] engine: {type(eng).__name__}")
 
-    reqs = [Request(rid=i, prompt=[(7 * i + j) % cfg.vocab
-                                   for j in range(5 + i % 7)],
+    sys_prompt = [(3 * j + 1) % cfg.vocab for j in range(2 * args.page_size)]
+    reqs = [Request(rid=i, prompt=sys_prompt + [(7 * i + j) % cfg.vocab
+                                                for j in range(5 + i % 7)],
                     max_new=args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
@@ -59,6 +67,13 @@ def main() -> None:
               f"{st.peak_pages}/{st.num_pages} pages "
               f"({st.peak_pages * st.page_size} tokens reserved at peak vs "
               f"{st.dense_equiv_tokens} dense-slot)")
+        if eng.prefix is not None:
+            ps = eng.prefix_stats()
+            print(f"[serve] prefix cache: {ps['shared_token_frac']:.0%} of "
+                  f"prompt tokens reused from cache "
+                  f"({ps['prefill_tokens_saved']:.0f} prefill tokens "
+                  f"saved, {ps['cow_copies']:.0f} CoW copies, "
+                  f"{ps['cached_pages']:.0f} pages cached)")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt {r.prompt[:4]}... -> "
               f"{r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")

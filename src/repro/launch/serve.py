@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       [--slots 4] [--requests 8] [--max-new 12] [--engine paged|dense] \
-      [--page-size 16] [--num-pages N] [--paged-attn kernel|gather]
+      [--page-size 16] [--num-pages N] [--paged-attn kernel|gather] \
+      [--prefix-cache]
 
 Attention-only stacks default to the paged KV-cache engine (continuous
 batching over a shared page pool, bucketed prefill); recurrent stacks fall
@@ -40,6 +41,10 @@ def main() -> None:
                     help="paged decode attention: in-kernel block-table "
                          "gather (Pallas flash-decode) or the PR-1 dense "
                          "pool gather baseline")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share KV pages across requests with a common "
+                         "prompt prefix (radix tree + refcounted "
+                         "copy-on-write pages; paged engine only)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -53,14 +58,21 @@ def main() -> None:
     elif args.engine == "paged":
         eng = PagedServingEngine(cfg, params, page_size=args.page_size,
                                  num_pages=args.num_pages,
-                                 attn_impl=args.paged_attn, **common)
+                                 attn_impl=args.paged_attn,
+                                 prefix_cache=args.prefix_cache, **common)
     else:
         eng = ServingEngine(cfg, params, page_size=args.page_size,
                             num_pages=args.num_pages,
-                            attn_impl=args.paged_attn, **common)
+                            attn_impl=args.paged_attn,
+                            prefix_cache=args.prefix_cache, **common)
     print(f"[launch.serve] engine: {type(eng).__name__}")
+    # production-shaped traffic: every request opens with the same system
+    # prompt (what --prefix-cache shares), tails vary in length (what the
+    # paged engine's buckets absorb)
+    sys_prompt = [(5 * j + 2) % cfg.vocab for j in range(2 * args.page_size)]
     reqs = [Request(rid=i,
-                    prompt=[(11 * i + j) % cfg.vocab for j in range(4 + i % 5)],
+                    prompt=sys_prompt
+                    + [(11 * i + j) % cfg.vocab for j in range(4 + i % 5)],
                     max_new=args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
@@ -74,6 +86,13 @@ def main() -> None:
         print(f"[launch.serve] kv pages: peak {st.peak_pages}/{st.num_pages} "
               f"({st.peak_pages * st.page_size} tokens reserved at peak vs "
               f"{st.dense_equiv_tokens} dense)")
+        if eng.prefix is not None:
+            ps = eng.prefix_stats()
+            print(f"[launch.serve] prefix cache: hit rate "
+                  f"{ps['hit_rate']:.2f}, {ps['shared_token_frac']:.0%} of "
+                  f"prompt tokens served from cache, "
+                  f"{ps['prefill_tokens_saved']:.0f} prefill tokens saved, "
+                  f"{ps['cow_copies']:.0f} CoW copies")
 
 
 if __name__ == "__main__":

@@ -79,11 +79,20 @@ def _encode(cfg, params, enc_embeds, rules):
 
 def forward_hidden(cfg, params, batch: Dict[str, Any], *,
                    rules: Rules = NO_RULES, want_cache: bool = False,
-                   max_len=None):
+                   max_len=None, prefix_kv=None, prefix_len=None):
     """batch: {tokens [, frontend_embeds | enc_embeds]} -> (hidden, caches,
-    aux). Sequence layout for VLM: [frontend_embeds | token embeds]."""
+    aux). Sequence layout for VLM: [frontend_embeds | token embeds].
+
+    prefix_kv + prefix_len (traced scalar): `tokens` are the SUFFIX of a
+    request whose first prefix_len tokens' KV is being reused from the
+    paged pool (prefix sharing); positions and causal masks are offset
+    accordingly. Attention-only stacks only — recurrent state cannot be
+    reconstructed from cached KV."""
     kinds = tfm.pattern_for(cfg)
     _, tail = tfm.layer_plan(cfg)
+    if prefix_kv is not None:
+        assert set(kinds) <= set(PAGEABLE_KINDS), \
+            f"prefix reuse needs an attention-only stack, got {kinds}"
     x = _embed_tokens(cfg, params, batch["tokens"])
     if cfg.frontend == "patch" and "frontend_embeds" in batch:
         x = jnp.concatenate(
@@ -91,6 +100,8 @@ def forward_hidden(cfg, params, batch: Dict[str, Any], *,
     x = rules.cons(x, "batch,seq,embed")
     S = x.shape[1]
     positions = jnp.arange(S)[None, :]
+    if prefix_len is not None:
+        positions = positions + jnp.asarray(prefix_len, jnp.int32)
     enc_out = None
     if cfg.is_encdec:
         enc_out = _encode(cfg, params, batch["enc_embeds"].astype(x.dtype),
@@ -98,7 +109,8 @@ def forward_hidden(cfg, params, batch: Dict[str, Any], *,
     x, caches, aux = tfm.stack_apply(cfg, params["blocks"], x, kinds, tail,
                                      rules=rules, positions=positions,
                                      enc_out=enc_out, want_cache=want_cache,
-                                     max_len=max_len)
+                                     max_len=max_len, prefix_kv=prefix_kv,
+                                     prefix_len=prefix_len)
     x = norm_apply(params["final_norm"], x, cfg.norm)
     return x, caches, aux
 
@@ -173,7 +185,7 @@ def loss_fn(cfg, params, batch, *, rules: Rules = NO_RULES):
 
 
 def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None,
-            length=None):
+            length=None, prefix_kv=None, prefix_len=None):
     """Run the full prompt; returns (last_logits, cache, next_pos). Full-attn
     kv caches are padded out to `max_len` slots for subsequent decoding.
     Logits are computed for the LAST position only (the (B, S, vocab) tensor
@@ -186,9 +198,16 @@ def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None,
     serves every prompt length in the bucket (the serving engine's
     mixed-grained-prefetch analogue). Only valid for attention-only stacks:
     recurrent blocks (ssm/rglru) and windowed ring buffers carry padding
-    into their state, so those callers must pass exact-length tokens."""
+    into their state, so those callers must pass exact-length tokens.
+
+    prefix_kv + prefix_len (traced): suffix-only prefill — `tokens` and
+    `length` describe only the part of the prompt AFTER a prefix whose KV
+    is reused from the paged pool (see forward_hidden / prefix_cache.py).
+    The returned cache holds the suffix k/v only; returned pos counts
+    suffix tokens (callers add prefix_len)."""
     x, caches, _ = forward_hidden(cfg, params, batch, rules=rules,
-                                  want_cache=True, max_len=max_len)
+                                  want_cache=True, max_len=max_len,
+                                  prefix_kv=prefix_kv, prefix_len=prefix_len)
     B, S = x.shape[0], x.shape[1]
     if length is None:
         logits = _logits(cfg, params, x[:, -1:])[:, 0]

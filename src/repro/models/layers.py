@@ -295,9 +295,21 @@ def _qkv(cfg, p, x, kv_x=None):
 
 
 def attention_apply(cfg, p, x, *, rules: Rules = NO_RULES, positions=None,
-                    window: int = 0, cross_kv=None, causal: bool = True):
+                    window: int = 0, cross_kv=None, causal: bool = True,
+                    prefix=None):
     """Full-sequence attention (train/prefill). Returns (out, kv) so callers
-    can build caches. cross_kv=(k,v) for encoder-decoder cross attention."""
+    can build caches. cross_kv=(k,v) for encoder-decoder cross attention.
+
+    prefix=(pk, pv, plen): suffix-only prefill against a reused KV prefix
+    (prefix sharing, runtime/prefix_cache.py). ``x`` holds only the tokens
+    AFTER the shared prefix; pk/pv (B, Pb, KV, D, cache storage dtype) are
+    the prefix KV gathered from the paged pool, valid for the first
+    ``plen`` (traced) rows; ``positions`` must already be offset by plen.
+    The suffix k/v are spliced in at row plen, so buffer index == absolute
+    position for every real token and plain causal masking handles both
+    the prefix-buffer tail and the suffix bucket padding (garbage rows sit
+    at positions > every real query). Returned kv is the SUFFIX-only k/v —
+    exactly what the caller must scatter into its pages."""
     B, S, _ = x.shape
     if cross_kv is not None:
         q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
@@ -315,8 +327,22 @@ def attention_apply(cfg, p, x, *, rules: Rules = NO_RULES, positions=None,
         k = rope(k, positions, cfg.rope_theta)
         q = rules.cons(q, "batch,seq,heads")
         k = rules.cons(k, "batch,seq,kv_heads")
-        out = flash_attention(q, k, v, causal=causal, window=window,
-                              chunked=cfg.flash_chunking)
+        if prefix is not None:
+            pk, pv, plen = prefix
+            plen = jnp.asarray(plen, jnp.int32)
+            start = (jnp.int32(0), plen, jnp.int32(0), jnp.int32(0))
+            kf = jnp.concatenate([kv_dequant(cfg, pk, x.dtype),
+                                  jnp.zeros_like(k)], axis=1)
+            vf = jnp.concatenate([kv_dequant(cfg, pv, x.dtype),
+                                  jnp.zeros_like(v)], axis=1)
+            kf = jax.lax.dynamic_update_slice(kf, k, start)
+            vf = jax.lax.dynamic_update_slice(vf, v, start)
+            out = flash_attention(q, kf, vf, causal=causal, window=window,
+                                  q_offset=plen,
+                                  chunked=cfg.flash_chunking)
+        else:
+            out = flash_attention(q, k, v, causal=causal, window=window,
+                                  chunked=cfg.flash_chunking)
         kv = (k, v)
     out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
     return rules.cons(out, "batch,seq,embed"), kv

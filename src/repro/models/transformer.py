@@ -93,14 +93,17 @@ def _grow(cfg, kv, max_len):
 
 def block_apply(cfg, kind: str, p, x, *, rules: Rules = NO_RULES,
                 positions=None, enc_out=None, want_cache: bool = False,
-                max_len=None):
-    """Full-sequence block. Returns (x, cache_entry, aux)."""
+                max_len=None, prefix=None):
+    """Full-sequence block. Returns (x, cache_entry, aux). prefix=(pk, pv,
+    plen) switches full attention to suffix-only prefill against reused
+    prefix KV (layers.attention_apply); the cache entry then holds the
+    suffix k/v only."""
     aux = {}
     cache = None
     h = norm_apply(p["ln1"], x, cfg.norm)
     if kind in ("attn_mlp", "attn_moe", "dec"):
         a, kv = attention_apply(cfg, p["attn"], h, rules=rules,
-                                positions=positions)
+                                positions=positions, prefix=prefix)
         if want_cache:
             cache = _grow(cfg, kv, max_len)
     elif kind == "local_attn":
@@ -250,16 +253,28 @@ def _remat(cfg, fn):
 
 
 def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
-                positions=None, enc_out=None, want_cache=False, max_len=None):
-    """Returns (x, caches, aux_sum). caches: {"scan": {j: stacked}, "tail": [..]}"""
+                positions=None, enc_out=None, want_cache=False, max_len=None,
+                prefix_kv=None, prefix_len=None):
+    """Returns (x, caches, aux_sum). caches: {"scan": {j: stacked}, "tail": [..]}
 
-    def body(carry, pslice):
+    prefix_kv (same tree shape as the caches: {"scan": {j: {"k","v"}},
+    "tail": [{"k","v"}]}, scan entries stacked (L, B, Pb, KV, D)) +
+    prefix_len switch every full-attention block to suffix-only prefill
+    against that reused KV; the per-layer slices ride the layer scan
+    alongside the params."""
+
+    def body(carry, sl):
         h, aux_acc = carry
+        pslice, pfx = sl if prefix_kv is not None else (sl, None)
         caches = {}
         for j, kd in enumerate(kinds):
+            pref = None
+            if pfx is not None and kd in ("attn_mlp", "attn_moe"):
+                pref = (pfx[str(j)]["k"], pfx[str(j)]["v"], prefix_len)
             h, c, aux = block_apply(cfg, kd, pslice[str(j)], h, rules=rules,
                                     positions=positions, enc_out=enc_out,
-                                    want_cache=want_cache, max_len=max_len)
+                                    want_cache=want_cache, max_len=max_len,
+                                    prefix=pref)
             caches[str(j)] = c if c is not None else 0
             for k, v in aux.items():
                 aux_acc[k] = aux_acc.get(k, 0.0) + v
@@ -269,15 +284,22 @@ def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
             "z_loss": jnp.zeros((), jnp.float32)}
     n_super = jax.tree.leaves(params["scan"])[0].shape[0] if params["scan"] else 0
     if n_super:
+        xs = params["scan"] if prefix_kv is None \
+            else (params["scan"], prefix_kv["scan"])
         (x, aux0), scan_caches = jax.lax.scan(_remat(cfg, body), (x, aux0),
-                                              params["scan"])
+                                              xs)
     else:
         scan_caches = {}
     tail_caches = []
-    for tp, kd in zip(params["tail"], tail):
+    for t, (tp, kd) in enumerate(zip(params["tail"], tail)):
+        pref = None
+        if prefix_kv is not None and kd in ("attn_mlp", "attn_moe"):
+            e = prefix_kv["tail"][t]
+            pref = (e["k"], e["v"], prefix_len)
         x, c, aux = block_apply(cfg, kd, tp, x, rules=rules,
                                 positions=positions, enc_out=enc_out,
-                                want_cache=want_cache, max_len=max_len)
+                                want_cache=want_cache, max_len=max_len,
+                                prefix=pref)
         tail_caches.append(c if c is not None else 0)
         for k, v in aux.items():
             aux0[k] = aux0.get(k, 0.0) + v

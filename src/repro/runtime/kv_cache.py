@@ -1,4 +1,5 @@
-"""Paged KV-cache bookkeeping: fixed-size pages, per-request block tables.
+"""Paged KV-cache bookkeeping: fixed-size pages, per-request block tables,
+refcounted sharing.
 
 The software analogue of Voltra's dynamic shared-memory allocation
 (PAPER.md): instead of giving every batch slot a dense ``max_len`` cache
@@ -8,6 +9,15 @@ live tokens need — allocated on demand as decode crosses page boundaries
 and reclaimed the moment the request finishes. Utilization counters mirror
 the paper's temporal-utilization measurement: live tokens over allocated
 capacity, vs. the dense baseline's ``slots * max_len``.
+
+Since PR 3 pages are **refcounted**, not unique-owner: several requests'
+block tables may point at the same physical page (prefix sharing,
+``runtime/prefix_cache.py``), and the prefix cache itself holds a pin
+(+1 ref) on every page it keeps in its radix tree. A page returns to the
+free list only when its refcount reaches zero — i.e. no live table and no
+cache pin references it. The share/copy-on-write discipline (who may
+*write* a page) is enforced one level up, in the serving engine: a page
+is writable only while exactly one table holds it and it is not pinned.
 
 This module is host-side only (no jax import): the allocator hands out
 *physical page ids*; the device-side pools and gathers live in
@@ -23,13 +33,14 @@ out by ``kv_valid`` (= per-request token count) on the read side.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 SCRATCH_PAGE = 0
 
 
 class PageAllocator:
-    """Free-list page allocator with per-request block tables.
+    """Free-list page allocator with per-request block tables and per-page
+    refcounts.
 
     ``num_pages`` counts *usable* pages; one extra scratch page (id 0) is
     implicit, so physical ids run 0..num_pages (inclusive) and the device
@@ -44,8 +55,11 @@ class PageAllocator:
         self._free: List[int] = list(range(num_pages, 0, -1))
         self._tables: Dict[int, List[int]] = {}   # rid -> physical pages
         self._tokens: Dict[int, int] = {}         # rid -> live token count
+        self._ref: Dict[int, int] = {}            # page -> refcount (>0)
+        self._pinned: Set[int] = set()            # prefix-cache pins (+1 ref)
         self.peak_pages = 0                        # high-water mark
         self.alloc_events = 0                      # pages handed out, total
+        self.share_events = 0                      # table refs to shared pages
 
     # -- queries ----------------------------------------------------------
     @property
@@ -57,12 +71,24 @@ class PageAllocator:
         return self.num_pages - len(self._free)
 
     @property
+    def cached_idle_pages(self) -> int:
+        """Pages held *only* by the prefix cache (evictable on pressure)."""
+        return sum(1 for p in self._pinned if self._ref[p] == 1)
+
+    @property
     def live_tokens(self) -> int:
         return sum(self._tokens.values())
 
     @property
     def live_requests(self) -> int:
         return len(self._tables)
+
+    def ref(self, page: int) -> int:
+        """Current refcount of ``page`` (0 = free)."""
+        return self._ref.get(page, 0)
+
+    def is_pinned(self, page: int) -> bool:
+        return page in self._pinned
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` (>= 1 page once admitted)."""
@@ -78,22 +104,54 @@ class PageAllocator:
         return self._tokens[rid]
 
     def utilization(self) -> float:
-        """Live tokens over allocated page capacity (1.0 = no slack)."""
+        """Live tokens over allocated page capacity (1.0 = no slack; can
+        EXCEED 1.0 once prefix sharing lets several requests' logical
+        tokens occupy one physical page)."""
         cap = self.allocated_pages * self.page_size
         return self.live_tokens / cap if cap else 1.0
 
     # -- lifecycle --------------------------------------------------------
+    def _pop_free(self) -> int:
+        page = self._free.pop()
+        self._ref[page] = 1
+        self.alloc_events += 1
+        return page
+
+    def _decref(self, page: int) -> bool:
+        """Drop one reference; returns True if the page became free."""
+        n = self._ref[page] - 1
+        if n:
+            self._ref[page] = n
+            return False
+        del self._ref[page]
+        self._free.append(page)
+        return True
+
     def allocate(self, rid: int, n_tokens: int) -> Optional[List[int]]:
         """Admit ``rid`` with ``n_tokens`` live tokens. Returns its block
         table, or None (state unchanged) if the pool can't cover it."""
+        return self.allocate_shared(rid, n_tokens, [])
+
+    def allocate_shared(self, rid: int, n_tokens: int,
+                        shared: List[int]) -> Optional[List[int]]:
+        """Admit ``rid`` reusing ``shared`` (already-allocated prefix pages,
+        in block order) and allocating fresh pages for the remainder.
+        Returns the block table ``shared + fresh`` with every shared page's
+        refcount incremented, or None (state unchanged — no refs taken) if
+        the free list can't cover the fresh part."""
         assert rid not in self._tables, f"rid {rid} already admitted"
         need = self.pages_for(n_tokens)
-        if need > len(self._free):
+        assert len(shared) <= need, "shared prefix longer than the request"
+        fresh_n = need - len(shared)
+        if fresh_n > len(self._free):
             return None
-        pages = [self._free.pop() for _ in range(need)]
+        for p in shared:
+            assert p in self._ref, f"shared page {p} is not allocated"
+            self._ref[p] += 1
+        self.share_events += len(shared)
+        pages = list(shared) + [self._pop_free() for _ in range(fresh_n)]
         self._tables[rid] = pages
         self._tokens[rid] = n_tokens
-        self.alloc_events += need
         self.peak_pages = max(self.peak_pages, self.allocated_pages)
         return list(pages)
 
@@ -102,7 +160,7 @@ class PageAllocator:
 
         Returns the newly allocated physical page id if a page boundary was
         crossed, 0 if the current pages already cover it, or None if the
-        pool is exhausted (state unchanged — caller preempts)."""
+        pool is exhausted (state unchanged — caller evicts or preempts)."""
         assert rid in self._tables
         need = self.pages_for(n_tokens)
         have = len(self._tables[rid])
@@ -112,33 +170,90 @@ class PageAllocator:
             return 0
         if not self._free:
             return None
-        page = self._free.pop()
+        page = self._pop_free()
         self._tables[rid].append(page)
         self._tokens[rid] = n_tokens
-        self.alloc_events += 1
         self.peak_pages = max(self.peak_pages, self.allocated_pages)
         return page
 
+    def replace_page(self, rid: int, block: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write swap: give ``rid`` a fresh private page in table
+        slot ``block``, dropping its reference to the page currently there.
+        Returns (old_page, new_page) — the caller must copy the device
+        contents old -> new and update the device table — or None if no
+        free page is available (state unchanged)."""
+        table = self._tables[rid]
+        assert 0 <= block < len(table)
+        if not self._free:
+            return None
+        old = table[block]
+        new = self._pop_free()
+        table[block] = new
+        self._decref(old)
+        self.peak_pages = max(self.peak_pages, self.allocated_pages)
+        return old, new
+
     def free_request(self, rid: int) -> int:
-        """Reclaim every page of ``rid``. Returns the number reclaimed."""
+        """Drop ``rid``'s reference to every page of its table. Returns the
+        number of pages that actually became free (shared / cache-pinned
+        pages survive their other references)."""
         pages = self._tables.pop(rid)
         del self._tokens[rid]
-        self._free.extend(reversed(pages))   # LIFO: reuse hottest first
-        return len(pages)
+        freed = 0
+        for p in reversed(pages):       # LIFO: reuse hottest first
+            freed += self._decref(p)
+        return freed
+
+    # -- prefix-cache pins -------------------------------------------------
+    def cache_pin(self, page: int) -> None:
+        """The prefix cache keeps ``page`` alive (+1 ref) while it sits in
+        the radix tree, so it survives its last owner finishing."""
+        assert page in self._ref, f"cannot pin free page {page}"
+        assert page not in self._pinned, f"page {page} already pinned"
+        self._ref[page] += 1
+        self._pinned.add(page)
+
+    def cache_unpin(self, page: int) -> bool:
+        """Drop the prefix-cache pin (eviction). Returns True if the page
+        became free (no live table was still referencing it)."""
+        self._pinned.discard(page)
+        return self._decref(page)
 
     # -- invariants (cheap; used by tests and debug asserts) --------------
-    def check_no_aliasing(self) -> None:
-        """No physical page appears in two live block tables or in both a
-        live table and the free list; scratch is never handed out."""
-        seen: Dict[int, int] = {}
+    def check(self) -> None:
+        """Shared-page-aware pool invariant: every allocated page's
+        refcount equals its table occurrences plus its cache pin; no page
+        is both free and referenced; scratch is never handed out; free +
+        allocated covers exactly the usable pages."""
+        occurrences: Dict[int, int] = {}
         for rid, pages in self._tables.items():
+            assert len(set(pages)) == len(pages), \
+                f"rid {rid} table repeats a page"
             for p in pages:
                 assert p != SCRATCH_PAGE, f"rid {rid} holds scratch page"
-                assert p not in seen, (
-                    f"page {p} aliased by rids {seen[p]} and {rid}")
-                seen[p] = rid
-        for p in self._free:
-            assert p not in seen, f"page {p} both free and owned"
+                occurrences[p] = occurrences.get(p, 0) + 1
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list repeats a page"
+        for p, n in self._ref.items():
+            assert p not in free, f"page {p} both free and referenced"
+            want = occurrences.get(p, 0) + (1 if p in self._pinned else 0)
+            assert n == want, (
+                f"page {p}: refcount {n} != {occurrences.get(p, 0)} table "
+                f"refs + {int(p in self._pinned)} pin")
+        for p in occurrences:
+            assert p in self._ref, f"page {p} in a table but not allocated"
+        for p in self._pinned:
+            assert p in self._ref, f"pinned page {p} not allocated"
+        assert len(free) + len(self._ref) == self.num_pages
+        assert SCRATCH_PAGE not in free and SCRATCH_PAGE not in self._ref
+
+    def check_no_aliasing(self) -> None:
+        """Pre-sharing spelling of ``check()`` (kept for callers that
+        predate refcounting): additionally asserts nothing is shared."""
+        self.check()
+        for p, n in self._ref.items():
+            pin = 1 if p in self._pinned else 0
+            assert n - pin <= 1, f"page {p} shared by {n - pin} tables"
 
 
 @dataclasses.dataclass
@@ -151,6 +266,8 @@ class PoolStats:
     live_tokens: int
     utilization: float
     dense_equiv_tokens: int    # what the dense engine would have reserved
+    cached_idle_pages: int = 0  # prefix-cache-only pages (evictable)
+    shared_page_refs: int = 0   # table refs served by sharing, lifetime
 
     @staticmethod
     def of(alloc: PageAllocator, slots: int, max_len: int) -> "PoolStats":
@@ -159,4 +276,6 @@ class PoolStats:
             allocated_pages=alloc.allocated_pages,
             peak_pages=alloc.peak_pages, live_tokens=alloc.live_tokens,
             utilization=alloc.utilization(),
-            dense_equiv_tokens=slots * max_len)
+            dense_equiv_tokens=slots * max_len,
+            cached_idle_pages=alloc.cached_idle_pages,
+            shared_page_refs=alloc.share_events)

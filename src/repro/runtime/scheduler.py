@@ -13,10 +13,16 @@ engine removes).
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from typing import Deque, Optional
 
 from repro.runtime.serving import Request
+
+
+class SchedulerExhausted(RuntimeError):
+    """drain() ran out of its step budget with work still in flight — the
+    engine is wedged or the budget was too small; outputs are truncated."""
 
 
 class Scheduler:
@@ -27,6 +33,7 @@ class Scheduler:
         self.steps = 0
         self.admitted = 0
         self.preempted = 0
+        self.exhausted = False          # drain hit its budget with work left
 
     def add(self, req: Request) -> None:
         self.pending.append(req)
@@ -57,7 +64,26 @@ class Scheduler:
                 self.pending.appendleft(r)
         self.steps += 1
 
-    def drain(self, max_steps: int = 10_000) -> None:
+    def drain(self, max_steps: int = 10_000, *,
+              on_exhaust: str = "raise") -> None:
+        """Tick until every request finishes or ``max_steps`` is spent.
+
+        Exhausting the budget with requests still pending/live used to
+        return silently — a wedged engine then looked like a short trace
+        with truncated outputs. Now it fails loudly: ``on_exhaust="raise"``
+        (default) raises SchedulerExhausted; ``"warn"`` emits a warning and
+        sets ``self.exhausted`` so telemetry consumers (benches) surface it."""
+        assert on_exhaust in ("raise", "warn")
         while (self.pending or self.engine.has_live()) \
                 and self.steps < max_steps:
             self.tick()
+        if self.pending or self.engine.has_live():
+            self.exhausted = True
+            live = sum(1 for r in getattr(self.engine, "live", [])
+                       if r is not None)
+            msg = (f"drain() exhausted its {max_steps}-step budget with "
+                   f"{len(self.pending)} pending and {live} live requests "
+                   f"— outputs are truncated")
+            if on_exhaust == "raise":
+                raise SchedulerExhausted(msg)
+            warnings.warn(msg, stacklevel=2)

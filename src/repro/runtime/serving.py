@@ -17,6 +17,14 @@ architecture (PAPER.md):
   budget bookkeeping on device and does ONE host sync per step (a single
   ``device_get`` of (tokens, done)), where the dense engine pays one sync
   per live slot per step.
+* **Prefix sharing** (``prefix_cache=True``) — concurrent requests with a
+  common prompt prefix (system prompts, few-shot templates, multi-turn
+  history) alias the SAME physical pages: admission takes the longest
+  cached prefix from a radix tree (``runtime/prefix_cache.py``), prefill
+  runs on the suffix only, and pages are refcounted with copy-on-write on
+  mid-page divergence and LRU eviction of idle cached pages under pool
+  pressure. Both decode attention impls work unchanged — block tables
+  already indirect through physical pages.
 
 ``DenseServingEngine`` is the seed engine, kept verbatim as the measured
 baseline (benchmarks/serve_bench.py) and as the serving path for stacks
@@ -38,6 +46,7 @@ from repro.models import api
 from repro.models import transformer as tfm
 from repro.parallel.sharding import NO_RULES, Rules
 from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PoolStats
+from repro.runtime.prefix_cache import PrefixCache
 
 
 @dataclasses.dataclass
@@ -77,6 +86,7 @@ def ServingEngine(cfg, params, **kwargs):
     kwargs.pop("page_size", None)
     kwargs.pop("num_pages", None)
     kwargs.pop("attn_impl", None)
+    kwargs.pop("prefix_cache", None)
     return DenseServingEngine(cfg, params, **kwargs)
 
 
@@ -92,7 +102,7 @@ class PagedServingEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  rules: Rules = NO_RULES, eos_id: int = -1,
                  temperature: float = 0.0, seed: int = 0,
-                 attn_impl: str = "kernel"):
+                 attn_impl: str = "kernel", prefix_cache: bool = False):
         if not _pageable(cfg):
             raise ValueError("paged serving needs an attention-only stack; "
                              "use DenseServingEngine")
@@ -118,6 +128,12 @@ class PagedServingEngine:
         usable = num_pages if num_pages is not None \
             else slots * self.max_blocks
         self.alloc = PageAllocator(usable, page_size)
+        # prefix sharing: radix tree over page-aligned token chunks mapping
+        # to refcounted physical pages (runtime/prefix_cache.py). Off by
+        # default: sharing keeps refcount-0 pages cached in the pool, which
+        # callers that meter allocated_pages must opt into.
+        self.prefix: Optional[PrefixCache] = \
+            PrefixCache(self.alloc) if prefix_cache else None
         # pool row 0 is the scratch page -> usable + 1 physical rows
         self.cache = api.paged_cache_init(cfg, slots, usable + 1, page_size)
         self.block_table = jnp.zeros((slots, self.max_blocks), jnp.int32)
@@ -138,9 +154,14 @@ class PagedServingEngine:
         self.decoded_tokens = 0
         self.step_wall_s = 0.0                # wall time inside step() only
         self.first_token_at: Dict[int, float] = {}
+        self.prompt_tokens = 0                # logical prompt tokens admitted
+        self.prefilled_tokens = 0             # tokens actually prefilled
+        self.cow_copies = 0                   # device page copies (CoW)
 
         self._step_fn = jax.jit(self._make_step())
         self._prefill_fn = jax.jit(self._make_prefill())
+        self._prefill_shared_fn = jax.jit(self._make_prefill_shared())
+        self._cow_fn = jax.jit(self._make_cow())
         self._seen_buckets: set = set()
 
     # -- jitted device programs -------------------------------------------
@@ -210,13 +231,93 @@ class PagedServingEngine:
 
         return pf
 
-    def _prefill_for(self, bucket: int):
-        """One jitted installer; jax.jit's shape cache gives one trace per
-        bucket. The seen-bucket set just drives the trace counter."""
+    def _make_prefill_shared(self):
+        """Prefill a request whose first ``prefix_len`` tokens' KV already
+        sits in the pool (prefix-cache hit): gather the matched pages into
+        a per-layer prefix buffer, run the model over the SUFFIX only
+        (api.prefill prefix_kv — the FLOPs saving the prefix cache exists
+        for), and scatter the suffix k/v token-by-token into its pages
+        (``phys_tok``/``row_tok``: physical page + row per suffix token,
+        SCRATCH for bucket padding — token-granular because a CoW'd
+        divergence can start mid-page)."""
+        cfg, rules, temp = self.cfg, self.rules, self.temperature
+        page = self.page_size
+
+        def pf(params, cache, block_table, pos, cur_tok, live, gen,
+               max_new_arr, tokens, length, prefix_pages, prefix_len,
+               phys_tok, row_tok, row, slot, req_max_new, key):
+            npb = prefix_pages.shape[0]
+
+            def gather_scan(pool):          # (L,P,pg,..) -> (L,1,npb*pg,..)
+                g = jnp.take(pool, prefix_pages, axis=1)
+                return g.reshape((pool.shape[0], 1, npb * page)
+                                 + pool.shape[3:])
+
+            def gather_tail(pool):          # (P,pg,..) -> (1,npb*pg,..)
+                g = jnp.take(pool, prefix_pages, axis=0)
+                return g.reshape((1, npb * page) + pool.shape[2:])
+
+            prefix_kv = {
+                "scan": jax.tree.map(gather_scan, cache["scan"]),
+                "tail": [jax.tree.map(gather_tail, cp)
+                         for cp in cache["tail"]],
+            }
+            logits, cache1, _ = api.prefill(cfg, params, {"tokens": tokens},
+                                            rules=rules, length=length,
+                                            prefix_kv=prefix_kv,
+                                            prefix_len=prefix_len)
+            key, sub = jax.random.split(key)
+            tok = _sample_logits(cfg, logits, temp, sub)[0]
+
+            def merge_scan(pool, one):      # (L,P,pg,..) <- (L,1,Sb,..)
+                return pool.at[:, phys_tok, row_tok].set(
+                    one[:, 0].astype(pool.dtype))
+
+            def merge_tail(pool, one):      # (P,pg,..) <- (1,Sb,..)
+                return pool.at[phys_tok, row_tok].set(
+                    one[0].astype(pool.dtype))
+
+            new_cache = {
+                "scan": jax.tree.map(merge_scan, cache["scan"],
+                                     cache1["scan"]),
+                "tail": [jax.tree.map(merge_tail, cp, c1)
+                         for cp, c1 in zip(cache["tail"], cache1["tail"])],
+            }
+            block_table = block_table.at[slot].set(row)
+            pos = pos.at[slot].set(prefix_len + length)
+            cur_tok = cur_tok.at[slot, 0].set(tok)
+            live = live.at[slot].set(True)
+            gen = gen.at[slot].set(1)
+            max_new_arr = max_new_arr.at[slot].set(req_max_new)
+            return (new_cache, block_table, pos, cur_tok, live, gen,
+                    max_new_arr, tok, key)
+
+        return pf
+
+    def _make_cow(self):
+        """Device-side copy-on-write: duplicate one physical page (every
+        layer's pool) into a fresh private page, so a request can diverge
+        inside a shared page without corrupting the other readers."""
+        def cow(cache, src, dst):
+            def cp_scan(pool):              # (L, P, pg, ..)
+                return pool.at[:, dst].set(pool[:, src])
+
+            def cp_tail(pool):              # (P, pg, ..)
+                return pool.at[dst].set(pool[src])
+
+            return {"scan": jax.tree.map(cp_scan, cache["scan"]),
+                    "tail": [jax.tree.map(cp_tail, cp)
+                             for cp in cache["tail"]]}
+
+        return cow
+
+    def _prefill_for(self, bucket) -> None:
+        """jax.jit's shape cache gives one trace per bucket (plain bucket
+        int for whole-prompt prefill, (suffix_bucket, prefix_pages) pairs
+        for the shared path). The seen-bucket set drives the counter."""
         if bucket not in self._seen_buckets:
             self._seen_buckets.add(bucket)
             self.prefill_traces += 1
-        return self._prefill_fn
 
     # -- host-side engine -------------------------------------------------
 
@@ -231,7 +332,13 @@ class PagedServingEngine:
 
     def submit(self, req: Request) -> bool:
         """Prefill `req` into a free slot. False if out of slots or pages
-        (admission rejection — never corrupts a live neighbor's pages)."""
+        (admission rejection — never corrupts a live neighbor's pages).
+
+        With the prefix cache on, admission first takes the longest cached
+        prefix (whole pages shared by refcount, plus at most one partial
+        page duplicated copy-on-write), prefills only the remaining
+        suffix, and afterwards publishes the request's own full prompt
+        pages into the radix tree for the next arrival to reuse."""
         slot = self._free_slot()
         if slot is None:
             return False
@@ -248,26 +355,106 @@ class PagedServingEngine:
             # scheduler retry an admission that can never succeed
             req.done = True
             return True
-        table = self.alloc.allocate(req.rid, L)
+
+        shared: List[int] = []
+        partial_page, partial_tokens = None, 0
+        m = None
+        if self.prefix is not None:
+            # cap at L-1: at least one token must be prefilled — its logits
+            # pick the next token, a pure cache hit has none to offer
+            m = self.prefix.match(toks, max_tokens=L - 1)
+            shared = m.pages
+            partial_page, partial_tokens = m.partial_page, m.partial_tokens
+        need_fresh = self.alloc.pages_for(L) - len(shared)
+        deficit = need_fresh - self.alloc.free_pages
+        if deficit > 0 and self.prefix is not None:
+            # evict idle cached pages before rejecting admission — but
+            # only if eviction can actually cover the deficit: flushing
+            # still-matchable prefixes ahead of a rejection that happens
+            # anyway would cost every future hit and buy nothing. The
+            # match's own pages are not yet refcounted, so shield them.
+            keep = set(shared)
+            if partial_page is not None:
+                keep.add(partial_page)
+            if self.prefix.evictable_count(protect=keep) >= deficit:
+                self.prefix.evict(deficit, protect=keep)
+        table = self.alloc.allocate_shared(req.rid, L, shared)
         if table is None:
             return False             # pool full: reject admission
-        bucket = self._bucket(L)
-        nb = bucket // self.page_size
-        pages = np.full((nb,), SCRATCH_PAGE, np.int32)
-        pages[: len(table)] = table[:nb]
+        if m is not None:
+            # admission is now certain: count the lookup and touch the
+            # matched path's LRU clock (a rejected-and-retried submit must
+            # not inflate hit rates or keep its prefix hot)
+            self.prefix.commit(m, L)
+        prefix_len = len(shared) * self.page_size + partial_tokens
+        if partial_page is not None:
+            # the request diverges INSIDE a cached page: duplicate it into
+            # the request's fresh page (rows < partial_tokens are reused,
+            # the rest is overwritten by the suffix prefill below)
+            dst = table[len(shared)]
+            self.cache = self._cow_fn(self.cache, jnp.int32(partial_page),
+                                      jnp.int32(dst))
+            self.cow_copies += 1
+
         row = np.zeros((self.max_blocks,), np.int32)
         row[: len(table)] = table
-        tok_arr = np.zeros((1, bucket), np.int32)
-        tok_arr[0, :L] = toks
-
-        pf = self._prefill_for(bucket)
-        (self.cache, self.block_table, self.pos, self.cur_tok,
-         self.live_mask, self.gen_cnt, self.max_new_arr, tok, self.key) = pf(
-            self.params, self.cache, self.block_table, self.pos,
-            self.cur_tok, self.live_mask, self.gen_cnt, self.max_new_arr,
-            jnp.asarray(tok_arr), jnp.int32(L), jnp.asarray(pages),
-            jnp.asarray(row), jnp.int32(slot), jnp.int32(remaining),
-            self.key)
+        if prefix_len == 0:
+            bucket = self._bucket(L)
+            nb = bucket // self.page_size
+            pages = np.full((nb,), SCRATCH_PAGE, np.int32)
+            pages[: len(table)] = table[:nb]
+            tok_arr = np.zeros((1, bucket), np.int32)
+            tok_arr[0, :L] = toks
+            self._prefill_for(bucket)
+            (self.cache, self.block_table, self.pos, self.cur_tok,
+             self.live_mask, self.gen_cnt, self.max_new_arr, tok,
+             self.key) = self._prefill_fn(
+                self.params, self.cache, self.block_table, self.pos,
+                self.cur_tok, self.live_mask, self.gen_cnt,
+                self.max_new_arr, jnp.asarray(tok_arr), jnp.int32(L),
+                jnp.asarray(pages), jnp.asarray(row), jnp.int32(slot),
+                jnp.int32(remaining), self.key)
+            self.prefilled_tokens += L
+        else:
+            suffix = toks[prefix_len:]
+            bucket = self._bucket(len(suffix))
+            # prefix pages to gather: the shared full pages plus the CoW'd
+            # partial page, padded to a power of two (bounds trace count;
+            # scratch-padded rows sit past every real position and are
+            # causally masked)
+            n_pref = len(shared) + (1 if partial_page is not None else 0)
+            npb = min(_next_pow2(n_pref), self.max_blocks)
+            pages = np.full((npb,), SCRATCH_PAGE, np.int32)
+            pages[:n_pref] = table[:n_pref]
+            # physical (page, row) of every suffix token; bucket padding
+            # lands on the scratch page
+            phys = np.full((bucket,), SCRATCH_PAGE, np.int32)
+            rows = np.zeros((bucket,), np.int32)
+            for t in range(bucket):
+                ab = prefix_len + t
+                rows[t] = ab % self.page_size
+                if ab < L:
+                    phys[t] = table[ab // self.page_size]
+            tok_arr = np.zeros((1, bucket), np.int32)
+            tok_arr[0, : len(suffix)] = suffix
+            self._prefill_for(("shared", bucket, npb))
+            (self.cache, self.block_table, self.pos, self.cur_tok,
+             self.live_mask, self.gen_cnt, self.max_new_arr, tok,
+             self.key) = self._prefill_shared_fn(
+                self.params, self.cache, self.block_table, self.pos,
+                self.cur_tok, self.live_mask, self.gen_cnt,
+                self.max_new_arr, jnp.asarray(tok_arr),
+                jnp.int32(len(suffix)), jnp.asarray(pages),
+                jnp.int32(prefix_len), jnp.asarray(phys),
+                jnp.asarray(rows), jnp.asarray(row), jnp.int32(slot),
+                jnp.int32(remaining), self.key)
+            self.prefilled_tokens += len(suffix)
+        self.prompt_tokens += L
+        if self.prefix is not None:
+            # publish the prompt's full pages for future arrivals (before
+            # the finish check: even a request that completes at prefill
+            # seeds the cache — its pages survive via the tree's pin)
+            self.prefix.insert(toks, table)
 
         self.live[slot] = req
         self._pos_host[slot] = L
@@ -301,11 +488,31 @@ class PagedServingEngine:
         req.preemptions += 1
         return req
 
+    def _reclaim_one_page(self, keep_slot: int,
+                          preempted: List[Request]) -> bool:
+        """Free at least one page for `keep_slot`: first drop an idle
+        cached page (costs at most one future re-prefill), only then
+        preempt the youngest other live request (costs a guaranteed
+        re-prefill). False if neither source has anything left."""
+        if self.prefix is not None and self.prefix.evict(1):
+            return True
+        victims = [s for s, r in enumerate(self.live)
+                   if r is not None and s != keep_slot]
+        if not victims:
+            return False
+        youngest = max(victims, key=lambda s: self._admit_seq[s])
+        preempted.append(self._evict_slot(youngest))
+        return True
+
     def ensure_decode_capacity(self) -> List[Request]:
         """Allocate the pages the next decode step will write into
-        (allocate-on-demand); on pool exhaustion, preempt the youngest
-        live requests until the remaining ones fit. Returns preempted
-        requests (resubmit them to resume)."""
+        (allocate-on-demand); on pool exhaustion, evict idle prefix-cache
+        pages first, then preempt the youngest live requests until the
+        remaining ones fit. Returns preempted requests (resubmit them to
+        resume). Also enforces the write-exclusivity invariant: the page
+        the next token lands in must be privately owned — if it is shared
+        (refcount > 1: another table or the radix tree references it),
+        it is duplicated copy-on-write before the step may write it."""
         preempted: List[Request] = []
         for slot in sorted((s for s, r in enumerate(self.live)
                             if r is not None),
@@ -313,6 +520,21 @@ class PagedServingEngine:
             req = self.live[slot]
             if req is None:
                 continue
+            blk = self._pos_host[slot] // self.page_size
+            table = self.alloc.block_table(req.rid)
+            while blk < len(table) and self.alloc.ref(table[blk]) > 1:
+                swapped = self.alloc.replace_page(req.rid, blk)
+                if swapped is not None:
+                    src, dst = swapped
+                    self.cache = self._cow_fn(self.cache, jnp.int32(src),
+                                              jnp.int32(dst))
+                    self.block_table = self.block_table.at[slot,
+                                                           blk].set(dst)
+                    self.cow_copies += 1
+                    break
+                if not self._reclaim_one_page(slot, preempted):
+                    raise RuntimeError(
+                        "page pool too small for a single request")
             while True:
                 got = self.alloc.extend_to(req.rid, self._pos_host[slot] + 1)
                 if got is not None:
@@ -321,13 +543,9 @@ class PagedServingEngine:
                         self.block_table = self.block_table.at[
                             slot, blk].set(got)
                     break
-                victims = [s for s, r in enumerate(self.live)
-                           if r is not None and s != slot]
-                if not victims:
+                if not self._reclaim_one_page(slot, preempted):
                     raise RuntimeError(
                         "page pool too small for a single request")
-                youngest = max(victims, key=lambda s: self._admit_seq[s])
-                preempted.append(self._evict_slot(youngest))
         return preempted
 
     def step(self) -> List[Request]:
@@ -364,6 +582,42 @@ class PagedServingEngine:
 
     def pool_stats(self) -> PoolStats:
         return PoolStats.of(self.alloc, self.slots, self.max_len)
+
+    def prefix_stats(self) -> Dict[str, float]:
+        """Prefix-sharing telemetry: token-level hit rate, prefill compute
+        avoided, CoW traffic. Meaningful (non-zero) only with the prefix
+        cache enabled; the prefill counters are kept either way so the
+        no-sharing engine reports a comparable baseline."""
+        d = {
+            "prompt_tokens": float(self.prompt_tokens),
+            "prefilled_tokens": float(self.prefilled_tokens),
+            "prefill_tokens_saved": float(self.prompt_tokens
+                                          - self.prefilled_tokens),
+            "prefill_saved_frac": ((self.prompt_tokens
+                                    - self.prefilled_tokens)
+                                   / self.prompt_tokens
+                                   if self.prompt_tokens else 0.0),
+            "cow_copies": float(self.cow_copies),
+        }
+        if self.prefix is not None:
+            d.update(self.prefix.stats())
+        return d
+
+    def check(self) -> None:
+        """Engine-level pool invariants: the allocator's shared-page-aware
+        check() plus write exclusivity — the block each live request's
+        next token lands in must not be shared (refcount 1), or the next
+        decode step would scribble over another reader's KV."""
+        self.alloc.check()
+        for slot, req in enumerate(self.live):
+            if req is None:
+                continue
+            table = self.alloc.block_table(req.rid)
+            blk = self._pos_host[slot] // self.page_size
+            if blk < len(table):
+                assert self.alloc.ref(table[blk]) == 1, (
+                    f"slot {slot}: next-write page {table[blk]} is shared "
+                    f"(ref {self.alloc.ref(table[blk])})")
 
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10_000) -> List[Request]:

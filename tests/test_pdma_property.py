@@ -1,0 +1,79 @@
+"""Hypothesis property test for the PDMA Arena allocator: random
+alloc/free interleavings always preserve bank-word alignment, block
+disjointness, and the capacity bound — the host-model mirror of what
+tests/test_kv_cache.py pins for the serving page pool."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accel import VOLTRA
+from repro.core.pdma import Arena, ArenaError
+
+# (alloc?, size) pairs; sizes span "many small" through "a third of the
+# arena", so some sequences exhaust capacity and hit the ArenaError path.
+_ops = st.lists(
+    st.tuples(st.booleans(), st.integers(1, VOLTRA.mem_bytes // 3)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_ops)
+def test_arena_interleavings_keep_invariants(ops):
+    a = Arena()
+    live = {}
+    n = 0
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            name = f"b{n}"
+            n += 1
+            used_before = a.used
+            blocks_before = len(a.blocks)
+            try:
+                blk = a.alloc(name, size)
+            except ArenaError:
+                # rejected: state untouched, and the request really was
+                # bigger than the whole arena could ever hold contiguously
+                assert a.used == used_before
+                assert len(a.blocks) == blocks_before
+                continue
+            live[name] = blk
+            # bank-word alignment of both placement and rounded size
+            assert blk.offset % a.align == 0
+            assert blk.size % a.align == 0
+            assert blk.size >= size
+            assert blk.offset + blk.size <= a.capacity
+        else:
+            # free a deterministically-chosen live block (drawn data picks
+            # the index, so hypothesis can shrink failing interleavings)
+            name = sorted(live)[size % len(live)]
+            a.free(name)
+            del live[name]
+        # global invariants after EVERY op
+        assert not a.overlaps()
+        assert a.used <= a.capacity
+        assert a.used == sum(b.size for b in live.values())
+    for name in sorted(live):
+        a.free(name)
+    assert a.used == 0 and not a.blocks
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(VOLTRA.mem_bytes // 64, VOLTRA.mem_bytes),
+       st.integers(0, 1 << 30))
+def test_arena_free_then_realloc_reuses_space(size, salt):
+    """free() really returns space: fill-free-fill of the same size never
+    hits ArenaError (the dynamic (re)partitioning PDMA promises)."""
+    a = Arena()
+    names = []
+    i = 0
+    while True:
+        try:
+            a.alloc(f"x{i}", size)
+        except ArenaError:
+            break
+        names.append(f"x{i}")
+        i += 1
+    assert names, "a <= capacity block must place in an empty arena"
+    victim = names[salt % len(names)]
+    a.free(victim)
+    a.alloc("again", size)          # must fit where the victim sat
+    assert not a.overlaps()
+    assert a.used <= a.capacity

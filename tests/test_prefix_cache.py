@@ -1,0 +1,357 @@
+"""Prefix-sharing KV subsystem: refcounted allocator semantics, radix-tree
+match/insert/evict (host-side, no jax), and engine-level exact-greedy
+equivalence — prefix caching ON must reproduce the no-sharing engine's
+tokens bit-for-bit under both attn_impls, through CoW divergence,
+eviction under pool pressure, and preemption."""
+import pytest
+
+from repro.runtime.kv_cache import PageAllocator
+from repro.runtime.prefix_cache import PrefixCache
+
+# ---------------------------------------------------------------------------
+# Refcounted allocator (pure host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_allocate_shared_refcounts_and_frees_last_owner():
+    a = PageAllocator(8, 4)
+    t0 = a.allocate(0, 12)                 # 3 private pages
+    t1 = a.allocate_shared(1, 12, t0[:2])  # shares 2, allocates 1
+    assert t1[:2] == t0[:2] and t1[2] != t0[2]
+    assert a.ref(t0[0]) == 2 and a.ref(t0[2]) == 1
+    assert a.allocated_pages == 4          # 3 + 1 fresh, shared not doubled
+    a.check()
+    # freeing one owner keeps the shared pages alive for the other
+    assert a.free_request(0) == 1          # only its private page freed
+    assert a.ref(t1[0]) == 1
+    a.check()
+    assert a.free_request(1) == 3
+    assert a.allocated_pages == 0
+    a.check()
+
+
+def test_allocate_shared_rejection_takes_no_refs():
+    a = PageAllocator(3, 4)
+    t0 = a.allocate(0, 8)                  # 2 pages, 1 free
+    assert a.allocate_shared(1, 16, t0) is None    # needs 2 fresh, has 1
+    assert a.ref(t0[0]) == 1               # no refs leaked by the rejection
+    a.check()
+
+
+def test_cache_pin_keeps_page_after_owner_finishes():
+    a = PageAllocator(4, 4)
+    t = a.allocate(0, 8)
+    a.cache_pin(t[0])
+    assert a.free_request(0) == 1          # pinned page survives
+    assert a.ref(t[0]) == 1 and a.allocated_pages == 1
+    assert a.cached_idle_pages == 1
+    a.check()
+    assert a.cache_unpin(t[0])             # unpin -> actually freed
+    assert a.allocated_pages == 0
+    a.check()
+
+
+def test_replace_page_gives_private_copy():
+    a = PageAllocator(6, 4)
+    t0 = a.allocate(0, 8)
+    t1 = a.allocate_shared(1, 8, t0[:1])
+    old, new = a.replace_page(1, 0)
+    assert old == t0[0] and new not in t0
+    assert a.block_table(1)[0] == new
+    assert a.ref(old) == 1 and a.ref(new) == 1
+    a.check()
+    a.check_no_aliasing()                  # nothing shared anymore
+
+
+def test_check_catches_refcount_drift():
+    a = PageAllocator(4, 4)
+    t = a.allocate(0, 8)
+    a._ref[t[0]] += 1                      # corrupt on purpose
+    with pytest.raises(AssertionError):
+        a.check()
+
+
+# ---------------------------------------------------------------------------
+# Radix tree (pure host-side; pages come from a real allocator)
+# ---------------------------------------------------------------------------
+
+
+def _setup(num_pages=32, page=4):
+    a = PageAllocator(num_pages, page)
+    return a, PrefixCache(a)
+
+
+def test_match_walks_whole_pages_and_caps():
+    a, px = _setup()
+    toks = list(range(12))                 # 3 full pages of 4
+    table = a.allocate(0, 12)
+    assert px.insert(toks, table) == 3
+    m = px.match(toks + [99], max_tokens=12)
+    assert m.pages == table and m.tokens == 12 and m.partial_page is None
+    # cap: an identical prompt may not match itself entirely — the last
+    # page degrades to a partial (CoW) hit so one token remains to prefill
+    m = px.match(toks, max_tokens=11)
+    assert m.pages == table[:2]
+    assert m.partial_page == table[2] and m.partial_tokens == 3
+    assert m.tokens == 11
+
+
+def test_match_divergence_inside_page_is_partial_hit():
+    a, px = _setup()
+    toks = [1, 2, 3, 4, 5, 6, 7, 8]
+    table = a.allocate(0, 8)
+    px.insert(toks, table)
+    m = px.match([1, 2, 3, 4, 5, 6, 99, 98, 97], max_tokens=8)
+    assert m.pages == table[:1]
+    assert m.partial_page == table[1] and m.partial_tokens == 2
+    assert m.tokens == 6
+    # divergence in the FIRST page: no full pages, partial only
+    m = px.match([1, 2, 99, 98], max_tokens=4)
+    assert m.pages == [] and m.partial_tokens == 2
+
+
+def test_match_is_pure_until_committed():
+    """match() alone moves no telemetry and no LRU state — only commit()
+    does, once per successful admission."""
+    a, px = _setup()
+    toks = list(range(8))
+    px.insert(toks, a.allocate(0, 8))
+    for _ in range(5):                     # five rejected-admission retries
+        m = px.match(toks, max_tokens=7)
+    assert px.lookups == 0 and px.hits == 0 and px.hit_tokens == 0
+    px.commit(m, 8)
+    assert px.lookups == 1 and px.hits == 1 and px.hit_tokens == 7
+    px.reset_hit_counters()
+    assert px.lookups == px.hits == px.hit_tokens == 0
+    assert px.cached_pages == 2            # tree contents survive the reset
+
+
+def test_insert_skips_duplicate_chunks():
+    a, px = _setup()
+    toks = [5, 5, 5, 5]
+    t0 = a.allocate(0, 4)
+    t1 = a.allocate(1, 4)
+    assert px.insert(toks, t0) == 1
+    assert px.insert(toks, t1) == 0        # incumbent kept, no double pin
+    assert a.ref(t0[0]) == 2 and a.ref(t1[0]) == 1
+    a.check()
+
+
+def test_evict_lru_leaves_first_and_protect():
+    a, px = _setup(num_pages=32, page=4)
+    ta = a.allocate(0, 8)                  # chain A: 2 pages
+    px.insert([1, 2, 3, 4, 5, 6, 7, 8], ta)
+    tb = a.allocate(1, 4)                  # chain B: 1 page
+    px.insert([9, 9, 9, 9], tb)
+    a.free_request(0)
+    a.free_request(1)                      # everything idle now
+    assert a.cached_idle_pages == 3
+    # a committed match on chain A refreshes its LRU clock -> B is LRU.
+    # (An uncommitted match must NOT: rejected admissions retried every
+    # scheduler tick may not keep a stalled request's prefix hot.)
+    m = px.match([1, 2, 3, 4, 5, 6, 7, 8])
+    px.commit(m, 8)
+    assert px.evict(1) == 1
+    assert a.ref(tb[0]) == 0               # B's page went first
+    # chain A: the leaf (page 2) must be evicted before its parent
+    assert px.evict(1) == 1
+    assert a.ref(ta[1]) == 0 and a.ref(ta[0]) == 1
+    # protect shields a page mid-admission
+    assert px.evict(1, protect={ta[0]}) == 0
+    assert px.evict(1) == 1
+    assert a.allocated_pages == 0
+    a.check()
+
+
+def test_evictable_count_is_a_dry_run_and_respects_structure():
+    a, px = _setup()
+    ta = a.allocate(0, 8)                  # parent + leaf
+    px.insert([1, 2, 3, 4, 5, 6, 7, 8], ta)
+    tb = a.allocate(1, 4)
+    px.insert([9, 9, 9, 9], tb)
+    # everything still owned by live tables -> nothing evictable
+    assert px.evictable_count() == 0
+    a.free_request(1)
+    assert px.evictable_count() == 1       # B idle; A's pages still owned
+    a.free_request(0)
+    assert px.evictable_count() == 3       # leaf-first peeling reaches all
+    assert px.evictable_count(protect={ta[0]}) == 2
+    # protecting the LEAF blocks its parent too (leaf-first order)
+    assert px.evictable_count(protect={ta[1]}) == 1
+    assert px.cached_pages == 3            # dry run: nothing moved
+    a.check()
+
+
+def test_evict_spares_pages_still_referenced():
+    a, px = _setup()
+    t0 = a.allocate(0, 4)
+    px.insert([1, 2, 3, 4], t0)            # ref: table + pin = 2
+    assert px.evict(5) == 0                # in use -> not evictable
+    a.free_request(0)
+    assert px.evict(5) == 1
+    a.check()
+
+
+# ---------------------------------------------------------------------------
+# Engine-level (jax; small smoke model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import api
+    cfg = get_smoke_config("qwen2.5-3b")
+    return cfg, api.init_params(cfg, jax.random.key(0))
+
+
+SYS = [7, 3, 9, 1, 4, 4, 2, 8, 6, 5]       # shared 10-token system prompt
+
+
+def _mk_shared(max_new=5):
+    from repro.runtime.serving import Request
+    # rid 0/1: shared 10-token prefix, divergent tails (full-page hits +
+    # mid-page CoW at page_size=4); rid 2: identical to rid 0's prompt
+    # (the full-match-capped CoW case); rid 3: no overlap at all
+    return [Request(rid=0, prompt=SYS + [11, 12], max_new=max_new),
+            Request(rid=1, prompt=SYS + [13, 14, 15], max_new=max_new),
+            Request(rid=2, prompt=SYS + [11, 12], max_new=max_new),
+            Request(rid=3, prompt=[9, 8, 7, 6, 5], max_new=max_new)]
+
+
+def _run(cfg, params, reqs, *, impl, share, max_steps=400, **kw):
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import PagedServingEngine
+    eng = PagedServingEngine(cfg, params, slots=kw.pop("slots", 2),
+                             max_len=32, page_size=kw.pop("page_size", 4),
+                             attn_impl=impl, prefix_cache=share, **kw)
+    sched = Scheduler(eng)
+    for r in reqs:
+        sched.add(r)
+    sched.drain(max_steps=max_steps)
+    eng.check()
+    return eng, sched
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("impl", ["gather", "kernel"])
+def test_prefix_cache_exact_greedy_equivalence(qwen, impl):
+    """Decoded tokens with prefix sharing ON are identical to the
+    no-sharing engine, per request, under both decode attention impls —
+    covering full-page hits, mid-page CoW divergence, and an identical
+    resubmitted prompt."""
+    cfg, params = qwen
+    want_reqs = _mk_shared()
+    _run(cfg, params, want_reqs, impl=impl, share=False)
+    want = {r.rid: r.generated for r in want_reqs}
+
+    got_reqs = _mk_shared()
+    eng, _ = _run(cfg, params, got_reqs, impl=impl, share=True)
+    assert {r.rid: r.generated for r in got_reqs} == want
+    ps = eng.prefix_stats()
+    assert ps["hits"] >= 2                 # rid 1 and rid 2 (at least)
+    assert ps["cow_copies"] >= 1           # rid 2's identical prompt
+    assert ps["prefilled_tokens"] < ps["prompt_tokens"]
+    assert ps["prefill_tokens_saved"] == ps["hit_tokens"]
+
+
+@pytest.mark.slow
+def test_prefix_cache_eviction_under_pool_pressure(qwen):
+    """With a pool too small to keep every cached page, idle prefix pages
+    are evicted (before any preemption) and outputs still match the
+    no-sharing engine exactly."""
+    cfg, params = qwen
+    want_reqs = _mk_shared(max_new=6)
+    _run(cfg, params, want_reqs, impl="gather", share=False, num_pages=9)
+    want = {r.rid: r.generated for r in want_reqs}
+
+    got_reqs = _mk_shared(max_new=6)
+    eng, _ = _run(cfg, params, got_reqs, impl="gather", share=True,
+                  num_pages=9)
+    assert {r.rid: r.generated for r in got_reqs} == want
+    assert eng.prefix.evicted_pages >= 1
+    eng.alloc.check()
+
+
+@pytest.mark.slow
+def test_prefix_cache_with_preemption_resumes_exactly(qwen):
+    """Decode growth outruns a tiny pool: requests get preempted and
+    resumed (re-matching their own cached prefix on resubmit) — outputs
+    must still equal the no-sharing engine's."""
+    cfg, params = qwen
+    want_reqs = _mk_shared(max_new=8)
+    _run(cfg, params, want_reqs, impl="gather", share=False, num_pages=8,
+         slots=3)
+    want = {r.rid: r.generated for r in want_reqs}
+
+    got_reqs = _mk_shared(max_new=8)
+    eng, sched = _run(cfg, params, got_reqs, impl="gather", share=True,
+                      num_pages=8, slots=3)
+    assert {r.rid: r.generated for r in got_reqs} == want
+    assert sched.preempted >= 1
+    assert eng.alloc.live_requests == 0
+    eng.alloc.check()
+
+
+@pytest.mark.slow
+def test_prefix_cache_saves_peak_pages(qwen):
+    """The structural claim: with heavy prompt overlap, sharing serves the
+    same trace with fewer peak physical pages AND fewer prefilled tokens
+    than private paging."""
+    from repro.runtime.serving import Request
+    cfg, params = qwen
+    sys32 = [(3 * j + 1) % cfg.vocab for j in range(16)]
+
+    def mk():
+        return [Request(rid=i, prompt=sys32 + [50 + i], max_new=3)
+                for i in range(4)]
+
+    base_reqs = mk()
+    base, _ = _run(cfg, params, base_reqs, impl="gather", share=False,
+                   slots=4)
+    pref_reqs = mk()
+    pref, _ = _run(cfg, params, pref_reqs, impl="gather", share=True,
+                   slots=4)
+    assert ({r.rid: r.generated for r in pref_reqs}
+            == {r.rid: r.generated for r in base_reqs})
+    assert pref.alloc.peak_pages < base.alloc.peak_pages
+    assert pref.prefilled_tokens < base.prefilled_tokens
+
+
+# ---------------------------------------------------------------------------
+# Scheduler drain loudness (satellite)
+# ---------------------------------------------------------------------------
+
+
+class _WedgedEngine:
+    """Never admits, never finishes: drain's budget must trip loudly."""
+
+    def submit(self, req):
+        return False
+
+    def step(self):
+        return []
+
+    def has_live(self):
+        return False
+
+
+def test_drain_raises_on_exhausted_budget():
+    from repro.runtime.scheduler import Scheduler, SchedulerExhausted
+    from repro.runtime.serving import Request
+    sched = Scheduler(_WedgedEngine())
+    sched.add(Request(rid=0, prompt=[1, 2], max_new=4))
+    with pytest.raises(SchedulerExhausted, match="1 pending"):
+        sched.drain(max_steps=3)
+    assert sched.exhausted
+
+
+def test_drain_warn_mode_sets_telemetry():
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import Request
+    sched = Scheduler(_WedgedEngine())
+    sched.add(Request(rid=0, prompt=[1, 2], max_new=4))
+    with pytest.warns(UserWarning, match="exhausted"):
+        sched.drain(max_steps=3, on_exhaust="warn")
+    assert sched.exhausted
