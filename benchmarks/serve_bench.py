@@ -1,7 +1,8 @@
 """Serving engine benchmark: paged (in-kernel vs dense-gather decode
-attention) vs the seed dense-slot engine, plus the prefix-sharing scenario.
+attention) vs the seed dense-slot engine, plus the prefix-sharing and
+speculative-decode scenarios.
 
-Two scenarios, both generated deterministically from ``--seed`` so the CI
+Three scenarios, all generated deterministically from ``--seed`` so the CI
 bench-smoke CSV artifacts are comparable run-to-run:
 
 **mixed** — a mixed-length request trace (every prompt a different length —
@@ -45,8 +46,20 @@ prefill compute is linear in prefilled tokens for fixed model),
 page reuse. The ``prefix/noshare`` ratio row is the paper-style claim:
 prefill compute and peak paging, sharing vs private.
 
+**speculative** — templated/repetitive traffic (repeated prompt motifs —
+the boilerplate pattern prompt-lookup drafting hits); the paged[kernel]
+engine runs with ``spec_k=0`` (the T=1 baseline) and with ``--spec-k``
+drafted tokens verified per multi-token step. Extra columns:
+``decode_steps`` (each one streams the full weights + live pages once —
+the memory-bound cost speculative decode amortizes),
+``accepted_per_step`` (tokens emitted per request per verify step; the
+baseline is 1.0 by construction) and ``accept_rate``. The ``specK/T=1``
+ratio row is the claim: identical greedy tokens in fewer weight/KV
+streams, i.e. decode arithmetic intensity multiplied by
+``accepted_per_step`` at unchanged page traffic.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen2.5-3b]
-      [--seed 0] [--scenario mixed|shared-prefix|all]
+      [--seed 0] [--scenario mixed|shared-prefix|speculative|all]
 """
 from __future__ import annotations
 
@@ -91,6 +104,22 @@ def _shared_trace(cfg, n_requests: int, max_new: int, seed: int,
             for i in range(n_requests)]
 
 
+def _spec_trace(cfg, n_requests: int, max_new: int, seed: int,
+                motif_len: int = 6, reps: int = 4) -> List[Request]:
+    """Templated/repetitive trace: every prompt is a repeated motif (the
+    boilerplate / few-shot / structured-output pattern prompt-lookup
+    drafting feeds on) behind a short per-request salt, so requests differ
+    but their contexts — and the repetitive spans the model then emits —
+    give the n-gram drafter something to hit."""
+    rng = random.Random(seed)
+    motif = [rng.randrange(cfg.vocab) for _ in range(motif_len)]
+    return [Request(rid=i,
+                    prompt=[rng.randrange(cfg.vocab)
+                            for _ in range(i % 3)] + motif * reps,
+                    max_new=max_new)
+            for i in range(n_requests)]
+
+
 def _warm(engine, mk_trace) -> None:
     """Compile-warm the engine: replay the trace's prompt lengths (covers
     every prefill trace/bucket for dense AND paged) with max_new=2 for a
@@ -110,6 +139,14 @@ def _warm(engine, mk_trace) -> None:
         engine.prompt_tokens = 0
         engine.prefilled_tokens = 0
         engine.cow_copies = 0
+        engine.spec_drafted = 0
+        engine.spec_accepted = 0
+        engine.spec_slot_steps = 0
+        # the pool's high-water marks survive the warmup run otherwise:
+        # the timed replay's peak_kv_tokens / shared_page_refs columns
+        # would report the warmup trace's peaks, not the replay's
+        engine.alloc.peak_pages = engine.alloc.allocated_pages
+        engine.alloc.share_events = 0
         if engine.prefix is not None:
             # keep the warmed radix tree (steady-state cache) but zero the
             # hit counters so the timed replay's telemetry is its own
@@ -254,10 +291,49 @@ def _run_shared_prefix(cfg, params, slots, max_len, n_requests, max_new,
     return rows
 
 
+def _run_speculative(cfg, params, slots, max_len, n_requests, max_new,
+                     seed, spec_k) -> List[Dict]:
+    def mk(new):
+        return _spec_trace(cfg, n_requests, new, seed)
+
+    rows = []
+    for k, name in ((0, "paged[kernel,T=1]"),
+                    (spec_k, f"paged[kernel,spec{spec_k}]")):
+        eng = PagedServingEngine(cfg, params, slots=slots, max_len=max_len,
+                                 attn_impl="kernel", spec_k=k)
+        _warm(eng, mk)
+        row = _drive(eng, mk(max_new), 4000, cfg, name=name)
+        ss = eng.spec_stats()
+        row["decode_steps"] = eng.decode_steps
+        row["accepted_per_step"] = ss["accepted_per_step"]
+        row["accept_rate"] = ss["accept_rate"]
+        row["spec_drafted"] = int(ss["spec_drafted"])
+        row["spec_accepted"] = int(ss["spec_accepted"])
+        rows.append(row)
+    base, spec = rows
+    rows.append({
+        "engine": f"spec{spec_k}/T=1",
+        "requests_done": spec["requests_done"] - base["requests_done"],
+        "tokens": spec["tokens"] - base["tokens"],
+        "wall_s": base["wall_s"] / spec["wall_s"] if spec["wall_s"] else 0.0,
+        "decode_tok_s": spec["decode_tok_s"] / base["decode_tok_s"]
+        if base["decode_tok_s"] else 0.0,
+        "trace_tok_s": spec["trace_tok_s"] / base["trace_tok_s"]
+        if base["trace_tok_s"] else 0.0,
+        # the headline pair: the SAME tokens in fewer verify steps (each
+        # step = one full weight + live-page stream), i.e. arithmetic
+        # intensity up by accepted_per_step at unchanged page traffic
+        "decode_steps": spec["decode_steps"] - base["decode_steps"],
+        "accepted_per_step": spec["accepted_per_step"],
+        "accept_rate": spec["accept_rate"],
+    })
+    return rows
+
+
 def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
         n_requests: int = 12, max_new: int = 8, smoke: bool = False,
         seed: int = 0, scenario: str = "all",
-        sys_len: int = 48) -> List[Dict]:
+        sys_len: int = 48, spec_k: int = 4) -> List[Dict]:
     if smoke:       # decode-heavy but small: seconds, not minutes, with
         # enough steps that decode_tok_s isn't measuring scheduler noise
         slots, max_len, n_requests, max_new = 2, 128, 4, 24
@@ -271,6 +347,12 @@ def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
     if scenario in ("shared-prefix", "all"):
         rows += _run_shared_prefix(cfg, params, slots, max_len,
                                    n_requests, max_new, seed, sys_len)
+    if scenario in ("speculative", "all"):
+        # speculative decode is a decode-tail story (every verify step
+        # amortizes one full weight+page stream): give it a decode-heavy
+        # trace even when the other scenarios run short ones
+        rows += _run_speculative(cfg, params, slots, max_len,
+                                 n_requests, max(max_new, 24), seed, spec_k)
     return rows
 
 
@@ -284,16 +366,20 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="trace-generation seed (same seed -> same trace, "
                          "so CI CSV artifacts are comparable run-to-run)")
-    ap.add_argument("--scenario", choices=["mixed", "shared-prefix", "all"],
+    ap.add_argument("--scenario",
+                    choices=["mixed", "shared-prefix", "speculative", "all"],
                     default="all")
     ap.add_argument("--sys-len", type=int, default=48,
                     help="shared system-prompt length for shared-prefix")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify step for speculative")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace (seconds): CI per-PR regression signal")
     args = ap.parse_args()
     rows = run(args.arch, args.slots, args.max_len, args.requests,
                args.max_new, smoke=args.smoke, seed=args.seed,
-               scenario=args.scenario, sys_len=args.sys_len)
+               scenario=args.scenario, sys_len=args.sys_len,
+               spec_k=args.spec_k)
     print(emit(rows))
 
 

@@ -4,12 +4,15 @@ Demonstrates: bucketed prefill -> paged cache install -> batched decode ->
 continuous batching (more requests than slots) with allocate-on-demand
 pages, plus throughput and KV-pool utilization stats. Every request opens
 with the same "system prompt", so --prefix-cache shows cross-request KV
-sharing (radix-tree match, refcounted pages, suffix-only prefill).
+sharing (radix-tree match, refcounted pages, suffix-only prefill), and
+--spec-k K turns on speculative decode (K prompt-lookup drafted tokens
+verified per multi-token step, exact greedy).
 Recurrent archs (mamba2, recurrentgemma) transparently fall back to the
 dense-slot engine.
 
   PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
            [--slots 4] [--requests 8] [--max-new 16] [--prefix-cache]
+           [--spec-k 4]
 """
 import argparse
 import time
@@ -36,6 +39,9 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share the common system-prompt KV across "
                          "requests (refcounted copy-on-write pages)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="verify up to K prompt-lookup drafted tokens per "
+                         "decode step (exact greedy; temperature 0 only)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -46,7 +52,8 @@ def main() -> None:
                         page_size=args.page_size,
                         temperature=args.temperature,
                         attn_impl=args.paged_attn,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        spec_k=args.spec_k)
     print(f"[serve] engine: {type(eng).__name__}")
 
     sys_prompt = [(3 * j + 1) % cfg.vocab for j in range(2 * args.page_size)]
@@ -74,6 +81,12 @@ def main() -> None:
                   f"({ps['prefill_tokens_saved']:.0f} prefill tokens "
                   f"saved, {ps['cow_copies']:.0f} CoW copies, "
                   f"{ps['cached_pages']:.0f} pages cached)")
+        if eng.spec_k:
+            ss = eng.spec_stats()
+            print(f"[serve] speculative (K={eng.spec_k}): "
+                  f"{ss['accepted_per_step']:.2f} tokens/request/step, "
+                  f"accept rate {ss['accept_rate']:.2f} "
+                  f"({ss['spec_accepted']:.0f}/{ss['spec_drafted']:.0f})")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt {r.prompt[:4]}... -> "
               f"{r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")

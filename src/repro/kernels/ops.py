@@ -57,8 +57,11 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     INSIDE the kernel (scalar-prefetched table, page-granular KV tiles,
     online softmax), so the per-layer dense gather of the PR-1 serving
     path never materializes (Voltra's shared-memory streamers; DESIGN.md
-    "Paged attention"). q: (B, H, D); pools: (P, page, KV, D);
-    block_table: (B, n_blocks); lengths: (B,) live tokens (pos + 1)."""
+    "Paged attention"). q: (B, H, D) single-token decode, or (B, T, H, D)
+    T-token query block (speculative verify — in-sweep causal masking,
+    same kernel, same page traffic); pools: (P, page, KV, D); block_table:
+    (B, n_blocks); lengths: (B,) live tokens INCLUDING the q block
+    (base + T; T == 1 reduces to the old pos + 1 contract)."""
     return _paged.paged_attention(q, k_pool, v_pool, block_table, lengths,
                                   kv_scale=kv_scale,
                                   interpret=not _on_tpu())

@@ -24,6 +24,14 @@ indirection *inside* the attention kernel, vLLM-style:
 * GQA: all ``H = KV * G`` query heads ride the same streamed page (the
   chip's 3D-reuse argument applied to the KV stream) — the per-head
   score is a KV-batched ``(G, D) x (D, page)`` contraction;
+* **multi-token query blocks** (speculative decode): ``q`` may carry
+  ``T >= 1`` rows per request. The T axis is folded into the head-group
+  axis — row ``r = t * G + g`` of a ``(KV, T*G, D)`` q tile — so the
+  body stays the same KV-batched contraction while every row still rides
+  the SAME streamed page (the verify step multiplies arithmetic
+  intensity by T at unchanged page traffic). Causality is enforced
+  in-sweep: query row ``t`` sits at absolute position ``base + t``
+  (``base = lengths[b] - T``) and sees exactly ``base + t + 1`` keys;
 * blocks past a request's valid length are skipped (``pl.when``), so a
   short request in a long-table batch pays for the pages it owns, not for
   ``max_blocks``;
@@ -33,7 +41,7 @@ indirection *inside* the attention kernel, vLLM-style:
 The pure-jnp oracle (dense gather + masked softmax) is
 ``repro.kernels.ref.paged_attention_ref``; dispatch (TPU compiled vs
 interpret elsewhere) is ``repro.kernels.ops.paged_attention``. See
-DESIGN.md "Paged attention".
+DESIGN.md "Paged attention" and "Speculative decode".
 """
 from __future__ import annotations
 
@@ -51,8 +59,8 @@ _NEG = -1e30
 
 
 def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                  acc_ref, *, page: int, n_blocks: int, scale: float,
-                  dequant: Optional[float]):
+                  acc_ref, *, page: int, n_blocks: int, n_rows: int,
+                  group: int, scale: float, dequant: Optional[float]):
     b = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -69,20 +77,25 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     # so block 0 always runs and the init above is never skipped)
     @pl.when(i * page < length)
     def _block():
-        q = q_ref[0].astype(jnp.float32)             # (KV, G, D)
+        q = q_ref[0].astype(jnp.float32)             # (KV, T*G, D)
         k = k_ref[0]                                 # (page, KV, D) — the
         v = v_ref[0]                                 # pool's contiguous unit
         if dequant is not None:                      # int8 pool: tile dequant
             k = k.astype(jnp.float32) * dequant
             v = v.astype(jnp.float32) * dequant
-        # KV-batched (G, D) x (D, page) contraction: every query head of
-        # the group scores against the page it shares
+        # KV-batched (T*G, D) x (D, page) contraction: every query row of
+        # the T-token block AND every head of the group scores against the
+        # single page they all share
         s = jax.lax.dot_general(
             q, k.astype(jnp.float32),
             dimension_numbers=(((2,), (2,)), ((0,), (1,))),
-            preferred_element_type=jnp.float32) * scale   # (KV, G, page)
+            preferred_element_type=jnp.float32) * scale  # (KV, T*G, page)
         pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
-        mask = pos < length
+        # in-sweep causal mask: row r = t*G + g holds query token t, whose
+        # absolute position is base + t with base = length - T; it may see
+        # keys at positions < base + t + 1. T == 1 reduces to pos < length.
+        t_row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // group
+        mask = pos < (length - (n_rows // group)) + t_row + 1
         s = jnp.where(mask, s, _NEG)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(-1))
@@ -107,28 +120,36 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_table: jax.Array, lengths, *,
                     kv_scale: Optional[float] = None,
                     interpret: bool = True) -> jax.Array:
-    """Flash-decode over a paged KV pool. Returns (B, H, D).
+    """Flash-decode over a paged KV pool. Returns q's shape.
 
-    q:           (B, H, D)  — one new token per request (post-rope).
+    q:           (B, H, D) — one new token per request — or (B, T, H, D),
+                 a T-token query block per request (speculative verify;
+                 post-rope, rows at absolute positions base .. base+T-1).
     k/v_pool:    (P, page, KV, D) shared page pools (bf16/f32 or int8).
     block_table: (B, n_blocks) int32 — logical block j of request b lives
                  in physical page ``block_table[b, j]`` (scratch page 0 for
                  never-written tails; masked out by ``lengths``).
     lengths:     (B,) int32 (or scalar) — live tokens per request
-                 INCLUDING the token just written (i.e. pos + 1). Traced.
+                 INCLUDING every token of the q block just written (i.e.
+                 base + T). Traced. Row t attends causally to
+                 ``lengths - T + t + 1`` keys.
     kv_scale:    static absmax bound when the pools are int8
                  (dequant = kv_scale / 127, matching layers.kv_dequant).
     """
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]                     # (B, H, D) -> (B, 1, H, D)
     B = q.shape[0]
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
-    return _paged(q, k_pool, v_pool, block_table, lengths,
-                  kv_scale=kv_scale, interpret=interpret)
+    out = _paged(q, k_pool, v_pool, block_table, lengths,
+                 kv_scale=kv_scale, interpret=interpret)
+    return out[:, 0] if squeeze else out
 
 
 @functools.partial(jax.jit, static_argnames=("kv_scale", "interpret"))
 def _paged(q, k_pool, v_pool, block_table, lengths, *,
            kv_scale: Optional[float], interpret: bool) -> jax.Array:
-    B, H, D = q.shape
+    B, T, H, D = q.shape
     P, page, KV, _ = k_pool.shape
     assert H % KV == 0, (H, KV)
     G = H // KV
@@ -138,35 +159,40 @@ def _paged(q, k_pool, v_pool, block_table, lengths, *,
         assert kv_scale is not None, "int8 pools need kv_scale"
         dequant = kv_scale / 127.0
 
-    # (B, H, D) -> (B, KV, G, D): heads h*G..(h+1)*G-1 share kv head h,
-    # matching layers._qkv head order, so the whole group rides one q block
-    qg = q.reshape(B, KV, G, D)
+    # (B, T, H, D) -> (B, KV, T*G, D): heads h*G..(h+1)*G-1 share kv head h
+    # (matching layers._qkv head order) and the T query rows fold into the
+    # group axis — row r = t*G + g — so the whole (token block x head
+    # group) rides one streamed page per grid step.
+    qg = (q.reshape(B, T, KV, G, D).transpose(0, 2, 1, 3, 4)
+          .reshape(B, KV, T * G, D))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # block_table, lengths
         grid=(B, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, KV, G, D), lambda b, i, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, KV, T * G, D), lambda b, i, bt, ln: (b, 0, 0, 0)),
             pl.BlockSpec((1, page, KV, D),
                          lambda b, i, bt, ln: (bt[b, i], 0, 0, 0)),
             pl.BlockSpec((1, page, KV, D),
                          lambda b, i, bt, ln: (bt[b, i], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, KV, G, D),
+        out_specs=pl.BlockSpec((1, KV, T * G, D),
                                lambda b, i, bt, ln: (b, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((KV, G), jnp.float32),      # running max
-            pltpu.VMEM((KV, G), jnp.float32),      # running denominator
-            pltpu.VMEM((KV, G, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((KV, T * G), jnp.float32),      # running max
+            pltpu.VMEM((KV, T * G), jnp.float32),      # running denominator
+            pltpu.VMEM((KV, T * G, D), jnp.float32),   # output accumulator
         ],
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, page=page, n_blocks=n_blocks,
-                          scale=D ** -0.5, dequant=dequant),
+                          n_rows=T * G, group=G, scale=D ** -0.5,
+                          dequant=dequant),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, KV, T * G, D), q.dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_table, lengths, qg, k_pool, v_pool)
-    return out.reshape(B, H, D)
+    return (out.reshape(B, KV, T, G, D).transpose(0, 2, 1, 3, 4)
+            .reshape(B, T, H, D))

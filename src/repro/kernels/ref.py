@@ -48,10 +48,16 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 
     Deliberately does the thing the kernel exists to avoid — gather every
     request's pages into a (B, n_blocks*page, KV, D) buffer — then runs an
-    exact masked softmax. q: (B, H, D); pools: (P, page, KV, D);
-    block_table: (B, n_blocks); lengths: (B,) live tokens (pos + 1).
+    exact masked softmax. q: (B, H, D) or (B, T, H, D) (T-token query
+    block, speculative verify); pools: (P, page, KV, D); block_table:
+    (B, n_blocks); lengths: (B,) live tokens INCLUDING the q block (base +
+    T): query row t sits at absolute position base + t and attends to
+    lengths - T + t + 1 keys (T == 1 reduces to the old pos + 1 contract).
     """
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, T, H, D = q.shape
     _, page, KV, _ = k_pool.shape
     G = H // KV
     n_blocks = block_table.shape[1]
@@ -64,13 +70,17 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 
     kg = dq(k_pool[block_table]).reshape(B, n_blocks * page, KV, D)
     vg = dq(v_pool[block_table]).reshape(B, n_blocks * page, KV, D)
-    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, kg) * (D ** -0.5)
-    mask = jnp.arange(n_blocks * page)[None, :] < lengths[:, None]
-    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    qg = q.reshape(B, T, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("btkgd,bskd->btkgs", qg, kg) * (D ** -0.5)
+    # row t sees keys at positions < base + t + 1 (base = lengths - T)
+    kpos = jnp.arange(n_blocks * page)[None, None, :]
+    qlen = (lengths[:, None] - T + jnp.arange(T)[None, :] + 1)[..., None]
+    mask = kpos < qlen                                  # (B, T, S)
+    s = jnp.where(mask[:, :, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgs,bskd->bkgd", p, vg)
-    return o.reshape(B, H, D).astype(q.dtype)
+    o = jnp.einsum("btkgs,bskd->btkgd", p, vg)
+    o = o.reshape(B, T, H, D).astype(q.dtype)
+    return o[:, 0] if squeeze else o
 
 
 def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,

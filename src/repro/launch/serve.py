@@ -3,7 +3,7 @@
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       [--slots 4] [--requests 8] [--max-new 12] [--engine paged|dense] \
       [--page-size 16] [--num-pages N] [--paged-attn kernel|gather] \
-      [--prefix-cache]
+      [--prefix-cache] [--spec-k K]
 
 Attention-only stacks default to the paged KV-cache engine (continuous
 batching over a shared page pool, bucketed prefill); recurrent stacks fall
@@ -45,6 +45,10 @@ def main() -> None:
                     help="share KV pages across requests with a common "
                          "prompt prefix (radix tree + refcounted "
                          "copy-on-write pages; paged engine only)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode: verify up to K prompt-lookup "
+                         "drafted tokens per multi-token step (exact "
+                         "greedy; paged engine only, temperature 0)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -59,12 +63,14 @@ def main() -> None:
         eng = PagedServingEngine(cfg, params, page_size=args.page_size,
                                  num_pages=args.num_pages,
                                  attn_impl=args.paged_attn,
-                                 prefix_cache=args.prefix_cache, **common)
+                                 prefix_cache=args.prefix_cache,
+                                 spec_k=args.spec_k, **common)
     else:
         eng = ServingEngine(cfg, params, page_size=args.page_size,
                             num_pages=args.num_pages,
                             attn_impl=args.paged_attn,
-                            prefix_cache=args.prefix_cache, **common)
+                            prefix_cache=args.prefix_cache,
+                            spec_k=args.spec_k, **common)
     print(f"[launch.serve] engine: {type(eng).__name__}")
     # production-shaped traffic: every request opens with the same system
     # prompt (what --prefix-cache shares), tails vary in length (what the
@@ -93,6 +99,13 @@ def main() -> None:
                   f"prompt tokens served from cache, "
                   f"{ps['prefill_tokens_saved']:.0f} prefill tokens saved, "
                   f"{ps['cow_copies']:.0f} CoW copies")
+        if eng.spec_k:
+            ss = eng.spec_stats()
+            print(f"[launch.serve] speculative (K={eng.spec_k}): "
+                  f"{ss['accepted_per_step']:.2f} tokens/request/step, "
+                  f"accept rate {ss['accept_rate']:.2f} "
+                  f"({ss['spec_accepted']:.0f}/{ss['spec_drafted']:.0f} "
+                  f"drafts)")
 
 
 if __name__ == "__main__":

@@ -224,7 +224,13 @@ def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None,
 
 def decode_step(cfg, params, cache, tokens, pos, *,
                 rules: Rules = NO_RULES, block_table=None):
-    """tokens: (B, 1) int32; pos: (B,) next position. -> (logits, new_cache).
+    """tokens: (B, T) int32 — T == 1 for plain decode, T > 1 for a
+    speculative multi-token verify block (paged caches only; token t of
+    request b sits at absolute position pos[b] + t). pos: (B,) position of
+    the FIRST new token. -> (logits, new_cache); logits are (B, vocab)
+    when T == 1 (the historical contract every serving loop relies on)
+    and (B, T, vocab) when T > 1 — one row per block position, which is
+    exactly what greedy speculative acceptance consumes.
     block_table: (B, n_blocks) int32 switches full-attention cache entries
     to the shared paged pool layout (see paged_cache_init); attention then
     runs the block-table indirection inside the Pallas flash-decode kernel
@@ -232,14 +238,20 @@ def decode_step(cfg, params, cache, tokens, pos, *,
     pins the dense-gather baseline."""
     kinds = tfm.pattern_for(cfg)
     _, tail = tfm.layer_plan(cfg)
+    if tokens.shape[1] > 1:
+        assert block_table is not None, \
+            "multi-token decode blocks need the paged cache layout"
     x = _embed_tokens(cfg, params, tokens)
     x = rules.cons(x, "batch,seq,embed")
     x, new_cache = tfm.stack_decode(cfg, params["blocks"], x, cache, pos,
                                     kinds, tail, rules=rules,
                                     block_table=block_table)
     x = norm_apply(params["final_norm"], x, cfg.norm)
-    logits = _logits(cfg, params, x)[:, 0]
-    return rules.cons(logits, "batch,vocab"), new_cache
+    if tokens.shape[1] == 1:
+        logits = _logits(cfg, params, x)[:, 0]
+        return rules.cons(logits, "batch,vocab"), new_cache
+    logits = _logits(cfg, params, x)
+    return rules.cons(logits, "batch,seq,vocab"), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -191,21 +191,25 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 def attend_decode(q, ck, cv, pos, *, window: int = 0,
                   kv_chunk: int = 0):
-    """Single-token attention vs a cache. q: (B, 1, H, D); ck/cv: (B, S, KV, D);
-    pos: (B,) absolute position of the NEW token (cache holds <= pos).
+    """Decode attention vs a cache. q: (B, Tq, H, D) — Tq == 1 for plain
+    decode, Tq > 1 for a speculative multi-token query block; ck/cv:
+    (B, S, KV, D); pos: (B,) absolute position of the FIRST new token
+    (row t sits at pos + t; the cache holds every earlier token plus the
+    block itself, so row t attends to pos + t + 1 keys — in-block causal).
 
     Chunked over the cache length with an online softmax so the (B, KV, G,
-    S) score tensor is never materialized — for a 32k cache this is the
-    difference between streaming the cache once and ~6 fp32 passes over a
-    17 GB intermediate (EXPERIMENTS.md §Perf C3)."""
-    B, _, H, D = q.shape
+    Tq, S) score tensor is never materialized — for a 32k cache this is
+    the difference between streaming the cache once and ~6 fp32 passes
+    over a 17 GB intermediate (EXPERIMENTS.md §Perf C3)."""
+    B, Tq, H, D = q.shape
     _, S, KV, _ = ck.shape
     G = H // KV
-    qg = q.reshape(B, KV, G, D)
+    qg = q.reshape(B, Tq, KV, G, D)
     if window:
-        nvalid = jnp.minimum(pos + 1, S)  # ring buffer: slot count
+        assert Tq == 1, "windowed ring-buffer decode is single-token"
+        nvalid = jnp.minimum(pos + 1, S)[:, None]  # ring buffer: slot count
     else:
-        nvalid = pos + 1
+        nvalid = pos[:, None] + jnp.arange(Tq)[None, :] + 1    # (B, Tq)
     c = S if kv_chunk <= 0 else min(kv_chunk, S)
     if S % c:
         c = S  # ragged cache lengths: single chunk (small-cache tests)
@@ -217,31 +221,30 @@ def attend_decode(q, ck, cv, pos, *, window: int = 0,
         m, l, o = acc
         kb = ckc[:, i]
         vb = cvc[:, i]
-        s = jnp.einsum("bkgd,bckd->bkgc", qg, kb,
+        s = jnp.einsum("btkgd,bckd->bkgtc", qg, kb,
                        preferred_element_type=jnp.float32) * (D ** -0.5)
         slots = i * c + jnp.arange(c)
-        mask = slots[None, :] < nvalid[:, None]
-        m2 = jnp.maximum(m, jnp.where(mask[:, None, None, :], s,
-                                      -jnp.inf).max(-1))
+        mask = slots[None, None, :] < nvalid[:, :, None]       # (B, Tq, c)
+        mask = mask[:, None, None]                  # over (b, k, g, t, c)
+        m2 = jnp.maximum(m, jnp.where(mask, s, -jnp.inf).max(-1))
         m2 = jnp.maximum(m2, -1e30)       # fully-masked chunk guard
-        p = jnp.where(mask[:, None, None, :],
-                      jnp.exp(s - m2[..., None]), 0.0)
+        p = jnp.where(mask, jnp.exp(s - m2[..., None]), 0.0)
         corr = jnp.exp(m - m2)
         l2 = l * corr + p.sum(-1)
         o2 = o * corr[..., None] + jnp.einsum(
-            "bkgc,bckd->bkgd", p.astype(vb.dtype), vb,
+            "bkgtc,bckd->bkgtd", p.astype(vb.dtype), vb,
             preferred_element_type=jnp.float32)
         return (m2, l2, o2), None
 
-    init = (jnp.full((B, KV, G), -1e30, jnp.float32),
-            jnp.zeros((B, KV, G), jnp.float32),
-            jnp.zeros((B, KV, G, D), jnp.float32))
+    init = (jnp.full((B, KV, G, Tq), -1e30, jnp.float32),
+            jnp.zeros((B, KV, G, Tq), jnp.float32),
+            jnp.zeros((B, KV, G, Tq, D), jnp.float32))
     if nc == 1:
         (m, l, o), _ = chunk(init, 0)
     else:
         (m, l, o), _ = jax.lax.scan(chunk, init, jnp.arange(nc))
     o = o / jnp.maximum(l[..., None], 1e-30)
-    return o.reshape(B, 1, H, D).astype(q.dtype)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, D).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -351,18 +354,24 @@ def attention_apply(cfg, p, x, *, rules: Rules = NO_RULES, positions=None,
 def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
                      window: int = 0, cross: bool = False,
                      block_table=None):
-    """One-token decode. x: (B, 1, d); pos: (B,). Returns (out, new_cache).
+    """Decode step. x: (B, T, d) — T == 1 for plain decode; pos: (B,)
+    position of the FIRST new token. Returns (out, new_cache).
 
     Dense mode (block_table=None): cache {"k","v"}: (B, S, KV, D), one lane
-    per batch slot.
+    per batch slot; single-token only (T == 1).
     Paged mode: cache {"k","v"}: (P, page, KV, D) — a shared page pool —
     and block_table: (B, n_blocks) int32 mapping each request's logical
-    blocks to physical pages (repro.runtime.kv_cache). The new token is
-    scattered into its owner's page; attention then runs the block-table
+    blocks to physical pages (repro.runtime.kv_cache). The T new tokens
+    are scattered token-granularly into their owner's pages (a block may
+    straddle a page boundary; rows past the table's capacity land on the
+    scratch page — their logits are only ever produced to be discarded by
+    the engine's max_len stop); attention then runs the block-table
     indirection INSIDE the flash-decode kernel (ops.paged_attention), one
-    page tile at a time, masked by pos + 1 — so pool garbage (scratch
-    page, not-yet-written tail) never contributes probability mass and the
-    dense (B, n_blocks*page, KV, D) gathered KV never materializes.
+    page tile at a time, causally masked row-by-row against pos + T — so
+    pool garbage (scratch page, not-yet-written tail) never contributes
+    probability mass and the dense (B, n_blocks*page, KV, D) gathered KV
+    never materializes. T > 1 is the speculative-verify block (engine
+    spec_k): K drafted tokens + the current one score in ONE page sweep.
     cfg.paged_attn_impl == "gather" keeps the PR-1 dense-gather path as
     the measured baseline (benchmarks/serve_bench.py)."""
     if cross:
@@ -375,23 +384,32 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
         out = attend_decode(q, ck, cv, n - 1)
         new_cache = cache
     elif block_table is not None:
-        B = x.shape[0]
+        B, T = x.shape[0], x.shape[1]
         q, k, v = _qkv(cfg, p, x)
-        q = rope(q, pos[:, None], cfg.rope_theta)
-        k = rope(k, pos[:, None], cfg.rope_theta)
+        pos_t = pos[:, None] + jnp.arange(T)[None, :]        # (B, T)
+        q = rope(q, pos_t, cfg.rope_theta)
+        k = rope(k, pos_t, cfg.rope_theta)
         page = cache["k"].shape[1]
-        # physical destination of the new token: page block_table[b,
-        # pos//page], row pos%page. Dead slots carry an all-scratch table,
-        # so their write lands on the scratch page, never a live lane.
-        phys = jnp.take_along_axis(block_table, (pos // page)[:, None],
-                                   axis=1)[:, 0]
-        off = pos % page
-        ck = cache["k"].at[phys, off].set(kv_quant(cfg, k[:, 0]))
-        cv = cache["v"].at[phys, off].set(kv_quant(cfg, v[:, 0]))
+        n_blk = block_table.shape[1]
+        # physical destination of row t: page block_table[b, (pos+t)//page],
+        # row (pos+t)%page — token-granular, so a T-block may straddle a
+        # page boundary. Dead slots carry an all-scratch table, and rows
+        # past the table's capacity (a verify block overrunning max_len —
+        # their logits are discarded by the engine's max_len stop) are
+        # redirected to the scratch page (id 0) too, so neither can ever
+        # scribble over a live lane.
+        blk = pos_t // page
+        phys = jnp.where(
+            blk < n_blk,
+            jnp.take_along_axis(block_table,
+                                jnp.minimum(blk, n_blk - 1), axis=1),
+            0)
+        off = pos_t % page
+        ck = cache["k"].at[phys, off].set(kv_quant(cfg, k))
+        cv = cache["v"].at[phys, off].set(kv_quant(cfg, v))
         if cfg.paged_attn_impl == "gather":
             # PR-1 baseline: dense per-layer pool gather (the "separated
             # memory" anti-pattern; kept only for serve_bench comparison)
-            n_blk = block_table.shape[1]
             kg = ck[block_table].reshape(B, n_blk * page, *ck.shape[2:])
             vg = cv[block_table].reshape(B, n_blk * page, *cv.shape[2:])
             out = attend_decode(q, kv_dequant(cfg, kg, q.dtype),
@@ -399,8 +417,8 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
                                 kv_chunk=cfg.decode_kv_chunk)
         else:
             scale = cfg.kv_scale if ck.dtype == jnp.int8 else None
-            out = ops.paged_attention(q[:, 0], ck, cv, block_table,
-                                      pos + 1, kv_scale=scale)[:, None]
+            out = ops.paged_attention(q, ck, cv, block_table,
+                                      pos + T, kv_scale=scale)
         new_cache = {"k": ck, "v": cv}
     else:
         q, k, v = _qkv(cfg, p, x)

@@ -175,9 +175,12 @@ def _window_cache(cfg, kv, w):
 
 def block_decode(cfg, kind: str, p, x, cache, pos, *,
                  rules: Rules = NO_RULES, block_table=None):
-    """One-token block step. Returns (x, new_cache). block_table switches
-    the full-attention cache entries to the paged-pool layout (see
-    layers.attention_decode); other cache kinds ignore it."""
+    """Decode block step. x: (B, T, d) — T == 1 for plain decode; paged
+    full-attention blocks also take T > 1 speculative verify blocks (pos
+    is the first row's position; see layers.attention_decode). Returns
+    (x, new_cache). block_table switches the full-attention cache entries
+    to the paged-pool layout; other cache kinds ignore it and are
+    single-token only (recurrent state advances one step at a time)."""
     h = norm_apply(p["ln1"], x, cfg.norm)
     if kind in ("attn_mlp", "attn_moe", "dec"):
         a, cache_a = attention_decode(cfg, p["attn"], h,
@@ -308,6 +311,9 @@ def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
 
 def stack_decode(cfg, params, x, caches, pos, kinds, tail, *, rules=NO_RULES,
                  block_table=None):
+    """Decode the whole stack one step. x: (B, T, d); T > 1 (a speculative
+    multi-token block) requires an attention-only stack on the paged cache
+    layout (block_table) — see block_decode."""
     def body(h, sl):
         pslice, cslice = sl
         new_c = {}

@@ -1,0 +1,46 @@
+"""Model-free draft-token proposers for speculative decoding.
+
+The verify step (``PagedServingEngine(spec_k=K)``) multiplies decode's
+arithmetic intensity by the number of query rows it scores per page sweep
+— the serving-level analogue of the paper's utilization argument (keep the
+PEs fed at the SAME memory traffic). But it only pays off when the drafted
+rows actually match what greedy decode would have emitted, so the drafter
+must be cheap (it runs on the host, per live request, per step) and must
+hit on the traffic that dominates production serving: templated prompts,
+few-shot scaffolds, code, and the repetitive spans models themselves emit.
+
+``ngram_propose`` is prompt-lookup drafting (PLD / n-gram speculation): no
+second model, no extra parameters — the request's OWN context is the
+draft model. The longest suffix n-gram of the context that occurred
+earlier is located (most recent occurrence wins: recency tracks the
+current phrase distribution better than frequency at these context sizes)
+and the tokens that followed that occurrence are proposed verbatim.
+
+Host-side only (no jax): token ids in, token ids out.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+def ngram_propose(ctx: Sequence[int], k: int, *,
+                  max_ngram: int = 3) -> List[int]:
+    """Propose up to ``k`` draft tokens continuing ``ctx`` by prompt
+    lookup: match the longest suffix n-gram (``max_ngram`` down to 1)
+    against the rest of the context and return the tokens that followed
+    its most recent earlier occurrence. Empty list = no match (the verify
+    step then degrades to a plain single-token decode: one real row plus
+    padding that is rolled back, never a wrong token)."""
+    n_ctx = len(ctx)
+    if k <= 0 or n_ctx < 2:
+        return []
+    ctx = list(ctx)
+    for n in range(min(max_ngram, n_ctx - 1), 0, -1):
+        suffix = ctx[n_ctx - n:]
+        # scan right-to-left: the MOST RECENT earlier occurrence wins
+        for start in range(n_ctx - n - 1, -1, -1):
+            if ctx[start:start + n] == suffix:
+                cont = ctx[start + n:start + n + k]
+                if cont:
+                    return cont
+    return []

@@ -176,6 +176,29 @@ class PageAllocator:
         self.peak_pages = max(self.peak_pages, self.allocated_pages)
         return page
 
+    def truncate_to(self, rid: int, n_tokens: int) -> int:
+        """Roll ``rid`` back to ``n_tokens`` live tokens (speculative-decode
+        rejection: drafted tokens past the accept point are disowned).
+        Drops the request's reference to every WHOLE page past the ones
+        ``n_tokens`` needs — refcount/CoW-safe: a dropped page that is
+        still shared or cache-pinned survives its other references, only
+        this table's claim goes. Rows of the kept tail page beyond the
+        accept point are left as garbage by design (always masked out by
+        the per-request length on the read side, overwritten by the next
+        decode write). Returns the number of table entries dropped."""
+        assert rid in self._tables
+        assert 0 < n_tokens <= self._tokens[rid], \
+            f"truncate_to({n_tokens}) must shrink rid {rid} " \
+            f"({self._tokens[rid]} tokens)"
+        table = self._tables[rid]
+        keep = self.pages_for(n_tokens)
+        dropped = len(table) - keep
+        for p in reversed(table[keep:]):   # LIFO: reuse hottest first
+            self._decref(p)
+        del table[keep:]
+        self._tokens[rid] = n_tokens
+        return dropped
+
     def replace_page(self, rid: int, block: int) -> Optional[Tuple[int, int]]:
         """Copy-on-write swap: give ``rid`` a fresh private page in table
         slot ``block``, dropping its reference to the page currently there.

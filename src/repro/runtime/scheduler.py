@@ -41,14 +41,19 @@ class Scheduler:
     def _admit(self) -> None:
         budget = self.max_admits_per_step
         while self.pending and (budget is None or budget > 0):
-            if not self.engine.submit(self.pending[0]):
+            req = self.pending[0]
+            gen_before = len(req.generated)
+            if not self.engine.submit(req):
                 break                       # out of slots or pages
-            req = self.pending.popleft()
+            self.pending.popleft()
             self.admitted += 1
-            if budget is not None:
+            # charge the admission budget only when a prefill actually
+            # ran (the prompt's first sampled token landed in generated).
+            # A degenerate request dropped-as-done — over-long prompt,
+            # exhausted generation budget — never touched the device, and
+            # a stream of them must not starve real admissions this tick.
+            if budget is not None and len(req.generated) > gen_before:
                 budget -= 1
-            if req.done:                    # finished at prefill (eos/budget)
-                continue
 
     def tick(self) -> None:
         """One scheduling round: admit -> decode (the engine's step tops up

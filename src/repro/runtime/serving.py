@@ -45,6 +45,7 @@ import numpy as np
 from repro.models import api
 from repro.models import transformer as tfm
 from repro.parallel.sharding import NO_RULES, Rules
+from repro.runtime.drafter import ngram_propose
 from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PoolStats
 from repro.runtime.prefix_cache import PrefixCache
 
@@ -78,6 +79,19 @@ def _pageable(cfg) -> bool:
     return set(tfm.pattern_for(cfg)) <= set(api.PAGEABLE_KINDS)
 
 
+def _run_to_completion(engine, requests: List[Request],
+                       max_steps: int) -> List[Request]:
+    """Shared drive loop for both engines, routed through the Scheduler so
+    an exhausted step budget fails loudly (SchedulerExhausted) instead of
+    silently returning truncated outputs."""
+    from repro.runtime.scheduler import Scheduler
+    sched = Scheduler(engine)
+    for r in requests:
+        sched.add(r)
+    sched.drain(max_steps=max_steps)
+    return [r for r in requests if r.done]
+
+
 def ServingEngine(cfg, params, **kwargs):
     """Engine factory: paged engine for attention-only stacks, dense-slot
     engine otherwise (recurrent state can't be paged or bucket-padded)."""
@@ -87,6 +101,8 @@ def ServingEngine(cfg, params, **kwargs):
     kwargs.pop("num_pages", None)
     kwargs.pop("attn_impl", None)
     kwargs.pop("prefix_cache", None)
+    kwargs.pop("spec_k", None)
+    kwargs.pop("spec_ngram", None)
     return DenseServingEngine(cfg, params, **kwargs)
 
 
@@ -102,7 +118,8 @@ class PagedServingEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  rules: Rules = NO_RULES, eos_id: int = -1,
                  temperature: float = 0.0, seed: int = 0,
-                 attn_impl: str = "kernel", prefix_cache: bool = False):
+                 attn_impl: str = "kernel", prefix_cache: bool = False,
+                 spec_k: int = 0, spec_ngram: int = 3):
         if not _pageable(cfg):
             raise ValueError("paged serving needs an attention-only stack; "
                              "use DenseServingEngine")
@@ -110,6 +127,11 @@ class PagedServingEngine:
             "page_size must be a power of two"
         if attn_impl not in ("kernel", "gather"):
             raise ValueError(f"attn_impl must be kernel|gather: {attn_impl}")
+        if spec_k and temperature > 0:
+            raise ValueError(
+                "speculative decode (spec_k > 0) requires greedy sampling "
+                "(temperature == 0): acceptance is exact-greedy — a drafted "
+                "token is kept iff it equals the argmax continuation")
         # decode attention impl rides on the (frozen) config so it reaches
         # layers.attention_decode through the jitted step without an extra
         # traced operand; "kernel" = in-kernel block-table gather (Pallas
@@ -148,6 +170,14 @@ class PagedServingEngine:
         self._admit_seq = [0] * slots         # admission order (preemption)
         self._admit_counter = 0
 
+        # speculative decode: each step verifies spec_k drafted tokens
+        # (host-side n-gram prompt-lookup, no second model) plus the
+        # current one in a single multi-token kernel sweep, accepting the
+        # longest greedy-matching prefix + one bonus token. spec_k = 0 is
+        # the plain one-token-per-step path.
+        self.spec_k = spec_k
+        self.spec_ngram = spec_ngram
+
         # telemetry
         self.prefill_traces = 0               # == number of length buckets
         self.decode_steps = 0
@@ -157,8 +187,12 @@ class PagedServingEngine:
         self.prompt_tokens = 0                # logical prompt tokens admitted
         self.prefilled_tokens = 0             # tokens actually prefilled
         self.cow_copies = 0                   # device page copies (CoW)
+        self.spec_drafted = 0                 # draft tokens proposed
+        self.spec_accepted = 0                # draft tokens accepted
+        self.spec_slot_steps = 0              # (live slot, verify step) pairs
 
         self._step_fn = jax.jit(self._make_step())
+        self._spec_fn = jax.jit(self._make_spec_step()) if spec_k else None
         self._prefill_fn = jax.jit(self._make_prefill())
         self._prefill_shared_fn = jax.jit(self._make_prefill_shared())
         self._cow_fn = jax.jit(self._make_cow())
@@ -187,6 +221,26 @@ class PagedServingEngine:
             return cache, cur2, pos2, gen2, live2, done, toks, key
 
         return step
+
+    def _make_spec_step(self):
+        """Speculative verify-step device program: scatter the whole (B, T)
+        token block's KV into the pages and score every row in ONE causal
+        page sweep (api.decode_step with T = spec_k + 1), returning the
+        per-row greedy continuation — the step's only host sync.
+        Acceptance, rollback and finish bookkeeping stay host-side: the
+        accepted length is data-dependent per request, exactly what a
+        fixed-shape jitted program can't express without padding every
+        outcome."""
+        cfg, rules = self.cfg, self.rules
+
+        def spec(params, cache, block_table, tok_block, pos):
+            logits, cache = api.decode_step(cfg, params, cache, tok_block,
+                                            pos, rules=rules,
+                                            block_table=block_table)
+            toks = jnp.argmax(logits[..., : cfg.vocab], -1).astype(jnp.int32)
+            return cache, toks
+
+        return spec
 
     def _make_prefill(self):
         cfg, rules, temp = self.cfg, self.rules, self.temperature
@@ -504,57 +558,78 @@ class PagedServingEngine:
         preempted.append(self._evict_slot(youngest))
         return True
 
-    def ensure_decode_capacity(self) -> List[Request]:
+    def ensure_decode_capacity(self, n_tokens: int = 1) -> List[Request]:
         """Allocate the pages the next decode step will write into
-        (allocate-on-demand); on pool exhaustion, evict idle prefix-cache
-        pages first, then preempt the youngest live requests until the
-        remaining ones fit. Returns preempted requests (resubmit them to
-        resume). Also enforces the write-exclusivity invariant: the page
-        the next token lands in must be privately owned — if it is shared
-        (refcount > 1: another table or the radix tree references it),
-        it is duplicated copy-on-write before the step may write it."""
+        (allocate-on-demand). ``n_tokens`` > 1 provisions a speculative
+        verify block's WHOLE write range — positions pos .. pos+n_tokens-1,
+        capped at max_len — so a multi-token step can never write an
+        unallocated page (rows past max_len are redirected to scratch by
+        the model layer and their logits discarded by the max_len stop).
+        On pool exhaustion, evict idle prefix-cache pages first, then
+        preempt the youngest live requests until the remaining ones fit.
+        Returns preempted requests (resubmit them to resume). Also
+        enforces the write-exclusivity invariant over the whole write
+        range: every page the step may write must be privately owned — if
+        one is shared (refcount > 1: another table or the radix tree
+        references it), it is duplicated copy-on-write first."""
         preempted: List[Request] = []
+        page = self.page_size
         for slot in sorted((s for s, r in enumerate(self.live)
                             if r is not None),
                            key=lambda s: self._admit_seq[s]):
             req = self.live[slot]
             if req is None:
                 continue
-            blk = self._pos_host[slot] // self.page_size
-            table = self.alloc.block_table(req.rid)
-            while blk < len(table) and self.alloc.ref(table[blk]) > 1:
-                swapped = self.alloc.replace_page(req.rid, blk)
-                if swapped is not None:
-                    src, dst = swapped
-                    self.cache = self._cow_fn(self.cache, jnp.int32(src),
-                                              jnp.int32(dst))
-                    self.block_table = self.block_table.at[slot,
-                                                           blk].set(dst)
-                    self.cow_copies += 1
-                    break
-                if not self._reclaim_one_page(slot, preempted):
-                    raise RuntimeError(
-                        "page pool too small for a single request")
+            pos = self._pos_host[slot]
+            target = min(pos + n_tokens, self.max_len)
+            # grow the table page-by-page until it covers `target` tokens
+            # (extend_to grows at most one page per call)
             while True:
-                got = self.alloc.extend_to(req.rid, self._pos_host[slot] + 1)
-                if got is not None:
-                    if got:          # fresh page: publish to device table
-                        blk = self._pos_host[slot] // self.page_size
-                        self.block_table = self.block_table.at[
-                            slot, blk].set(got)
+                have = len(self.alloc.block_table(req.rid)) * page
+                got = self.alloc.extend_to(req.rid,
+                                           min(target, have + page))
+                if got is None:
+                    if not self._reclaim_one_page(slot, preempted):
+                        raise RuntimeError(
+                            "page pool too small for a single request")
+                    continue
+                if got:              # fresh page: publish to device table
+                    self.block_table = self.block_table.at[
+                        slot, have // page].set(got)
+                if have + page >= target or not got:
                     break
-                if not self._reclaim_one_page(slot, preempted):
-                    raise RuntimeError(
-                        "page pool too small for a single request")
+            # write exclusivity across every block the step may touch
+            # (only the first — the partially-written one — can actually
+            # be shared; the loop is the defensive spelling)
+            for blk in range(pos // page, (target - 1) // page + 1):
+                while self.alloc.ref(
+                        self.alloc.block_table(req.rid)[blk]) > 1:
+                    swapped = self.alloc.replace_page(req.rid, blk)
+                    if swapped is not None:
+                        src, dst = swapped
+                        self.cache = self._cow_fn(self.cache,
+                                                  jnp.int32(src),
+                                                  jnp.int32(dst))
+                        self.block_table = self.block_table.at[
+                            slot, blk].set(dst)
+                        self.cow_copies += 1
+                        break
+                    if not self._reclaim_one_page(slot, preempted):
+                        raise RuntimeError(
+                            "page pool too small for a single request")
         return preempted
 
     def step(self) -> List[Request]:
-        """Advance every live slot one token: one device program, one host
-        sync (tokens + done flags fetched together). Tops up the pages the
-        step will write into first (a bare submit/step loop must never
-        cross a page boundary unallocated — that write would land on the
-        scratch page and silently corrupt the request); returns any
-        requests preempted by that top-up, for the caller to resubmit."""
+        """Advance every live slot: one device program, one host sync.
+        With spec_k > 0 this is a speculative verify step emitting up to
+        spec_k + 1 tokens per request; otherwise the plain one-token step.
+        Tops up the pages the step will write into first (a bare
+        submit/step loop must never cross a page boundary unallocated —
+        that write would land on the scratch page and silently corrupt
+        the request); returns any requests preempted by that top-up, for
+        the caller to resubmit."""
+        if self.spec_k:
+            return self._step_speculative()
         if not any(r is not None for r in self.live):
             return []
         evicted = self.ensure_decode_capacity()
@@ -576,6 +651,109 @@ class PagedServingEngine:
             if done[i]:
                 self._finish_slot(i)
         return evicted
+
+    def _step_speculative(self) -> List[Request]:
+        """One speculative verify step. Per live slot: draft up to spec_k
+        tokens by prompt lookup over the request's OWN context (host-side,
+        no second model), score [current token, drafts...] as a T =
+        spec_k + 1 row block in one multi-token page sweep, accept the
+        longest draft prefix matching the greedy argmax continuation plus
+        one bonus token (the argmax after the last accepted row — so even
+        an all-miss step emits exactly the plain step's token), then roll
+        position and pages back past the accept point (truncate_to: whole
+        pages the rejected rows provisioned are disowned; rejected rows
+        inside a kept page are dead rows masked by the request length and
+        overwritten by the next step). Exact-greedy by construction:
+        every emitted token IS an argmax row, so outputs equal the T=1
+        engine's token-for-token."""
+        if not any(r is not None for r in self.live):
+            return []
+        T = self.spec_k + 1
+        evicted = self.ensure_decode_capacity(T)
+        t0 = time.perf_counter()
+        tok_block = np.zeros((self.slots, T), np.int32)
+        n_draft = [0] * self.slots
+        for s, r in enumerate(self.live):
+            if r is None:
+                continue
+            ctx = r.prompt + r.generated
+            tok_block[s, 0] = ctx[-1]     # current token, not yet in cache
+            d = ngram_propose(ctx, self.spec_k, max_ngram=self.spec_ngram)
+            tok_block[s, 1:1 + len(d)] = d
+            n_draft[s] = len(d)
+            self.spec_drafted += len(d)
+            self.spec_slot_steps += 1
+        self.cache, toks_d = self._spec_fn(
+            self.params, self.cache, self.block_table,
+            jnp.asarray(tok_block), jnp.asarray(self._pos_host, jnp.int32))
+        greedy = np.asarray(jax.device_get(toks_d))   # (slots, T): one sync
+        self.step_wall_s += time.perf_counter() - t0
+        self.decode_steps += 1
+        survivors = []            # (slot, new_pos, emitted, cur_tok) rows
+        for s, r in enumerate(self.live):
+            if r is None:
+                continue
+            pos0 = self._pos_host[s]
+            a = 0                          # accepted drafts
+            while a < n_draft[s] and greedy[s, a] == tok_block[s, a + 1]:
+                a += 1
+            # emit greedy rows 0..a, applying the T=1 stop conditions in
+            # emission order (eos / generation budget / context cap) —
+            # rows past the first stop are discarded, exactly as the
+            # plain engine would never have produced them
+            finished = False
+            m = 0
+            for j in range(a + 1):
+                t = int(greedy[s, j])
+                r.generated.append(t)
+                m += 1
+                self.decoded_tokens += 1
+                if (t == self.eos_id or len(r.generated) >= r.max_new
+                        or pos0 + j + 1 >= self.max_len - 1):
+                    finished = True
+                    break
+            self.spec_accepted += m - 1
+            if finished:
+                self._finish_slot(s)       # frees every page incl. drafts
+                continue
+            # rollback: disown the whole pages past the accept point and
+            # republish their table slots as scratch on device
+            dropped = self.alloc.truncate_to(r.rid, pos0 + m)
+            if dropped:
+                keep = len(self.alloc.block_table(r.rid))
+                self.block_table = self.block_table.at[
+                    s, keep:keep + dropped].set(SCRATCH_PAGE)
+            self._pos_host[s] = pos0 + m
+            survivors.append((s, pos0 + m, m, int(r.generated[-1])))
+        if survivors:
+            # device mirrors (pos / gen / cur_tok) stay in sync — so
+            # telemetry and a switch back to the T=1 path keep working —
+            # via ONE batched update per array per step, not one dispatch
+            # per slot
+            idx = np.array([u[0] for u in survivors])
+            self.pos = self.pos.at[idx].set(
+                np.array([u[1] for u in survivors], np.int32))
+            self.gen_cnt = self.gen_cnt.at[idx].add(
+                np.array([u[2] for u in survivors], np.int32))
+            self.cur_tok = self.cur_tok.at[idx, 0].set(
+                np.array([u[3] for u in survivors], np.int32))
+        return evicted
+
+    def spec_stats(self) -> Dict[str, float]:
+        """Speculative-decode telemetry: draft volume, acceptance rate,
+        and the headline number — tokens emitted per request per verify
+        step (the plain engine is 1.0 per request-step by construction;
+        the gap above 1.0 is decode wall-clock won at unchanged per-step
+        page traffic)."""
+        return {
+            "spec_k": float(self.spec_k),
+            "spec_drafted": float(self.spec_drafted),
+            "spec_accepted": float(self.spec_accepted),
+            "accept_rate": (self.spec_accepted / self.spec_drafted
+                            if self.spec_drafted else 0.0),
+            "accepted_per_step": (self.decoded_tokens / self.spec_slot_steps
+                                  if self.spec_slot_steps else 1.0),
+        }
 
     def has_live(self) -> bool:
         return any(r is not None for r in self.live)
@@ -621,12 +799,7 @@ class PagedServingEngine:
 
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10_000) -> List[Request]:
-        from repro.runtime.scheduler import Scheduler
-        sched = Scheduler(self)
-        for r in requests:
-            sched.add(r)
-        sched.drain(max_steps=max_steps)
-        return [r for r in requests if r.done]
+        return _run_to_completion(self, requests, max_steps)
 
 
 # ===========================================================================
@@ -680,6 +853,23 @@ class DenseServingEngine:
         slot = self._free_slot()
         if slot is None:
             return False
+        # the paged engine's reject-as-done guard (see PagedServingEngine.
+        # submit): a prompt over the lane length would either break the
+        # dynamic_update_slice cache merge below (prefill cache longer
+        # than the lane) or silently clamp-overwrite the last KV row
+        # (attention_decode's dense write lands at min(pos, S-1)), and a
+        # request with no generation budget left can never emit — drop
+        # them as done with whatever they have instead of corrupting a
+        # lane or letting the scheduler retry an admission that can never
+        # succeed. The threshold is deliberately the PAGED engine's
+        # (>= max_len - 1, one token stricter than the dense lane strictly
+        # needs): both engines must agree on which requests are servable,
+        # or the dense-vs-paged equivalence baselines diverge on traces
+        # that contain a boundary-length prompt.
+        if (len(req.prompt) >= self.max_len - 1
+                or req.max_new - len(req.generated) <= 0):
+            req.done = True
+            return True
         self._seen_lengths.add(len(req.prompt))
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         last_logits, cache1, pos1 = self._prefill(self.params,
@@ -738,17 +928,10 @@ class DenseServingEngine:
 
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10_000) -> List[Request]:
-        pending = list(requests)
-        done: List[Request] = []
-        steps = 0
-        while (pending or any(r is not None for r in self.live)) \
-                and steps < max_steps:
-            while pending and self.submit(pending[0]):
-                pending.pop(0)
-            self.step()
-            steps += 1
-            done = [r for r in requests if r.done]
-        return done
+        # the bug class PR 3 fixed in Scheduler.drain, which this
+        # engine's private loop used to reintroduce by truncating
+        # silently on budget exhaustion
+        return _run_to_completion(self, requests, max_steps)
 
 
 def _batch_axis(big, one) -> int:

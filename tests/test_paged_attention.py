@@ -178,6 +178,135 @@ def test_property_kernel_matches_ref(page, n_blocks, kv, group, seed, data):
 
 
 # ---------------------------------------------------------------------------
+# Multi-token query blocks (speculative verify: q rows per request > 1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("page", [8, 16, 64])
+@pytest.mark.parametrize("T", [2, 5])
+def test_multi_token_block_matches_dense_mha(page, T):
+    """A T-row query block must equal T independent causal rows of dense
+    MHA: row t (absolute position base + t) sees exactly base + t + 1
+    keys. Lengths chosen so blocks straddle page boundaries (base % page
+    walks the whole row range) across every serving page size."""
+    B, H, KV, D, n_blocks = 3, 8, 2, 32, 128 // page
+    lengths = [T + 1, page + T // 2 + 1, 2 * page + T][:B]   # incl. T rows
+    lengths = [min(n, n_blocks * page) for n in lengths]
+    key = jax.random.key(page + T)
+    q, kp, vp, table, dk, dv = _paged_case(
+        key, B, T * H, KV, D, page, n_blocks, lengths)
+    # _paged_case builds (B, T*H, D) q; reinterpret as (B, T, H, D) rows
+    q = q.reshape(B, T, H, D)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths))
+    assert got.shape == (B, T, H, D)
+    for b in range(B):
+        for t in range(T):
+            want = ref.mha_ref(q[b, t][None, None], dk[b][None], dv[b][None],
+                               causal=False,
+                               kv_valid=lengths[b] - T + t + 1)[0, 0]
+            np.testing.assert_allclose(np.asarray(got[b, t]),
+                                       np.asarray(want),
+                                       rtol=3e-3, atol=3e-3)
+
+
+def test_multi_token_block_matches_paged_ref():
+    """Kernel vs the generalized dense-gather oracle on ragged lengths and
+    a shuffled (preemption-shaped) block table."""
+    B, H, KV, D, page, n_blocks, T = 3, 6, 3, 16, 8, 4, 3
+    lengths = [4, 17, 30]
+    q, kp, vp, table, _, _ = _paged_case(
+        jax.random.key(11), B, T * H, KV, D, page, n_blocks, lengths,
+        shuffle_key=jax.random.key(12))
+    q = q.reshape(B, T, H, D)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths))
+    want = ref.paged_attention_ref(q, kp, vp, table, jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_multi_token_rows_ignore_pool_garbage():
+    """Rows past each query row's causal horizon — including the rows the
+    block itself occupies — must contribute zero probability mass: row t
+    may see rows 0..base+t, never base+t+1..base+T-1."""
+    B, H, KV, D, page, n_blocks, T = 2, 4, 2, 16, 8, 3, 4
+    lengths = [6, 21]
+    key = jax.random.key(13)
+    q, kp, vp, table, _, _ = _paged_case(key, B, T * H, KV, D, page,
+                                         n_blocks, lengths)
+    q = q.reshape(B, T, H, D)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths))
+    # poison everything at positions >= each row's own horizon is not
+    # possible per-row in one pool, but poisoning past lengths[b]-1 (the
+    # LAST row's horizon) plus the scratch page must leave every row
+    # unchanged; per-row causality is pinned by the dense-mha test above
+    kp2, vp2 = kp.at[SCRATCH_PAGE].set(1e4), vp.at[SCRATCH_PAGE].set(1e4)
+    for b, n in enumerate(lengths):
+        blk, off = n // page, n % page
+        if off:
+            kp2 = kp2.at[table[b, blk], off:].set(1e4)
+            vp2 = vp2.at[table[b, blk], off:].set(1e4)
+    got2 = ops.paged_attention(q, kp2, vp2, table, jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+
+
+def test_single_token_block_is_bitwise_the_3d_path():
+    """(B, 1, H, D) q must reduce EXACTLY to the (B, H, D) kernel — the
+    T=1 serving path pays nothing for the generalization."""
+    B, H, KV, D, page, n_blocks = 3, 8, 2, 32, 16, 4
+    lengths = [5, 33, 64]
+    q, kp, vp, table, _, _ = _paged_case(jax.random.key(14), B, H, KV, D,
+                                         page, n_blocks, lengths)
+    a = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths))
+    b = ops.paged_attention(q[:, None], kp, vp, table, jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b[:, 0]))
+
+
+def test_multi_token_int8_pool():
+    B, H, KV, D, page, n_blocks, T = 2, 8, 2, 32, 16, 2, 3
+    lengths = [13, 32]
+    q, kp, vp, table, _, _ = _paged_case(jax.random.key(15), B, T * H, KV,
+                                         D, page, n_blocks, lengths)
+    q = q.reshape(B, T, H, D)
+    scale = 8.0
+    kq = jnp.clip(jnp.round(kp * 127 / scale), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(vp * 127 / scale), -127, 127).astype(jnp.int8)
+    got = ops.paged_attention(q, kq, vq, table, jnp.asarray(lengths),
+                              kv_scale=scale)
+    want = ref.paged_attention_ref(q, kq, vq, table, jnp.asarray(lengths),
+                                   kv_scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    page=st.sampled_from([8, 16]),
+    n_blocks=st.integers(min_value=1, max_value=4),
+    t_rows=st.integers(min_value=1, max_value=4),
+    group=st.sampled_from([1, 2]),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    data=st.data(),
+)
+def test_property_multi_token_matches_ref(page, n_blocks, t_rows, group,
+                                          seed, data):
+    """Property: random shapes, T-row blocks, tables and ragged lengths —
+    kernel == dense-gather oracle to fp32 tolerance."""
+    B, KV, D = 2, 2, 16
+    H = KV * group
+    lengths = [data.draw(st.integers(min_value=t_rows,
+                                     max_value=page * n_blocks))
+               for _ in range(B)]
+    q, kp, vp, table, _, _ = _paged_case(
+        jax.random.key(seed), B, t_rows * H, KV, D, page, n_blocks, lengths,
+        shuffle_key=jax.random.key(seed + 1))
+    q = q.reshape(B, t_rows, H, D)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths))
+    want = ref.paged_attention_ref(q, kp, vp, table, jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
 # End-to-end: the serving engine on the kernel path
 # ---------------------------------------------------------------------------
 

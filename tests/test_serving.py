@@ -70,6 +70,40 @@ def test_engine_deterministic_greedy():
     assert outs[0] == outs[1]
 
 
+def test_dense_overlong_prompt_rejected_as_done():
+    """A prompt at/over the lane length used to break the
+    dynamic_update_slice cache merge (prompt > max_len) or silently
+    clamp-overwrite the last KV row; the dense engine now mirrors the
+    paged engine's reject-as-done guard and keeps serving neighbors."""
+    from repro.runtime.serving import DenseServingEngine
+    cfg = get_smoke_config("qwen2.5-3b")
+    params = api.init_params(cfg, jax.random.key(0))
+    eng = DenseServingEngine(cfg, params, slots=2, max_len=16)
+    bad = Request(rid=0, prompt=list(range(1, 20)), max_new=4)   # 19 >= 16
+    edge = Request(rid=1, prompt=list(range(1, 16)), max_new=4)  # 15 == S-1
+    spent = Request(rid=2, prompt=[1, 2], max_new=0)             # no budget
+    ok = Request(rid=3, prompt=[1, 2, 3], max_new=3)
+    done = eng.run_to_completion([bad, edge, spent, ok], max_steps=40)
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    assert bad.generated == [] and edge.generated == []
+    assert spent.generated == []
+    assert len(ok.generated) == 3          # the healthy neighbor is intact
+
+
+def test_dense_run_to_completion_raises_on_exhausted_budget():
+    """Exhausting max_steps with work in flight must fail loudly (the
+    Scheduler.drain contract PR 3 established) instead of returning
+    silently truncated outputs."""
+    from repro.runtime.scheduler import SchedulerExhausted
+    from repro.runtime.serving import DenseServingEngine
+    cfg = get_smoke_config("qwen2.5-3b")
+    params = api.init_params(cfg, jax.random.key(0))
+    eng = DenseServingEngine(cfg, params, slots=1, max_len=32)
+    reqs = [Request(rid=0, prompt=[1, 2, 3], max_new=8)]
+    with pytest.raises(SchedulerExhausted):
+        eng.run_to_completion(reqs, max_steps=2)
+
+
 def test_engine_batched_isolation():
     """A request's output must not depend on what shares the batch."""
     cfg = get_smoke_config("qwen2.5-3b")

@@ -1,0 +1,355 @@
+"""Speculative multi-token decode: drafter units, rollback allocator
+(truncate_to) invariants incl. a hypothesis interleaving property test,
+scheduler admission-budget accounting, and engine-level exactness —
+speculative greedy must reproduce the single-token engine's outputs
+token-for-token under both attn impls, through preemption-resume, the
+prefix cache, and the max_len context cap."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.drafter import ngram_propose
+from repro.runtime.kv_cache import PageAllocator
+
+# ---------------------------------------------------------------------------
+# Drafter (pure host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_propose_longest_suffix_most_recent():
+    # suffix [1, 2] occurs twice; the MOST RECENT occurrence (index 4)
+    # wins, so the continuation is [9, 9], not [7, 8]
+    assert ngram_propose([1, 2, 7, 8, 1, 2, 9, 9, 1, 2], 2) == [9, 9]
+    # longest n-gram first: [2, 3] matches even though [3] alone also does
+    assert ngram_propose([2, 3, 5, 4, 2, 3], 1) == [5]
+
+
+def test_ngram_propose_k_caps_and_truncates():
+    ctx = [1, 2, 3, 4, 5, 1, 2]
+    assert ngram_propose(ctx, 2) == [3, 4]
+    assert ngram_propose(ctx, 10) == [3, 4, 5, 1, 2]   # runs out of context
+
+
+def test_ngram_propose_no_match_is_empty():
+    assert ngram_propose([1, 2, 3, 4, 5], 4) == []     # nothing repeats
+    assert ngram_propose([7], 4) == []                 # too short
+    assert ngram_propose([1, 2, 1, 2], 0) == []        # k = 0
+
+
+def test_ngram_propose_unigram_fallback():
+    # no 2-gram repeats, but token 5 does: unigram match proposes its
+    # continuation
+    assert ngram_propose([5, 1, 9, 5], 2) == [1, 9]
+
+
+# ---------------------------------------------------------------------------
+# Rollback allocator (pure host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_truncate_drops_whole_pages_past_accept_point():
+    a = PageAllocator(8, 4)
+    t = a.allocate(0, 14)                  # 4 pages provisioned
+    assert a.truncate_to(0, 9) == 1        # 9 tokens -> 3 pages
+    assert a.block_table(0) == t[:3]
+    assert a.tokens(0) == 9
+    assert a.free_pages == 5
+    a.check_no_aliasing()
+    # the dropped page is immediately reissuable
+    assert a.extend_to(0, 13) == t[3]      # LIFO: hottest page comes back
+    a.check_no_aliasing()
+
+
+def test_truncate_within_page_drops_nothing():
+    a = PageAllocator(4, 8)
+    a.allocate(0, 10)                      # 2 pages
+    assert a.truncate_to(0, 9) == 0        # still 2 pages
+    assert a.tokens(0) == 9
+    a.check_no_aliasing()
+
+
+def test_truncate_is_refcount_safe_for_shared_and_pinned_pages():
+    a = PageAllocator(8, 4)
+    t0 = a.allocate(0, 12)                 # 3 pages
+    a.cache_pin(t0[2])                     # radix tree holds the tail page
+    t1 = a.allocate_shared(1, 12, t0)      # full-table sharing
+    assert a.truncate_to(1, 5) == 1        # rid 1 drops blocks 2 (shared)
+    assert a.truncate_to(1, 4) == 1        # ... and block 1
+    # shared pages survive rid 0's references; nothing came free
+    assert a.ref(t0[1]) == 1 and a.ref(t0[2]) == 2    # table + pin
+    assert a.free_pages == 5
+    a.check()
+    a.free_request(0)
+    assert a.ref(t0[2]) == 1               # pin alone keeps it alive
+    assert t1[0] == t0[0] and a.ref(t0[0]) == 1       # rid 1 still holds it
+    a.check()
+
+
+def test_truncate_rejects_growth_and_zero():
+    a = PageAllocator(4, 4)
+    a.allocate(0, 6)
+    with pytest.raises(AssertionError):
+        a.truncate_to(0, 7)                # truncate cannot grow
+    with pytest.raises(AssertionError):
+        a.truncate_to(0, 0)                # a live request keeps >= 1 token
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_truncate_interleavings_keep_invariants(data):
+    """Property: random allocate / extend / truncate / free interleavings
+    preserve every pool invariant (check()) and the unique-owner page
+    accounting — allocated pages always equal exactly what the live
+    requests' token counts need (tests/test_pdma_property.py style,
+    applied to the speculative rollback path)."""
+    page = data.draw(st.sampled_from([4, 8]))
+    a = PageAllocator(data.draw(st.integers(min_value=8, max_value=24)),
+                      page)
+    live = {}
+    next_rid = 0
+    for _ in range(data.draw(st.integers(min_value=1, max_value=40))):
+        op = data.draw(st.sampled_from(
+            ["alloc", "extend", "truncate", "free"]))
+        if op == "alloc" or not live:
+            n = data.draw(st.integers(min_value=1, max_value=3 * page))
+            if a.allocate(next_rid, n) is not None:
+                live[next_rid] = n
+            next_rid += 1
+        elif op == "extend":
+            rid = data.draw(st.sampled_from(sorted(live)))
+            # one decode step's worth: at most a page boundary crossing
+            n = live[rid] + data.draw(st.integers(min_value=1,
+                                                  max_value=page))
+            if a.extend_to(rid, n) is not None:
+                live[rid] = n
+        elif op == "truncate":
+            rid = data.draw(st.sampled_from(sorted(live)))
+            n = data.draw(st.integers(min_value=1, max_value=live[rid]))
+            a.truncate_to(rid, n)
+            live[rid] = n
+        else:
+            rid = data.draw(st.sampled_from(sorted(live)))
+            a.free_request(rid)
+            del live[rid]
+        a.check_no_aliasing()
+        assert a.allocated_pages == sum(a.pages_for(n)
+                                        for n in live.values())
+        for rid, n in live.items():
+            assert a.tokens(rid) == n
+            assert len(a.block_table(rid)) == a.pages_for(n)
+    for rid in sorted(live):
+        a.free_request(rid)
+    assert a.allocated_pages == 0 and a.free_pages == a.num_pages
+
+
+# ---------------------------------------------------------------------------
+# Scheduler admission budget (host-side; stub engine)
+# ---------------------------------------------------------------------------
+
+
+class _StubEngine:
+    """One-slot engine: prompts of length >= 8 are degenerate (dropped
+    as done WITHOUT prefilling, like both real engines' guards); real
+    submits append a token (the prefill's sample)."""
+
+    def __init__(self):
+        self.live = [None]
+        self.prefills = 0
+
+    def submit(self, req):
+        if len(req.prompt) >= 8:
+            req.done = True
+            return True
+        if self.live[0] is not None:
+            return False
+        self.prefills += 1
+        req.generated.append(0)
+        self.live[0] = req
+        return True
+
+    def step(self):
+        r = self.live[0]
+        if r is not None:
+            r.generated.append(0)
+            if len(r.generated) >= r.max_new:
+                r.done = True
+                self.live[0] = None
+        return []
+
+    def has_live(self):
+        return self.live[0] is not None
+
+
+def test_admit_budget_not_charged_for_degenerate_drops():
+    """A stream of unservable requests dropped-as-done must not consume
+    the per-tick admission budget and starve the real request behind
+    them."""
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import Request
+    eng = _StubEngine()
+    sched = Scheduler(eng, max_admits_per_step=1)
+    for i in range(3):                      # three degenerates first
+        sched.add(Request(rid=i, prompt=list(range(9)), max_new=4))
+    real = Request(rid=9, prompt=[1, 2], max_new=2)
+    sched.add(real)
+    sched.tick()
+    # every degenerate was drained AND the real request was prefilled in
+    # the same tick — the budget was only charged for the actual prefill
+    assert eng.prefills == 1
+    assert not sched.pending
+    sched.drain(max_steps=10)
+    assert real.done and len(real.generated) == 2
+
+
+def test_admit_budget_still_caps_real_prefills():
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import Request
+    eng = _StubEngine()
+    sched = Scheduler(eng, max_admits_per_step=1)
+    r0 = Request(rid=0, prompt=[1], max_new=9)
+    r1 = Request(rid=1, prompt=[2], max_new=9)
+    sched.add(r0)
+    sched.add(r1)
+    sched.tick()
+    assert eng.prefills == 1               # budget caps at one real prefill
+    assert len(sched.pending) == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine-level exactness (jax; small smoke model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import api
+    cfg = get_smoke_config("qwen2.5-3b")
+    return cfg, api.init_params(cfg, jax.random.key(0))
+
+
+def _mk_reqs(max_new=10):
+    from repro.runtime.serving import Request
+    # repetitive prompts (so the n-gram drafter hits) + a non-repeating
+    # one (so the all-miss fallback path runs too)
+    return [Request(rid=0, prompt=[3, 1, 4, 1, 5, 3, 1, 4, 1],
+                    max_new=max_new),
+            Request(rid=1, prompt=[2, 7, 2, 7, 2, 7], max_new=max_new),
+            Request(rid=2, prompt=[9, 8, 7], max_new=max_new // 2)]
+
+
+def _run(cfg, params, reqs, *, max_steps=400, **kw):
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import PagedServingEngine
+    eng = PagedServingEngine(cfg, params, slots=kw.pop("slots", 2),
+                             max_len=kw.pop("max_len", 64),
+                             page_size=kw.pop("page_size", 8), **kw)
+    sched = Scheduler(eng)
+    for r in reqs:
+        sched.add(r)
+    sched.drain(max_steps=max_steps)
+    eng.check()
+    return eng, sched
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("impl", ["gather", "kernel"])
+def test_speculative_greedy_equals_plain_greedy(qwen, impl):
+    """The acceptance rule's whole contract: every emitted token is an
+    argmax row, so spec_k > 0 changes WHEN tokens are computed, never
+    WHICH — outputs equal the T=1 engine's exactly, under both attn
+    impls."""
+    cfg, params = qwen
+    want_reqs = _mk_reqs()
+    _run(cfg, params, want_reqs, attn_impl=impl)
+    want = {r.rid: r.generated for r in want_reqs}
+
+    got_reqs = _mk_reqs()
+    eng, _ = _run(cfg, params, got_reqs, attn_impl=impl, spec_k=4)
+    assert {r.rid: r.generated for r in got_reqs} == want
+    ss = eng.spec_stats()
+    assert ss["spec_drafted"] > 0          # the drafter did engage
+    assert eng.alloc.allocated_pages == 0  # rollback + finish reclaimed all
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("impl", ["gather", "kernel"])
+def test_speculative_with_preemption_resumes_exactly(qwen, impl):
+    """A pool too small for both requests' K+1 token headroom forces
+    preemption mid-speculation; resumed requests must still match the
+    plain engine token-for-token and leak no pages."""
+    cfg, params = qwen
+    want_reqs = _mk_reqs(max_new=8)[:2]
+    _run(cfg, params, want_reqs, attn_impl=impl, max_len=32,
+         page_size=4, num_pages=6)
+    want = {r.rid: r.generated for r in want_reqs}
+
+    got_reqs = _mk_reqs(max_new=8)[:2]
+    eng, sched = _run(cfg, params, got_reqs, attn_impl=impl, max_len=32,
+                      page_size=4, num_pages=6, spec_k=3)
+    assert {r.rid: r.generated for r in got_reqs} == want
+    assert sched.preempted >= 1
+    assert eng.alloc.allocated_pages == 0
+    eng.alloc.check_no_aliasing()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("impl", ["gather", "kernel"])
+def test_speculative_with_prefix_cache_exact(qwen, impl):
+    """Speculation composes with prefix sharing: CoW write exclusivity is
+    enforced over the whole K+1 write range and rollback decrefs never
+    free a page the radix tree still pins."""
+    from repro.runtime.serving import Request
+    cfg, params = qwen
+    sys = [7, 3, 9, 1, 4, 4, 2, 8, 6, 5]
+
+    def mk():
+        return [Request(rid=0, prompt=sys + [11, 12], max_new=6),
+                Request(rid=1, prompt=sys + [13, 14, 15], max_new=6),
+                Request(rid=2, prompt=sys + [11, 12], max_new=6)]
+
+    want_reqs = mk()
+    _run(cfg, params, want_reqs, attn_impl=impl, max_len=32,
+         page_size=4)
+    want = {r.rid: r.generated for r in want_reqs}
+
+    got_reqs = mk()
+    eng, _ = _run(cfg, params, got_reqs, attn_impl=impl, max_len=32,
+                  page_size=4, prefix_cache=True, spec_k=3)
+    assert {r.rid: r.generated for r in got_reqs} == want
+    assert eng.prefix.hits >= 2
+    eng.check()
+
+
+@pytest.mark.slow
+def test_speculative_respects_max_len_cap(qwen):
+    """Unbounded max_new: both engines must truncate at the max_len - 1
+    context cap at the same token — the verify block's overflow rows
+    (positions past max_len) write to scratch and their logits are
+    discarded, never emitted."""
+    from repro.runtime.serving import Request
+    cfg, params = qwen
+
+    def mk():
+        return [Request(rid=0, prompt=[5, 4, 3, 2, 1], max_new=1000),
+                Request(rid=1, prompt=[1, 2, 1, 2, 1, 2], max_new=1000)]
+
+    want_reqs = mk()
+    _run(cfg, params, want_reqs, attn_impl="gather", max_len=16,
+         page_size=4)
+    want = {r.rid: r.generated for r in want_reqs}
+
+    got_reqs = mk()
+    eng, _ = _run(cfg, params, got_reqs, attn_impl="gather", max_len=16,
+                  page_size=4, spec_k=3)
+    assert {r.rid: r.generated for r in got_reqs} == want
+    assert all(len(g) > 0 for g in want.values())
+    assert eng.alloc.allocated_pages == 0
+
+
+def test_speculative_requires_greedy(qwen):
+    from repro.runtime.serving import PagedServingEngine
+    cfg, params = qwen
+    with pytest.raises(ValueError, match="greedy"):
+        PagedServingEngine(cfg, params, spec_k=4, temperature=0.7)
