@@ -1,8 +1,8 @@
 """Serving engine benchmark: paged (in-kernel vs dense-gather decode
-attention) vs the seed dense-slot engine, plus the prefix-sharing and
-speculative-decode scenarios.
+attention) vs the seed dense-slot engine, plus the prefix-sharing,
+speculative-decode and hybrid-stack scenarios.
 
-Three scenarios, all generated deterministically from ``--seed`` so the CI
+Four scenarios, all generated deterministically from ``--seed`` so the CI
 bench-smoke CSV artifacts are comparable run-to-run:
 
 **mixed** — a mixed-length request trace (every prompt a different length —
@@ -58,8 +58,24 @@ ratio row is the claim: identical greedy tokens in fewer weight/KV
 streams, i.e. decode arithmetic intensity multiplied by
 ``accepted_per_step`` at unchanged page traffic.
 
+**hybrid** — a griffin-style hybrid stack (``recurrentgemma-9b`` smoke:
+rglru + local_attn sliding window) with prompts LONGER than the window,
+replayed through the dense baseline and the paged engine under both attn
+impls. This is ISSUE 5's claim: windowed layers get paged ring buffers
+whose pages are *recycled* as they slide out of the window
+(``PageAllocator.release_prefix``), so ``peak_kv_tokens`` stays O(window)
+per request while the dense engine reserves ``slots * max_len``; recurrent
+layers ride along in fixed-size state slots. Extra columns:
+``win_recycled_pages`` (pages slid out and freed), ``win_page_bound``
+(ceil(window/page) + 1 — the per-request live-page ceiling the engine
+enforces), and the ``paged/dense`` ratio row's ``peak_kv_tokens`` is the
+headline (window / max_len-bound memory, identical greedy tokens).
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen2.5-3b]
-      [--seed 0] [--scenario mixed|shared-prefix|speculative|all]
+      [--seed 0] [--scenario mixed|shared-prefix|speculative|hybrid|all]
+
+(the hybrid scenario pins its own arch — recurrentgemma-9b smoke — since
+it exists to exercise the windowed/recurrent block kinds.)
 """
 from __future__ import annotations
 
@@ -142,6 +158,7 @@ def _warm(engine, mk_trace) -> None:
         engine.spec_drafted = 0
         engine.spec_accepted = 0
         engine.spec_slot_steps = 0
+        engine.win_recycled_pages = 0
         # the pool's high-water marks survive the warmup run otherwise:
         # the timed replay's peak_kv_tokens / shared_page_refs columns
         # would report the warmup trace's peaks, not the replay's
@@ -164,8 +181,18 @@ def _attn_peak_live_bytes(cfg, engine) -> int:
         return 2 * engine.page_size * kv * hd * itemsize
     # dense lanes / dense gather: the whole (B, max_len, KV, D) K and V,
     # materialized DEQUANTIZED to the 2-byte activation dtype
-    # (layers.kv_dequant) regardless of the cache storage dtype
-    return 2 * engine.slots * engine.max_len * kv * hd * 2
+    # (layers.kv_dequant) regardless of the cache storage dtype. A dense
+    # engine whose attention is ALL sliding-window (griffin-style: no
+    # full-attention kinds) only ever holds window-sized rings, so its
+    # working set is window-bounded; any full-attention layer in the
+    # pattern holds max_len lanes (the paged gather baseline always
+    # materializes the full table length).
+    seq = engine.max_len
+    if not isinstance(engine, PagedServingEngine) and cfg.hybrid is not None:
+        from repro.models.api import PAGEABLE_KINDS
+        if not set(cfg.hybrid.pattern) & set(PAGEABLE_KINDS):
+            seq = min(seq, cfg.hybrid.window)
+    return 2 * engine.slots * seq * kv * hd * 2
 
 
 def _drive(engine, reqs: List[Request], max_steps: int, cfg,
@@ -330,6 +357,61 @@ def _run_speculative(cfg, params, slots, max_len, n_requests, max_new,
     return rows
 
 
+def _hybrid_trace(cfg, n_requests: int, max_new: int, seed: int,
+                  window: int) -> List[Request]:
+    """Prompts straddling the attention window (some shorter, most
+    longer), so admission, recycling and the window-boundary masking all
+    run inside the timed replay."""
+    rng = random.Random(seed)
+    return [Request(rid=i,
+                    prompt=[rng.randrange(cfg.vocab)
+                            for _ in range(window // 2 + (5 * i) % (2 * window))],
+                    max_new=max_new)
+            for i in range(n_requests)]
+
+
+def _run_hybrid(slots, max_len, n_requests, max_new, seed) -> List[Dict]:
+    cfg = get_smoke_config("recurrentgemma-9b")
+    params = api.init_params(cfg, jax.random.key(0))
+    window = cfg.hybrid.window
+
+    def mk(new):
+        return _hybrid_trace(cfg, n_requests, new, seed, window)
+
+    rows = []
+    dense = DenseServingEngine(cfg, params, slots=slots, max_len=max_len)
+    _warm(dense, mk)
+    rows.append(_drive(dense, mk(max_new), 4000, cfg,
+                       name="dense[hybrid]"))
+    for impl in ("gather", "kernel"):
+        paged = PagedServingEngine(cfg, params, slots=slots,
+                                   max_len=max_len, attn_impl=impl)
+        _warm(paged, mk)
+        row = _drive(paged, mk(max_new), 4000, cfg,
+                     name=f"paged[{impl},hybrid]")
+        row["win_recycled_pages"] = paged.win_recycled_pages
+        row["win_page_bound"] = paged.win_pages_bound(max_len)
+        rows.append(row)
+    d, k = rows[0], rows[2]
+    rows.append({
+        "engine": "paged/dense[hybrid]",
+        "requests_done": k["requests_done"] - d["requests_done"],
+        "tokens": k["tokens"] - d["tokens"],
+        "wall_s": d["wall_s"] / k["wall_s"] if k["wall_s"] else 0.0,
+        "decode_tok_s": k["decode_tok_s"] / d["decode_tok_s"]
+        if d["decode_tok_s"] else 0.0,
+        "trace_tok_s": k["trace_tok_s"] / d["trace_tok_s"]
+        if d["trace_tok_s"] else 0.0,
+        # the headline: peak physical KV, O(window)-recycled pages vs the
+        # dense engine's slots * max_len reservation — same greedy tokens
+        "peak_kv_tokens": k["peak_kv_tokens"] - d["peak_kv_tokens"],
+        "kv_util_vs_dense": k["kv_util_vs_dense"],
+        "win_recycled_pages": k["win_recycled_pages"],
+        "win_page_bound": k["win_page_bound"],
+    })
+    return rows
+
+
 def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
         n_requests: int = 12, max_new: int = 8, smoke: bool = False,
         seed: int = 0, scenario: str = "all",
@@ -353,6 +435,11 @@ def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
         # trace even when the other scenarios run short ones
         rows += _run_speculative(cfg, params, slots, max_len,
                                  n_requests, max(max_new, 24), seed, spec_k)
+    if scenario in ("hybrid", "all"):
+        # windowed/recurrent stacks pin their own arch (recurrentgemma
+        # smoke) and a decode tail long enough to slide past the window
+        rows += _run_hybrid(slots, max_len, max(4, n_requests // 2),
+                            max(max_new, 24), seed)
     return rows
 
 
@@ -367,7 +454,8 @@ def main() -> None:
                     help="trace-generation seed (same seed -> same trace, "
                          "so CI CSV artifacts are comparable run-to-run)")
     ap.add_argument("--scenario",
-                    choices=["mixed", "shared-prefix", "speculative", "all"],
+                    choices=["mixed", "shared-prefix", "speculative",
+                             "hybrid", "all"],
                     default="all")
     ap.add_argument("--sys-len", type=int, default=48,
                     help="shared system-prompt length for shared-prefix")

@@ -7,8 +7,11 @@ with the same "system prompt", so --prefix-cache shows cross-request KV
 sharing (radix-tree match, refcounted pages, suffix-only prefill), and
 --spec-k K turns on speculative decode (K prompt-lookup drafted tokens
 verified per multi-token step, exact greedy).
-Recurrent archs (mamba2, recurrentgemma) transparently fall back to the
-dense-slot engine.
+Recurrent/hybrid archs (mamba2, recurrentgemma) serve through the SAME
+paged engine since ISSUE 5: sliding-window layers use paged ring buffers
+with page recycling (O(window) live pages per request), recurrent layers
+fixed-size state slots — continuous batching, bucketed prefill and
+speculative decode all included.
 
   PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
            [--slots 4] [--requests 8] [--max-new 16] [--prefix-cache]
@@ -81,6 +84,9 @@ def main() -> None:
                   f"({ps['prefill_tokens_saved']:.0f} prefill tokens "
                   f"saved, {ps['cow_copies']:.0f} CoW copies, "
                   f"{ps['cached_pages']:.0f} pages cached)")
+        if eng.has_win:
+            print(f"[serve] sliding window ({eng.window} tokens): "
+                  f"{eng.win_recycled_pages} pages recycled in-flight")
         if eng.spec_k:
             ss = eng.spec_stats()
             print(f"[serve] speculative (K={eng.spec_k}): "

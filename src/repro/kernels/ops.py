@@ -52,7 +52,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_table: jax.Array, lengths, *,
-                    kv_scale: Optional[float] = None) -> jax.Array:
+                    kv_scale: Optional[float] = None,
+                    window: int = 0) -> jax.Array:
     """Flash-decode over a paged KV pool: the block-table indirection runs
     INSIDE the kernel (scalar-prefetched table, page-granular KV tiles,
     online softmax), so the per-layer dense gather of the PR-1 serving
@@ -61,9 +62,12 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     T-token query block (speculative verify — in-sweep causal masking,
     same kernel, same page traffic); pools: (P, page, KV, D); block_table:
     (B, n_blocks); lengths: (B,) live tokens INCLUDING the q block
-    (base + T; T == 1 reduces to the old pos + 1 contract)."""
+    (base + T; T == 1 reduces to the old pos + 1 contract). window > 0 =
+    sliding-window attention (hybrid local_attn layers): rows see at most
+    the last `window` keys, and pages entirely below the window — which
+    the serving engine recycles to scratch — are skipped in-grid."""
     return _paged.paged_attention(q, k_pool, v_pool, block_table, lengths,
-                                  kv_scale=kv_scale,
+                                  kv_scale=kv_scale, window=window,
                                   interpret=not _on_tpu())
 
 

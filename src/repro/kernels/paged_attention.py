@@ -35,6 +35,14 @@ indirection *inside* the attention kernel, vLLM-style:
 * blocks past a request's valid length are skipped (``pl.when``), so a
   short request in a long-table batch pays for the pages it owns, not for
   ``max_blocks``;
+* **sliding windows** (hybrid stacks, ``local_attn`` layers): a static
+  ``window`` bounds how far back each query row may look. Grid steps
+  whose page lies entirely below the earliest row's window start are
+  skipped too — paired with the engine's page recycling
+  (``runtime/kv_cache.release_prefix``) the sweep costs
+  O(window / page) tiles per request however long its logical context
+  grows — and the straddling page is trimmed by an extra in-sweep mask
+  term (key position must exceed ``base + t - window``);
 * int8 KV pools are dequantized tile-by-tile inside the kernel
   (``kv_scale``), so the f32 view of the cache never materializes either.
 
@@ -60,7 +68,8 @@ _NEG = -1e30
 
 def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                   acc_ref, *, page: int, n_blocks: int, n_rows: int,
-                  group: int, scale: float, dequant: Optional[float]):
+                  group: int, scale: float, dequant: Optional[float],
+                  window: int):
     b = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -71,11 +80,23 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     length = len_ref[b]
+    T = n_rows // group
 
     # skip pages entirely past this request's live tokens: the sweep costs
     # ceil(length/page) page tiles, not max_blocks (decode step >= 1 token,
-    # so block 0 always runs and the init above is never skipped)
-    @pl.when(i * page < length)
+    # so block 0 always runs in the full-causal case; windowed sweeps may
+    # skip it, but the init/finalize pl.when blocks above/below run on
+    # their grid steps regardless). With a window, pages entirely below
+    # the EARLIEST query row's window start — key positions <=
+    # base - window with base = length - T — are skipped as well: the
+    # sweep touches O(window / page) live tiles however long the logical
+    # context is (the engine recycles those pages; their table entries
+    # point at scratch).
+    run = i * page < length
+    if window > 0:
+        run = jnp.logical_and(run, (i + 1) * page > length - T - window + 1)
+
+    @pl.when(run)
     def _block():
         q = q_ref[0].astype(jnp.float32)             # (KV, T*G, D)
         k = k_ref[0]                                 # (page, KV, D) — the
@@ -94,8 +115,12 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         # in-sweep causal mask: row r = t*G + g holds query token t, whose
         # absolute position is base + t with base = length - T; it may see
         # keys at positions < base + t + 1. T == 1 reduces to pos < length.
+        # A sliding window additionally requires pos > base + t - window
+        # (trims the straddling page; fully-dead pages were skipped above).
         t_row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // group
-        mask = pos < (length - (n_rows // group)) + t_row + 1
+        mask = pos < (length - T) + t_row + 1
+        if window > 0:
+            mask = jnp.logical_and(mask, pos > (length - T) + t_row - window)
         s = jnp.where(mask, s, _NEG)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(-1))
@@ -118,7 +143,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_table: jax.Array, lengths, *,
-                    kv_scale: Optional[float] = None,
+                    kv_scale: Optional[float] = None, window: int = 0,
                     interpret: bool = True) -> jax.Array:
     """Flash-decode over a paged KV pool. Returns q's shape.
 
@@ -128,13 +153,20 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     k/v_pool:    (P, page, KV, D) shared page pools (bf16/f32 or int8).
     block_table: (B, n_blocks) int32 — logical block j of request b lives
                  in physical page ``block_table[b, j]`` (scratch page 0 for
-                 never-written tails; masked out by ``lengths``).
+                 never-written tails AND for window-recycled lead blocks;
+                 masked out by ``lengths`` / ``window``).
     lengths:     (B,) int32 (or scalar) — live tokens per request
                  INCLUDING every token of the q block just written (i.e.
                  base + T). Traced. Row t attends causally to
                  ``lengths - T + t + 1`` keys.
     kv_scale:    static absmax bound when the pools are int8
                  (dequant = kv_scale / 127, matching layers.kv_dequant).
+    window:      static sliding window (0 = full causal): row t sees only
+                 keys at positions in ``(base + t - window, base + t]``.
+                 Pages entirely below the window are skipped — the
+                 serving engine recycles them (their table entries are
+                 scratch), so a windowed layer's sweep AND footprint stay
+                 O(window) however long the request runs.
     """
     squeeze = q.ndim == 3
     if squeeze:
@@ -142,13 +174,15 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     B = q.shape[0]
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
     out = _paged(q, k_pool, v_pool, block_table, lengths,
-                 kv_scale=kv_scale, interpret=interpret)
+                 kv_scale=kv_scale, window=window, interpret=interpret)
     return out[:, 0] if squeeze else out
 
 
-@functools.partial(jax.jit, static_argnames=("kv_scale", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("kv_scale", "window", "interpret"))
 def _paged(q, k_pool, v_pool, block_table, lengths, *,
-           kv_scale: Optional[float], interpret: bool) -> jax.Array:
+           kv_scale: Optional[float], window: int, interpret: bool
+           ) -> jax.Array:
     B, T, H, D = q.shape
     P, page, KV, _ = k_pool.shape
     assert H % KV == 0, (H, KV)
@@ -187,7 +221,7 @@ def _paged(q, k_pool, v_pool, block_table, lengths, *,
     out = pl.pallas_call(
         functools.partial(_paged_kernel, page=page, n_blocks=n_blocks,
                           n_rows=T * G, group=G, scale=D ** -0.5,
-                          dequant=dequant),
+                          dequant=dequant, window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, T * G, D), q.dtype),
         compiler_params=tpu_compiler_params(

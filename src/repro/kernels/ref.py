@@ -43,7 +43,8 @@ def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         block_table: jax.Array, lengths, *,
-                        kv_scale: Optional[float] = None) -> jax.Array:
+                        kv_scale: Optional[float] = None,
+                        window: int = 0) -> jax.Array:
     """Dense-gather oracle for the paged flash-decode kernel.
 
     Deliberately does the thing the kernel exists to avoid — gather every
@@ -53,6 +54,9 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     (B, n_blocks); lengths: (B,) live tokens INCLUDING the q block (base +
     T): query row t sits at absolute position base + t and attends to
     lengths - T + t + 1 keys (T == 1 reduces to the old pos + 1 contract).
+    window > 0 additionally bounds each row to keys at positions in
+    (base + t - window, base + t] — buffer index == absolute position, so
+    window-recycled (scratch) lead blocks are masked out by construction.
     """
     squeeze = q.ndim == 3
     if squeeze:
@@ -76,6 +80,8 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     kpos = jnp.arange(n_blocks * page)[None, None, :]
     qlen = (lengths[:, None] - T + jnp.arange(T)[None, :] + 1)[..., None]
     mask = kpos < qlen                                  # (B, T, S)
+    if window > 0:
+        mask = mask & (kpos >= qlen - window)
     s = jnp.where(mask[:, :, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("btkgs,bskd->btkgd", p, vg)

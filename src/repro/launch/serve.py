@@ -5,9 +5,13 @@
       [--page-size 16] [--num-pages N] [--paged-attn kernel|gather] \
       [--prefix-cache] [--spec-k K]
 
-Attention-only stacks default to the paged KV-cache engine (continuous
-batching over a shared page pool, bucketed prefill); recurrent stacks fall
-back to the dense-slot engine automatically.
+Every decoder-only stack defaults to the paged KV-cache engine (continuous
+batching over a shared page pool, bucketed prefill) — hybrid stacks
+included: sliding-window layers get paged ring buffers whose pages are
+recycled as they slide out of the window (O(window) live pages per
+request), recurrent layers get fixed-size state slots. Only
+encoder-decoder stacks fall back to the dense-slot engine (with a warning
+naming any paged-engine kwargs that fallback drops).
 """
 from __future__ import annotations
 
@@ -92,6 +96,11 @@ def main() -> None:
         print(f"[launch.serve] kv pages: peak {st.peak_pages}/{st.num_pages} "
               f"({st.peak_pages * st.page_size} tokens reserved at peak vs "
               f"{st.dense_equiv_tokens} dense)")
+        if eng.has_win:
+            print(f"[launch.serve] sliding window ({eng.window} tokens): "
+                  f"{eng.win_recycled_pages} pages recycled as they slid "
+                  f"out (live window pages per request capped at "
+                  f"{eng.win_pages_bound(args.max_len)})")
         if eng.prefix is not None:
             ps = eng.prefix_stats()
             print(f"[launch.serve] prefix cache: hit rate "

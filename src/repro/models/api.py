@@ -79,7 +79,8 @@ def _encode(cfg, params, enc_embeds, rules):
 
 def forward_hidden(cfg, params, batch: Dict[str, Any], *,
                    rules: Rules = NO_RULES, want_cache: bool = False,
-                   max_len=None, prefix_kv=None, prefix_len=None):
+                   max_len=None, prefix_kv=None, prefix_len=None,
+                   length=None, paged_kv: bool = False):
     """batch: {tokens [, frontend_embeds | enc_embeds]} -> (hidden, caches,
     aux). Sequence layout for VLM: [frontend_embeds | token embeds].
 
@@ -87,7 +88,14 @@ def forward_hidden(cfg, params, batch: Dict[str, Any], *,
     request whose first prefix_len tokens' KV is being reused from the
     paged pool (prefix sharing); positions and causal masks are offset
     accordingly. Attention-only stacks only — recurrent state cannot be
-    reconstructed from cached KV."""
+    reconstructed from cached KV.
+
+    length (scalar/(B,), may be traced) + paged_kv: bucketed prefill for
+    stacks with recurrent / windowed state — `tokens` is right-padded to
+    a bucket size and only the first `length` are real. Recurrent blocks
+    mask their state updates past `length` (the returned state is the
+    state at length - 1) and local_attn returns full-sequence kv for the
+    paged window scatter instead of a ring buffer (see block_apply)."""
     kinds = tfm.pattern_for(cfg)
     _, tail = tfm.layer_plan(cfg)
     if prefix_kv is not None:
@@ -110,7 +118,8 @@ def forward_hidden(cfg, params, batch: Dict[str, Any], *,
                                      rules=rules, positions=positions,
                                      enc_out=enc_out, want_cache=want_cache,
                                      max_len=max_len, prefix_kv=prefix_kv,
-                                     prefix_len=prefix_len)
+                                     prefix_len=prefix_len, length=length,
+                                     paged_kv=paged_kv)
     x = norm_apply(params["final_norm"], x, cfg.norm)
     return x, caches, aux
 
@@ -185,7 +194,8 @@ def loss_fn(cfg, params, batch, *, rules: Rules = NO_RULES):
 
 
 def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None,
-            length=None, prefix_kv=None, prefix_len=None):
+            length=None, prefix_kv=None, prefix_len=None,
+            paged_kv: bool = False):
     """Run the full prompt; returns (last_logits, cache, next_pos). Full-attn
     kv caches are padded out to `max_len` slots for subsequent decoding.
     Logits are computed for the LAST position only (the (B, S, vocab) tensor
@@ -196,9 +206,13 @@ def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None,
     at position length-1 and next_pos = length. Causal masking already
     keeps positions < length independent of the padding, so one trace
     serves every prompt length in the bucket (the serving engine's
-    mixed-grained-prefetch analogue). Only valid for attention-only stacks:
-    recurrent blocks (ssm/rglru) and windowed ring buffers carry padding
-    into their state, so those callers must pass exact-length tokens.
+    mixed-grained-prefetch analogue). Stacks with recurrent / windowed
+    state additionally need ``paged_kv=True``: recurrent blocks then mask
+    state updates past ``length`` (so the returned state is the state at
+    length - 1 — padding never leaks into it) and local_attn blocks
+    return full-sequence kv for the paged window scatter; WITHOUT
+    paged_kv those callers must pass exact-length tokens (the dense
+    engine's ring buffers carry padding into their state otherwise).
 
     prefix_kv + prefix_len (traced): suffix-only prefill — `tokens` and
     `length` describe only the part of the prompt AFTER a prefix whose KV
@@ -207,7 +221,9 @@ def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None,
     suffix tokens (callers add prefix_len)."""
     x, caches, _ = forward_hidden(cfg, params, batch, rules=rules,
                                   want_cache=True, max_len=max_len,
-                                  prefix_kv=prefix_kv, prefix_len=prefix_len)
+                                  prefix_kv=prefix_kv, prefix_len=prefix_len,
+                                  length=length if paged_kv else None,
+                                  paged_kv=paged_kv)
     B, S = x.shape[0], x.shape[1]
     if length is None:
         logits = _logits(cfg, params, x[:, -1:])[:, 0]
@@ -223,7 +239,8 @@ def prefill(cfg, params, batch, *, rules: Rules = NO_RULES, max_len=None,
 
 
 def decode_step(cfg, params, cache, tokens, pos, *,
-                rules: Rules = NO_RULES, block_table=None):
+                rules: Rules = NO_RULES, block_table=None,
+                win_block_table=None):
     """tokens: (B, T) int32 — T == 1 for plain decode, T > 1 for a
     speculative multi-token verify block (paged caches only; token t of
     request b sits at absolute position pos[b] + t). pos: (B,) position of
@@ -235,17 +252,37 @@ def decode_step(cfg, params, cache, tokens, pos, *,
     to the shared paged pool layout (see paged_cache_init); attention then
     runs the block-table indirection inside the Pallas flash-decode kernel
     (kernels/ops.paged_attention) unless cfg.paged_attn_impl == "gather"
-    pins the dense-gather baseline."""
+    pins the dense-gather baseline. win_block_table: same for local_attn
+    layers (sliding-window pages, recycled as they slide out of the
+    window); without it local_attn runs the dense ring buffer —
+    single-token only, so a T > 1 block on a windowed stack WITHOUT the
+    paged window layout is rejected here with a ValueError naming the
+    layer kind (instead of the bare shape assert it used to die with
+    deep inside the jit trace)."""
     kinds = tfm.pattern_for(cfg)
     _, tail = tfm.layer_plan(cfg)
     if tokens.shape[1] > 1:
-        assert block_table is not None, \
-            "multi-token decode blocks need the paged cache layout"
+        present = dict.fromkeys(tuple(kinds) + tuple(tail))
+        bad = [k for k, need in
+               (("attn_mlp", block_table), ("attn_moe", block_table),
+                ("local_attn", win_block_table))
+               if k in present and need is None]
+        bad += [k for k in ("dec", "enc") if k in present]
+        if bad:
+            raise ValueError(
+                f"multi-token decode blocks (T={tokens.shape[1]}) need "
+                f"every attention layer on a paged cache layout, but "
+                f"layer kind(s) {bad} have none: pass block_table for "
+                f"full attention and win_block_table for local_attn "
+                f"(the dense ring buffer is single-token — it has "
+                f"already overwritten the keys older block rows attend "
+                f"to)")
     x = _embed_tokens(cfg, params, tokens)
     x = rules.cons(x, "batch,seq,embed")
     x, new_cache = tfm.stack_decode(cfg, params["blocks"], x, cache, pos,
                                     kinds, tail, rules=rules,
-                                    block_table=block_table)
+                                    block_table=block_table,
+                                    win_block_table=win_block_table)
     x = norm_apply(params["final_norm"], x, cfg.norm)
     if tokens.shape[1] == 1:
         logits = _logits(cfg, params, x)[:, 0]
@@ -296,37 +333,54 @@ def cache_init(cfg, batch: int, seq_len: int):
     return {"scan": scan, "tail": tailc}
 
 
-PAGEABLE_KINDS = ("attn_mlp", "attn_moe")
+PAGEABLE_KINDS = ("attn_mlp", "attn_moe")       # full-attention page pools
+WINDOW_KINDS = ("local_attn",)                  # sliding-window page pools
+STATE_KINDS = ("ssm", "rglru")                  # fixed-size per-slot state
+# every block kind the PagedServingEngine can host (encoder-decoder stays
+# on the dense engine: cross-attention KV is per-request, not paged)
+PAGED_SERVABLE_KINDS = PAGEABLE_KINDS + WINDOW_KINDS + STATE_KINDS
 
 
 def paged_cache_init(cfg, batch: int, num_pages: int, page_size: int):
-    """Cache tree for paged serving: full-attention k/v entries become a
-    shared page pool (num_pages, page_size, KV, D) instead of per-slot
-    dense lanes (batch, max_len, KV, D); every other cache kind keeps its
-    per-slot layout (recurrent state / ring buffers are O(1) per slot and
-    gain nothing from paging). The pool is indexed by the block tables of
-    repro.runtime.kv_cache.PageAllocator (page 0 = scratch); the SAME
-    logical->physical mapping serves every layer, each layer owning its own
-    pool — so one host-side table drives the whole stack."""
+    """Cache tree for paged serving: attention k/v entries become a shared
+    page pool (num_pages, page_size, KV, D) instead of per-slot dense
+    lanes (batch, max_len, KV, D) — full attention AND sliding-window
+    (local_attn) layers alike; the windowed layers' pages are recycled by
+    the engine as they slide out of the window, so their live footprint
+    is O(window) pages per request. Recurrent kinds (ssm/rglru) keep
+    fixed-size per-slot state beside the pool — O(1) per slot, nothing to
+    page; the engine allocates the slot at admission and rebuilds the
+    state by re-prefill on preemption-resume. The pools are indexed by
+    the block tables of repro.runtime.kv_cache.PageAllocator (page 0 =
+    scratch); one host-side logical->physical mapping per table kind
+    (full / windowed) drives every layer of that kind."""
     kinds = tfm.pattern_for(cfg)
     n_super, tail = tfm.layer_plan(cfg)
-    unpageable = [k for k in kinds if k not in PAGEABLE_KINDS]
+    unpageable = [k for k in tuple(kinds) + tuple(tail)
+                  if k not in PAGED_SERVABLE_KINDS]
     if unpageable:
         raise ValueError(
-            f"paged cache needs an attention-only stack, got {unpageable}")
+            f"paged cache cannot host block kind(s) {unpageable}; "
+            f"servable kinds are {PAGED_SERVABLE_KINDS}")
     dt = jnp.dtype(cfg.kv_cache_dtype)
     kv, hd = cfg.kv_heads, cfg.resolved_head_dim
 
-    def pool():
-        return {"k": jnp.zeros((num_pages, page_size, kv, hd), dt),
-                "v": jnp.zeros((num_pages, page_size, kv, hd), dt)}
+    def entry(kind):
+        from repro.models import griffin, ssm
+        if kind in PAGEABLE_KINDS + WINDOW_KINDS:
+            return {"k": jnp.zeros((num_pages, page_size, kv, hd), dt),
+                    "v": jnp.zeros((num_pages, page_size, kv, hd), dt)}
+        if kind == "ssm":
+            return ssm.ssm_cache_init(cfg, batch)
+        return griffin.rglru_cache_init(cfg, batch)
 
-    def stacked():
+    def stacked(kind):
         return jax.tree.map(
-            lambda a: jnp.zeros((n_super,) + a.shape, a.dtype), pool())
+            lambda a: jnp.zeros((n_super,) + a.shape, a.dtype), entry(kind))
 
-    scan = {str(j): stacked() for j in range(len(kinds))} if n_super else {}
-    return {"scan": scan, "tail": [pool() for _ in tail]}
+    scan = {str(j): stacked(k)
+            for j, k in enumerate(kinds)} if n_super else {}
+    return {"scan": scan, "tail": [entry(k) for k in tail]}
 
 
 def cache_shapes(cfg, batch: int, seq_len: int):

@@ -62,15 +62,41 @@ def _gates(p, u):
     return a, gated
 
 
+def _gather_conv_state(conv_in, length, w, S):
+    """Last ``w - 1`` REAL rows of a right-padded (B, S, r) input, at a
+    traced per-batch ``length`` — rows before position 0 are zero, exactly
+    the static path's left-pad."""
+    B = conv_in.shape[0]
+    lv = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    idx = lv[:, None] - (w - 1) + jnp.arange(w - 1)[None, :]   # (B, w-1)
+    g = jnp.take_along_axis(conv_in, jnp.clip(idx, 0, S - 1)[..., None],
+                            axis=1)
+    return jnp.where(idx[..., None] >= 0, g, 0)
+
+
 def rglru_apply(cfg, p, x, *, rules: Rules = NO_RULES,
-                return_state: bool = False):
-    """Full-sequence RG-LRU block. x: (B, S, d)."""
+                return_state: bool = False, length=None):
+    """Full-sequence RG-LRU block. x: (B, S, d).
+
+    ``length`` (scalar or (B,), may be traced): number of REAL tokens when
+    ``x`` is right-padded to a bucket size (the paged engine's bucketed
+    prefill). Recurrence updates at padded positions are forced to the
+    identity (a = 1, b = 0), so the carried state — and therefore the
+    returned decode state — is exactly the state at position length - 1;
+    the conv state likewise gathers the last real rows. Outputs at real
+    positions are untouched (the recurrence and conv are causal)."""
+    B, S, _ = x.shape
     u = jnp.einsum("bsd,dr->bsr", x, p["proj_x"])
     gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["proj_y"]))
     u = rules.cons(u, "batch,seq,ffn")
     conv_in = u
     u = _conv(p, u)
     a, b = _gates(p, u)
+    if length is not None:
+        lv = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+        live = (jnp.arange(S)[None, :] < lv[:, None])[..., None]
+        a = jnp.where(live, a, 1.0)
+        b = jnp.where(live, b, 0.0)
 
     def combine(e1, e2):
         a1, b1 = e1
@@ -83,10 +109,13 @@ def rglru_apply(cfg, p, x, *, rules: Rules = NO_RULES,
     out = rules.cons(out, "batch,seq,embed")
     if return_state:
         w = p["conv_w"].shape[0]
-        conv_state = conv_in[:, -(w - 1):]
-        pad = (w - 1) - conv_state.shape[1]
-        if pad > 0:
-            conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+        if length is not None:
+            conv_state = _gather_conv_state(conv_in, length, w, S)
+        else:
+            conv_state = conv_in[:, -(w - 1):]
+            pad = (w - 1) - conv_state.shape[1]
+            if pad > 0:
+                conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
         return out, {"h": hh[:, -1].astype(jnp.float32),
                      "conv": conv_state.astype(x.dtype)}
     return out
@@ -99,14 +128,41 @@ def rglru_cache_init(cfg, batch: int):
 
 
 def rglru_decode(cfg, p, x, cache, *, rules: Rules = NO_RULES):
-    """One-token step. x: (B, 1, d)."""
-    u = jnp.einsum("bsd,dr->bsr", x, p["proj_x"])[:, 0]
-    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["proj_y"]))[:, 0]
-    hist = jnp.concatenate([cache["conv"], u[:, None]], 1)        # (B, w, r)
-    conv_out = jnp.einsum("bwr,wr->br", hist, p["conv_w"]) + p["conv_b"]
-    a, b = _gates(p, conv_out)
-    h_new = a * cache["h"] + b
-    h = h_new.astype(x.dtype) * gate
-    out = jnp.einsum("br,rd->bd", h, p["proj_out"])[:, None]
+    """Decode step. x: (B, T, d) — T == 1 is the plain one-token step and
+    returns plain state shapes. T > 1 (a speculative verify block) runs a
+    T-step recurrence and returns CHECKPOINTED states — every leaf gains
+    a T axis at position 1 ({"h": (B, T, r), "conv": (B, T, w-1, r)}),
+    state t being the state AFTER absorbing block row t — so the serving
+    engine can roll back to any accepted prefix with one gather
+    (PagedServingEngine._select_fn; the recurrent analogue of
+    PageAllocator.truncate_to)."""
+    T = x.shape[1]
+    u_all = jnp.einsum("bsd,dr->bsr", x, p["proj_x"])
+    gate_all = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["proj_y"]))
+    if T == 1:
+        u, gate = u_all[:, 0], gate_all[:, 0]
+        hist = jnp.concatenate([cache["conv"], u[:, None]], 1)    # (B, w, r)
+        conv_out = jnp.einsum("bwr,wr->br", hist, p["conv_w"]) + p["conv_b"]
+        a, b = _gates(p, conv_out)
+        h_new = a * cache["h"] + b
+        h = h_new.astype(x.dtype) * gate
+        out = jnp.einsum("br,rd->bd", h, p["proj_out"])[:, None]
+        out = rules.cons(out, "batch,seq,embed")
+        return out, {"h": h_new, "conv": hist[:, 1:]}
+
+    def step(carry, u_t):
+        h_prev, conv_prev = carry
+        hist = jnp.concatenate([conv_prev, u_t[:, None]], 1)      # (B, w, r)
+        conv_out = jnp.einsum("bwr,wr->br", hist, p["conv_w"]) + p["conv_b"]
+        a, b = _gates(p, conv_out)
+        h_new = a * h_prev + b
+        conv_new = hist[:, 1:]
+        return (h_new, conv_new), (h_new, conv_new)
+
+    _, (hs, convs) = jax.lax.scan(step, (cache["h"], cache["conv"]),
+                                  u_all.transpose(1, 0, 2))
+    h_seq = hs.transpose(1, 0, 2)                                 # (B, T, r)
+    h = h_seq.astype(x.dtype) * gate_all
+    out = jnp.einsum("btr,rd->btd", h, p["proj_out"])
     out = rules.cons(out, "batch,seq,embed")
-    return out, {"h": h_new, "conv": hist[:, 1:]}
+    return out, {"h": h_seq, "conv": convs.transpose(1, 0, 2, 3)}

@@ -189,13 +189,26 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out[:, :Sq].astype(q.dtype)
 
 
-def attend_decode(q, ck, cv, pos, *, window: int = 0,
+def attend_decode(q, ck, cv, pos, *, window: int = 0, ring: bool = False,
                   kv_chunk: int = 0):
     """Decode attention vs a cache. q: (B, Tq, H, D) — Tq == 1 for plain
     decode, Tq > 1 for a speculative multi-token query block; ck/cv:
     (B, S, KV, D); pos: (B,) absolute position of the FIRST new token
     (row t sits at pos + t; the cache holds every earlier token plus the
     block itself, so row t attends to pos + t + 1 keys — in-block causal).
+
+    window > 0 bounds each row to the last ``window`` keys. Two layouts:
+
+    * ``ring=False`` (paged / contiguous): buffer index == absolute key
+      position, so the window is a per-row position band
+      ``(pos + t - window, pos + t]`` — works for any Tq (the paged
+      sliding-window oracle, matching ops.paged_attention's masking).
+    * ``ring=True``: ``ck``/``cv`` is a window-sized ring buffer (slot =
+      position % S) that only ever HOLDS the last S positions, so
+      masking is by valid-slot count. Single-token by construction: a
+      Tq > 1 block's older rows would need positions the ring has
+      already overwritten — rejected with a ValueError (surfaced with
+      the layer kind at api.decode_step; see ISSUE 5 satellite).
 
     Chunked over the cache length with an online softmax so the (B, KV, G,
     Tq, S) score tensor is never materialized — for a 32k cache this is
@@ -205,8 +218,14 @@ def attend_decode(q, ck, cv, pos, *, window: int = 0,
     _, S, KV, _ = ck.shape
     G = H // KV
     qg = q.reshape(B, Tq, KV, G, D)
-    if window:
-        assert Tq == 1, "windowed ring-buffer decode is single-token"
+    if ring:
+        if Tq != 1:
+            raise ValueError(
+                f"ring-buffer windowed decode is single-token (got a "
+                f"Tq={Tq} query block): the ring has already overwritten "
+                f"positions the block's older rows would attend to — use "
+                f"the paged window layout (ring=False) for multi-token "
+                f"blocks")
         nvalid = jnp.minimum(pos + 1, S)[:, None]  # ring buffer: slot count
     else:
         nvalid = pos[:, None] + jnp.arange(Tq)[None, :] + 1    # (B, Tq)
@@ -225,6 +244,11 @@ def attend_decode(q, ck, cv, pos, *, window: int = 0,
                        preferred_element_type=jnp.float32) * (D ** -0.5)
         slots = i * c + jnp.arange(c)
         mask = slots[None, None, :] < nvalid[:, :, None]       # (B, Tq, c)
+        if window and not ring:
+            # buffer index == absolute position: drop keys older than the
+            # row's window (the ring layout never holds them to begin with)
+            mask = mask & (slots[None, None, :]
+                           > nvalid[:, :, None] - 1 - window)
         mask = mask[:, None, None]                  # over (b, k, g, t, c)
         m2 = jnp.maximum(m, jnp.where(mask, s, -jnp.inf).max(-1))
         m2 = jnp.maximum(m2, -1e30)       # fully-masked chunk guard
@@ -358,7 +382,8 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
     position of the FIRST new token. Returns (out, new_cache).
 
     Dense mode (block_table=None): cache {"k","v"}: (B, S, KV, D), one lane
-    per batch slot; single-token only (T == 1).
+    per batch slot; single-token only (T == 1). window > 0 means the lane
+    is a window-sized ring buffer (slot = pos % S).
     Paged mode: cache {"k","v"}: (P, page, KV, D) — a shared page pool —
     and block_table: (B, n_blocks) int32 mapping each request's logical
     blocks to physical pages (repro.runtime.kv_cache). The T new tokens
@@ -372,6 +397,12 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
     probability mass and the dense (B, n_blocks*page, KV, D) gathered KV
     never materializes. T > 1 is the speculative-verify block (engine
     spec_k): K drafted tokens + the current one score in ONE page sweep.
+    window > 0 in paged mode is a sliding-window layer (hybrid
+    local_attn) on the paged layout: logical block index still means
+    absolute position, the kernel masks each row to its last `window`
+    keys and skips pages entirely below the window — the ones the engine
+    recycles to scratch (runtime/kv_cache.release_prefix) — so the layer
+    holds O(window) live pages however long the request runs.
     cfg.paged_attn_impl == "gather" keeps the PR-1 dense-gather path as
     the measured baseline (benchmarks/serve_bench.py)."""
     if cross:
@@ -409,16 +440,20 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
         cv = cache["v"].at[phys, off].set(kv_quant(cfg, v))
         if cfg.paged_attn_impl == "gather":
             # PR-1 baseline: dense per-layer pool gather (the "separated
-            # memory" anti-pattern; kept only for serve_bench comparison)
+            # memory" anti-pattern; kept only for serve_bench comparison).
+            # Windowed layers mask by absolute position band (ring=False:
+            # buffer index == absolute position in this layout).
             kg = ck[block_table].reshape(B, n_blk * page, *ck.shape[2:])
             vg = cv[block_table].reshape(B, n_blk * page, *cv.shape[2:])
             out = attend_decode(q, kv_dequant(cfg, kg, q.dtype),
                                 kv_dequant(cfg, vg, q.dtype), pos,
+                                window=window,
                                 kv_chunk=cfg.decode_kv_chunk)
         else:
             scale = cfg.kv_scale if ck.dtype == jnp.int8 else None
             out = ops.paged_attention(q, ck, cv, block_table,
-                                      pos + T, kv_scale=scale)
+                                      pos + T, kv_scale=scale,
+                                      window=window)
         new_cache = {"k": ck, "v": cv}
     else:
         q, k, v = _qkv(cfg, p, x)
@@ -438,7 +473,8 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
         cv = rules.cons(cv, "batch,seq,kv_heads")
         out = attend_decode(q, kv_dequant(cfg, ck, q.dtype),
                             kv_dequant(cfg, cv, q.dtype), pos,
-                            window=window, kv_chunk=cfg.decode_kv_chunk)
+                            window=window, ring=window > 0,
+                            kv_chunk=cfg.decode_kv_chunk)
         new_cache = {"k": ck, "v": cv}
     out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
     return rules.cons(out, "batch,seq,embed"), new_cache

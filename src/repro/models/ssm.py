@@ -113,8 +113,16 @@ def _ssd_scan(x, dt, A, B, C, chunk: int):
 
 
 def ssm_apply(cfg, p, x, *, rules: Rules = NO_RULES,
-              return_state: bool = False):
-    """Full-sequence Mamba2 mixer. x: (B, S, d)."""
+              return_state: bool = False, length=None):
+    """Full-sequence Mamba2 mixer. x: (B, S, d).
+
+    ``length`` (scalar or (B,), may be traced): number of REAL tokens when
+    ``x`` is right-padded to a bucket size (paged bucketed prefill).
+    Padded positions get dt = 0, which makes their state update the
+    identity (decay exp(dt*A) = 1, injection dt*B*x = 0), so the returned
+    final state is exactly the state at position length - 1; the conv
+    state gathers the last real rows. Real-position outputs are untouched
+    (the SSD scan and conv are causal)."""
     s = cfg.ssm
     d_inner, nheads, conv_dim = dims(cfg)
     zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
@@ -128,6 +136,10 @@ def ssm_apply(cfg, p, x, *, rules: Rules = NO_RULES,
     B_ = B_.reshape(b, l, s.num_groups, s.state_dim)
     C_ = C_.reshape(b, l, s.num_groups, s.state_dim)
     dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if length is not None:
+        lv = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+        live = (jnp.arange(l)[None, :] < lv[:, None])[..., None]
+        dt_ = jnp.where(live, dt_, 0.0)
     A = -jnp.exp(p["A_log"])
     y, S_final = _ssd_scan(xin, dt_, A, B_, C_, s.chunk)
     y = y + p["D"][None, None, :, None].astype(y.dtype) * xin
@@ -140,10 +152,14 @@ def ssm_apply(cfg, p, x, *, rules: Rules = NO_RULES,
         # conv state: last (w-1) *pre-activation* xBC inputs
         zxb = jnp.einsum("bsd,de->bse", x, p["in_proj"])
         _, xBC_raw, _ = _split(cfg, zxb)
-        conv_state = xBC_raw[:, -(w - 1):]
-        pad = (w - 1) - conv_state.shape[1]
-        if pad > 0:
-            conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+        if length is not None:
+            from repro.models.griffin import _gather_conv_state
+            conv_state = _gather_conv_state(xBC_raw, length, w, l)
+        else:
+            conv_state = xBC_raw[:, -(w - 1):]
+            pad = (w - 1) - conv_state.shape[1]
+            if pad > 0:
+                conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
         return out, {"ssm": S_final.astype(jnp.float32),
                      "conv": conv_state.astype(x.dtype)}
     return out
@@ -159,20 +175,19 @@ def ssm_cache_init(cfg, batch: int):
     }
 
 
-def ssm_decode(cfg, p, x, cache, *, rules: Rules = NO_RULES):
-    """One-token recurrent step. x: (B, 1, d)."""
+def _ssm_token_step(cfg, p, carry, zxbcdt):
+    """One recurrent token: (S, conv) x (B, in_dim) -> (S', conv', y)."""
     s = cfg.ssm
     d_inner, nheads, _ = dims(cfg)
-    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    S_prev, conv_prev = carry
     z, xBC, dt = _split(cfg, zxbcdt)
-    # conv step
-    hist = jnp.concatenate([cache["conv"], xBC[:, None]], 1)  # (B, w, conv)
+    hist = jnp.concatenate([conv_prev, xBC[:, None]], 1)      # (B, w, conv)
     conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, p["conv_w"])
                            + p["conv_b"])
     new_conv = hist[:, 1:]
     gn = s.num_groups * s.state_dim
     xin, B_, C_ = jnp.split(conv_out, [d_inner, d_inner + gn], axis=-1)
-    bsz = x.shape[0]
+    bsz = zxbcdt.shape[0]
     xin = xin.reshape(bsz, nheads, s.head_dim)
     B_ = B_.reshape(bsz, s.num_groups, s.state_dim)
     C_ = C_.reshape(bsz, s.num_groups, s.state_dim)
@@ -183,10 +198,38 @@ def ssm_decode(cfg, p, x, cache, *, rules: Rules = NO_RULES):
     A = -jnp.exp(p["A_log"])
     dA = jnp.exp(dt_ * A)                                            # (B, h)
     xf = xin.astype(jnp.float32)
-    S = dA[..., None, None] * cache["ssm"] + jnp.einsum(
+    S = dA[..., None, None] * S_prev + jnp.einsum(
         "bh,bhn,bhp->bhpn", dt_, Bh, xf)
     y = jnp.einsum("bhn,bhpn->bhp", Ch, S) + p["D"][None, :, None] * xf
-    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = y.reshape(bsz, d_inner).astype(zxbcdt.dtype)
     y = norm_apply(p["norm"], y, "rmsnorm") * jax.nn.silu(z)
-    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
-    return rules.cons(out, "batch,seq,embed"), {"ssm": S, "conv": new_conv}
+    return (S, new_conv), y
+
+
+def ssm_decode(cfg, p, x, cache, *, rules: Rules = NO_RULES):
+    """Recurrent decode step. x: (B, T, d) — T == 1 is the plain
+    one-token step with plain state shapes. T > 1 (a speculative verify
+    block) runs T token steps and returns CHECKPOINTED states — every
+    leaf gains a T axis at position 1 ({"ssm": (B, T, h, p, n), "conv":
+    (B, T, w-1, conv)}), state t being the state AFTER block row t — so
+    the serving engine can roll back to any accepted prefix with one
+    gather (the recurrent analogue of PageAllocator.truncate_to)."""
+    T = x.shape[1]
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    if T == 1:
+        (S, new_conv), y = _ssm_token_step(
+            cfg, p, (cache["ssm"], cache["conv"]), zxbcdt[:, 0])
+        out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
+        return (rules.cons(out, "batch,seq,embed"),
+                {"ssm": S, "conv": new_conv})
+
+    def step(carry, zx_t):
+        carry2, y = _ssm_token_step(cfg, p, carry, zx_t)
+        return carry2, (carry2[0], carry2[1], y)
+
+    _, (Ss, convs, ys) = jax.lax.scan(step, (cache["ssm"], cache["conv"]),
+                                      zxbcdt.transpose(1, 0, 2))
+    out = jnp.einsum("tbe,ed->btd", ys, p["out_proj"])
+    return (rules.cons(out, "batch,seq,embed"),
+            {"ssm": Ss.transpose(1, 0, 2, 3, 4),
+             "conv": convs.transpose(1, 0, 2, 3)})

@@ -93,11 +93,20 @@ def _grow(cfg, kv, max_len):
 
 def block_apply(cfg, kind: str, p, x, *, rules: Rules = NO_RULES,
                 positions=None, enc_out=None, want_cache: bool = False,
-                max_len=None, prefix=None):
+                max_len=None, prefix=None, length=None,
+                paged_kv: bool = False):
     """Full-sequence block. Returns (x, cache_entry, aux). prefix=(pk, pv,
     plen) switches full attention to suffix-only prefill against reused
     prefix KV (layers.attention_apply); the cache entry then holds the
-    suffix k/v only."""
+    suffix k/v only.
+
+    length (scalar/(B,), may be traced): REAL token count when x is
+    right-padded to a bucket (paged bucketed prefill) — recurrent blocks
+    mask their state updates past it so the returned state is the state
+    at length - 1 (ssm/rglru_apply). paged_kv=True makes local_attn
+    return the FULL-sequence kv like full attention (the paged engine
+    scatters only the live window blocks into pages) instead of the
+    dense engine's window-sized ring buffer."""
     aux = {}
     cache = None
     h = norm_apply(p["ln1"], x, cfg.norm)
@@ -111,21 +120,22 @@ def block_apply(cfg, kind: str, p, x, *, rules: Rules = NO_RULES,
         a, kv = attention_apply(cfg, p["attn"], h, rules=rules,
                                 positions=positions, window=w)
         if want_cache:
-            cache = _window_cache(cfg, kv, w)
+            cache = _grow(cfg, kv, None) if paged_kv \
+                else _window_cache(cfg, kv, w)
     elif kind == "enc":
         a, _ = attention_apply(cfg, p["attn"], h, rules=rules,
                                positions=positions, causal=False)
     elif kind == "ssm":
         if want_cache:
             a, cache = ssm.ssm_apply(cfg, p["mixer"], h, rules=rules,
-                                     return_state=True)
+                                     return_state=True, length=length)
         else:
             a = ssm.ssm_apply(cfg, p["mixer"], h, rules=rules)
         return x + a, cache, aux
     elif kind == "rglru":
         if want_cache:
             a, cache = griffin.rglru_apply(cfg, p["mixer"], h, rules=rules,
-                                           return_state=True)
+                                           return_state=True, length=length)
         else:
             a = griffin.rglru_apply(cfg, p["mixer"], h, rules=rules)
         x = x + a
@@ -174,13 +184,18 @@ def _window_cache(cfg, kv, w):
 
 
 def block_decode(cfg, kind: str, p, x, cache, pos, *,
-                 rules: Rules = NO_RULES, block_table=None):
+                 rules: Rules = NO_RULES, block_table=None,
+                 win_block_table=None):
     """Decode block step. x: (B, T, d) — T == 1 for plain decode; paged
-    full-attention blocks also take T > 1 speculative verify blocks (pos
-    is the first row's position; see layers.attention_decode). Returns
-    (x, new_cache). block_table switches the full-attention cache entries
-    to the paged-pool layout; other cache kinds ignore it and are
-    single-token only (recurrent state advances one step at a time)."""
+    blocks also take T > 1 speculative verify blocks (pos is the first
+    row's position; see layers.attention_decode). Returns (x, new_cache).
+    block_table switches the full-attention cache entries to the
+    paged-pool layout; win_block_table does the same for local_attn
+    layers (sliding-window pages, recycled as they leave the window —
+    without it local_attn runs the dense ring buffer, single-token only).
+    Recurrent kinds (ssm/rglru) hold per-slot state, not pages: T > 1
+    runs a T-step recurrence returning checkpointed states (see
+    ssm_decode / rglru_decode)."""
     h = norm_apply(p["ln1"], x, cfg.norm)
     if kind in ("attn_mlp", "attn_moe", "dec"):
         a, cache_a = attention_decode(cfg, p["attn"], h,
@@ -191,7 +206,8 @@ def block_decode(cfg, kind: str, p, x, cache, pos, *,
         a, cache_a = attention_decode(cfg, p["attn"], h,
                                       {"k": cache["k"], "v": cache["v"]},
                                       pos, rules=rules,
-                                      window=cfg.hybrid.window)
+                                      window=cfg.hybrid.window,
+                                      block_table=win_block_table)
     elif kind == "ssm":
         a, new_cache = ssm.ssm_decode(cfg, p["mixer"], h, cache, rules=rules)
         return x + a, new_cache
@@ -257,7 +273,8 @@ def _remat(cfg, fn):
 
 def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
                 positions=None, enc_out=None, want_cache=False, max_len=None,
-                prefix_kv=None, prefix_len=None):
+                prefix_kv=None, prefix_len=None, length=None,
+                paged_kv=False):
     """Returns (x, caches, aux_sum). caches: {"scan": {j: stacked}, "tail": [..]}
 
     prefix_kv (same tree shape as the caches: {"scan": {j: {"k","v"}},
@@ -277,7 +294,8 @@ def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
             h, c, aux = block_apply(cfg, kd, pslice[str(j)], h, rules=rules,
                                     positions=positions, enc_out=enc_out,
                                     want_cache=want_cache, max_len=max_len,
-                                    prefix=pref)
+                                    prefix=pref, length=length,
+                                    paged_kv=paged_kv)
             caches[str(j)] = c if c is not None else 0
             for k, v in aux.items():
                 aux_acc[k] = aux_acc.get(k, 0.0) + v
@@ -302,7 +320,8 @@ def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
         x, c, aux = block_apply(cfg, kd, tp, x, rules=rules,
                                 positions=positions, enc_out=enc_out,
                                 want_cache=want_cache, max_len=max_len,
-                                prefix=pref)
+                                prefix=pref, length=length,
+                                paged_kv=paged_kv)
         tail_caches.append(c if c is not None else 0)
         for k, v in aux.items():
             aux0[k] = aux0.get(k, 0.0) + v
@@ -310,16 +329,19 @@ def stack_apply(cfg, params, x, kinds, tail, *, rules=NO_RULES,
 
 
 def stack_decode(cfg, params, x, caches, pos, kinds, tail, *, rules=NO_RULES,
-                 block_table=None):
+                 block_table=None, win_block_table=None):
     """Decode the whole stack one step. x: (B, T, d); T > 1 (a speculative
-    multi-token block) requires an attention-only stack on the paged cache
-    layout (block_table) — see block_decode."""
+    multi-token block) requires every attention layer on a paged cache
+    layout (block_table for full attention, win_block_table for sliding
+    windows); recurrent layers then return checkpointed per-row states —
+    see block_decode."""
     def body(h, sl):
         pslice, cslice = sl
         new_c = {}
         for j, kd in enumerate(kinds):
             h, nc = block_decode(cfg, kd, pslice[str(j)], h, cslice[str(j)],
-                                 pos, rules=rules, block_table=block_table)
+                                 pos, rules=rules, block_table=block_table,
+                                 win_block_table=win_block_table)
             new_c[str(j)] = nc
         return h, new_c
 
@@ -331,6 +353,7 @@ def stack_decode(cfg, params, x, caches, pos, kinds, tail, *, rules=NO_RULES,
     new_tail = []
     for tp, kd, tc in zip(params["tail"], tail, caches["tail"]):
         x, nc = block_decode(cfg, kd, tp, x, tc, pos, rules=rules,
-                             block_table=block_table)
+                             block_table=block_table,
+                             win_block_table=win_block_table)
         new_tail.append(nc)
     return x, {"scan": new_scan, "tail": new_tail}

@@ -29,6 +29,14 @@ prefill blocks are redirected there, so a finished request can never
 scribble over a page that has been reclaimed and re-issued to a live
 neighbor. Scratch contents are garbage by design and are always masked
 out by ``kv_valid`` (= per-request token count) on the read side.
+
+**Sliding-window tables** (hybrid stacks, ``local_attn`` layers): a table
+may carry a *base-block offset* — logical blocks ``0 .. base-1`` have
+slid entirely out of the attention window and their pages were recycled
+(``release_prefix``), so the table holds only the live suffix and the
+request's footprint stays O(window) pages while its logical length keeps
+growing. ``allocate(..., base_blocks=)`` admits a long prompt with the
+pre-window blocks never allocated at all.
 """
 from __future__ import annotations
 
@@ -55,6 +63,7 @@ class PageAllocator:
         self._free: List[int] = list(range(num_pages, 0, -1))
         self._tables: Dict[int, List[int]] = {}   # rid -> physical pages
         self._tokens: Dict[int, int] = {}         # rid -> live token count
+        self._base: Dict[int, int] = {}           # rid -> recycled lead blocks
         self._ref: Dict[int, int] = {}            # page -> refcount (>0)
         self._pinned: Set[int] = set()            # prefix-cache pins (+1 ref)
         self.peak_pages = 0                        # high-water mark
@@ -77,7 +86,10 @@ class PageAllocator:
 
     @property
     def live_tokens(self) -> int:
-        return sum(self._tokens.values())
+        """Tokens resident in live pages (a windowed table's recycled
+        lead blocks no longer hold tokens, so they don't count)."""
+        return sum(t - self._base.get(r, 0) * self.page_size
+                   for r, t in self._tokens.items())
 
     @property
     def live_requests(self) -> int:
@@ -98,7 +110,14 @@ class PageAllocator:
         return self.pages_for(n_tokens) <= len(self._free)
 
     def block_table(self, rid: int) -> List[int]:
+        """Live pages of ``rid`` in block order. For a windowed table this
+        is the suffix starting at logical block ``base_blocks(rid)``."""
         return list(self._tables[rid])
+
+    def base_blocks(self, rid: int) -> int:
+        """Logical blocks recycled off the front of ``rid``'s table
+        (sliding-window page recycling); 0 for ordinary tables."""
+        return self._base.get(rid, 0)
 
     def tokens(self, rid: int) -> int:
         return self._tokens[rid]
@@ -127,10 +146,47 @@ class PageAllocator:
         self._free.append(page)
         return True
 
-    def allocate(self, rid: int, n_tokens: int) -> Optional[List[int]]:
+    def allocate(self, rid: int, n_tokens: int,
+                 base_blocks: int = 0) -> Optional[List[int]]:
         """Admit ``rid`` with ``n_tokens`` live tokens. Returns its block
-        table, or None (state unchanged) if the pool can't cover it."""
-        return self.allocate_shared(rid, n_tokens, [])
+        table, or None (state unchanged) if the pool can't cover it.
+
+        ``base_blocks`` > 0 admits a sliding-window table whose first
+        ``base_blocks`` logical blocks already sit entirely below the
+        attention window (a prompt longer than the window): those pages
+        are never allocated, so admission costs O(window) pages, not
+        O(prompt)."""
+        if base_blocks == 0:
+            return self.allocate_shared(rid, n_tokens, [])
+        assert rid not in self._tables, f"rid {rid} already admitted"
+        need = self.pages_for(n_tokens) - base_blocks
+        assert need >= 1, "base_blocks must leave at least one live block"
+        if need > len(self._free):
+            return None
+        pages = [self._pop_free() for _ in range(need)]
+        self._tables[rid] = pages
+        self._tokens[rid] = n_tokens
+        self._base[rid] = base_blocks
+        self.peak_pages = max(self.peak_pages, self.allocated_pages)
+        return list(pages)
+
+    def release_prefix(self, rid: int, n_blocks: int) -> int:
+        """Sliding-window page recycling: drop ``rid``'s reference to its
+        first ``n_blocks`` live table entries — blocks that have slid
+        entirely below the attention window and can never be read again.
+        The table's logical indexing is preserved by advancing the base
+        offset (``base_blocks``), so logical block j keeps meaning
+        absolute positions ``[j*page, (j+1)*page)``. Returns the number
+        of pages that actually became free."""
+        table = self._tables[rid]
+        assert 0 <= n_blocks < len(table), \
+            f"release_prefix({n_blocks}) must keep >= 1 of {len(table)} blocks"
+        freed = 0
+        for p in table[:n_blocks]:
+            freed += self._decref(p)
+        del table[:n_blocks]
+        self._base[rid] = self._base.get(rid, 0) + n_blocks
+        return freed
 
     def allocate_shared(self, rid: int, n_tokens: int,
                         shared: List[int]) -> Optional[List[int]]:
@@ -162,7 +218,7 @@ class PageAllocator:
         crossed, 0 if the current pages already cover it, or None if the
         pool is exhausted (state unchanged — caller evicts or preempts)."""
         assert rid in self._tables
-        need = self.pages_for(n_tokens)
+        need = self.pages_for(n_tokens) - self._base.get(rid, 0)
         have = len(self._tables[rid])
         assert need <= have + 1, "extend_to must grow by <= 1 page"
         if need <= have:
@@ -191,7 +247,9 @@ class PageAllocator:
             f"truncate_to({n_tokens}) must shrink rid {rid} " \
             f"({self._tokens[rid]} tokens)"
         table = self._tables[rid]
-        keep = self.pages_for(n_tokens)
+        keep = self.pages_for(n_tokens) - self._base.get(rid, 0)
+        assert keep >= 1, \
+            "truncate_to cannot roll a windowed table back past its base"
         dropped = len(table) - keep
         for p in reversed(table[keep:]):   # LIFO: reuse hottest first
             self._decref(p)
@@ -222,6 +280,7 @@ class PageAllocator:
         pages survive their other references)."""
         pages = self._tables.pop(rid)
         del self._tokens[rid]
+        self._base.pop(rid, None)
         freed = 0
         for p in reversed(pages):       # LIFO: reuse hottest first
             freed += self._decref(p)
@@ -267,6 +326,11 @@ class PageAllocator:
             assert p in self._ref, f"page {p} in a table but not allocated"
         for p in self._pinned:
             assert p in self._ref, f"pinned page {p} not allocated"
+        for rid, base in self._base.items():
+            assert rid in self._tables and base >= 0, \
+                f"window base for dead rid {rid}"
+            assert self._tokens[rid] >= base * self.page_size, \
+                f"rid {rid}: base {base} past its {self._tokens[rid]} tokens"
         assert len(free) + len(self._ref) == self.num_pages
         assert SCRATCH_PAGE not in free and SCRATCH_PAGE not in self._ref
 

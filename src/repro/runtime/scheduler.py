@@ -9,7 +9,12 @@ generated-so-far), then advances every live request one token (decode).
 
 Works with both engines: the dense engine's ``ensure_decode_capacity`` is
 a no-op (its lanes are statically reserved — the anti-pattern the paged
-engine removes).
+engine removes). Preemption-resume is engine-agnostic by construction:
+a preempted request re-enters the queue and resumes by re-prefilling
+prompt + generated-so-far, which also rebuilds what cannot be swapped
+out page-by-page — a hybrid stack's recurrent state slots and its
+sliding-window pages (the re-prefill re-admits with the pre-window
+blocks already recycled, so resume cost stays O(window) pages too).
 """
 from __future__ import annotations
 

@@ -26,16 +26,32 @@ architecture (PAPER.md):
   pressure. Both decode attention impls work unchanged — block tables
   already indirect through physical pages.
 
+* **Hybrid / windowed / recurrent stacks** are first-class since ISSUE 5:
+  sliding-window layers (``local_attn``) get *paged ring buffers with
+  page recycling* — a second block table whose pages are freed the moment
+  they slide entirely out of the attention window
+  (``PageAllocator.release_prefix``), bounding live KV at O(window) pages
+  per request instead of O(max_len); the flash-decode kernel masks and
+  skips below-window pages (``kernels/paged_attention.py`` ``window``).
+  Recurrent layers (``ssm`` / ``rglru``) get *fixed-size state slots*
+  beside the page pool — written by (bucket-padded, state-masked)
+  prefill at admission, rebuilt by re-prefill on preemption-resume, and
+  rolled back on speculative rejection by gathering the verify step's
+  per-row state checkpoints (``_select_fn``). Continuous batching,
+  bucketed prefill, preemption and ``spec_k`` therefore all work on
+  griffin-style hybrids.
+
 ``DenseServingEngine`` is the seed engine, kept verbatim as the measured
-baseline (benchmarks/serve_bench.py) and as the serving path for stacks
-with recurrent state (ssm / rglru / windowed ring buffers), where neither
-paging nor bucket padding applies. ``ServingEngine(cfg, ...)`` picks the
-right one from the block pattern.
+baseline (benchmarks/serve_bench.py): dense max_len lanes, window-sized
+ring buffers, per-length prefill retraces. ``ServingEngine(cfg, ...)``
+picks the paged engine for every servable block pattern and falls back to
+dense — loudly — only for encoder-decoder stacks.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -76,7 +92,18 @@ def _sample_logits(cfg, logits, temperature, key) -> jax.Array:
 
 
 def _pageable(cfg) -> bool:
-    return set(tfm.pattern_for(cfg)) <= set(api.PAGEABLE_KINDS)
+    """Whether the paged engine can host this stack: full attention,
+    sliding-window attention (paged ring buffers with page recycling) and
+    recurrent state (fixed-size slots) are all servable; only
+    encoder-decoder stacks fall back to the dense engine."""
+    return set(tfm.pattern_for(cfg)) <= set(api.PAGED_SERVABLE_KINDS)
+
+
+def _win_rid(rid: int):
+    """Allocator key of a request's sliding-window block table (kept
+    separate from its full-attention table: the two recycle and roll
+    back independently)."""
+    return ("win", rid)
 
 
 def _run_to_completion(engine, requests: List[Request],
@@ -93,16 +120,44 @@ def _run_to_completion(engine, requests: List[Request],
 
 
 def ServingEngine(cfg, params, **kwargs):
-    """Engine factory: paged engine for attention-only stacks, dense-slot
-    engine otherwise (recurrent state can't be paged or bucket-padded)."""
+    """Engine factory: paged engine for every servable block pattern —
+    full attention, sliding-window (local_attn) and recurrent (ssm/rglru)
+    layers included — dense-slot engine only for encoder-decoder stacks.
+
+    A dense fallback cannot honor the paged feature kwargs. Dropping them
+    silently (the pre-ISSUE-5 behavior) meant a caller who asked for
+    speculative decode or prefix sharing got neither and no signal; now
+    every dropped kwarg whose value differs from the paged engine's
+    default — i.e. the caller actually asked for something — is named in
+    a warning, and a truthy ``spec_k``, which changes the output contract
+    (verify-step semantics, ``spec_stats``), raises instead. Kwargs still
+    at their defaults drop quietly: launchers pass the full knob set
+    unconditionally, and warning on never-requested features would turn
+    the loud-fallback signal into noise."""
     if _pageable(cfg):
         return PagedServingEngine(cfg, params, **kwargs)
-    kwargs.pop("page_size", None)
-    kwargs.pop("num_pages", None)
-    kwargs.pop("attn_impl", None)
-    kwargs.pop("prefix_cache", None)
-    kwargs.pop("spec_k", None)
-    kwargs.pop("spec_ngram", None)
+    paged_defaults = {"page_size": 16, "num_pages": None,
+                      "attn_impl": "kernel", "prefix_cache": False,
+                      "spec_k": 0, "spec_ngram": 3}
+    dropped = []
+    for k, default in paged_defaults.items():
+        if k in kwargs:
+            v = kwargs.pop(k)
+            if k == "spec_k" and v:
+                raise ValueError(
+                    f"spec_k={v} requested, but {cfg.name!r} "
+                    f"(pattern {tfm.pattern_for(cfg)}) is not servable by "
+                    f"the paged engine and the dense fallback has no "
+                    f"speculative decode — drop spec_k or serve a paged-"
+                    f"servable stack")
+            if v != default:
+                dropped.append(f"{k}={v!r}")
+    if dropped:
+        warnings.warn(
+            f"{cfg.name!r} (pattern {tfm.pattern_for(cfg)}) falls back to "
+            f"DenseServingEngine, which ignores the paged-engine "
+            f"kwarg(s) {dropped} — the features they configure will NOT "
+            f"be active", stacklevel=2)
     return DenseServingEngine(cfg, params, **kwargs)
 
 
@@ -121,8 +176,9 @@ class PagedServingEngine:
                  attn_impl: str = "kernel", prefix_cache: bool = False,
                  spec_k: int = 0, spec_ngram: int = 3):
         if not _pageable(cfg):
-            raise ValueError("paged serving needs an attention-only stack; "
-                             "use DenseServingEngine")
+            raise ValueError(
+                f"paged serving cannot host pattern "
+                f"{tfm.pattern_for(cfg)}; use DenseServingEngine")
         assert page_size >= 1 and page_size & (page_size - 1) == 0, \
             "page_size must be a power of two"
         if attn_impl not in ("kernel", "gather"):
@@ -132,6 +188,23 @@ class PagedServingEngine:
                 "speculative decode (spec_k > 0) requires greedy sampling "
                 "(temperature == 0): acceptance is exact-greedy — a drafted "
                 "token is kept iff it equals the argmax continuation")
+        # block-kind split: full-attention layers share one block table,
+        # sliding-window layers a second (recycled) one, recurrent layers
+        # hold fixed-size per-slot state beside the pool
+        self._kinds = tuple(tfm.pattern_for(cfg))
+        _, self._tail = tfm.layer_plan(cfg)
+        present = set(self._kinds) | set(self._tail)
+        self.has_full = bool(present & set(api.PAGEABLE_KINDS))
+        self.has_win = bool(present & set(api.WINDOW_KINDS))
+        self.has_state = bool(present & set(api.STATE_KINDS))
+        self.window = cfg.hybrid.window if self.has_win else 0
+        if prefix_cache and (self.has_win or self.has_state):
+            raise ValueError(
+                "prefix_cache needs an attention-only stack: recurrent "
+                "state cannot be reconstructed from shared KV pages, and "
+                "window pages are recycled per-request")
+        if self.has_win and self.window < 1:
+            raise ValueError("local_attn layers need cfg.hybrid.window >= 1")
         # decode attention impl rides on the (frozen) config so it reaches
         # layers.attention_decode through the jitted step without an extra
         # traced operand; "kernel" = in-kernel block-table gather (Pallas
@@ -159,6 +232,10 @@ class PagedServingEngine:
         # pool row 0 is the scratch page -> usable + 1 physical rows
         self.cache = api.paged_cache_init(cfg, slots, usable + 1, page_size)
         self.block_table = jnp.zeros((slots, self.max_blocks), jnp.int32)
+        # sliding-window block table: logical block j still means absolute
+        # positions [j*page, (j+1)*page), but entries that slid below the
+        # window are recycled back to SCRATCH (the kernel skips them)
+        self.win_table = jnp.zeros((slots, self.max_blocks), jnp.int32)
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
         self.live_mask = jnp.zeros((slots,), bool)
@@ -190,9 +267,12 @@ class PagedServingEngine:
         self.spec_drafted = 0                 # draft tokens proposed
         self.spec_accepted = 0                # draft tokens accepted
         self.spec_slot_steps = 0              # (live slot, verify step) pairs
+        self.win_recycled_pages = 0           # window pages slid out + freed
 
         self._step_fn = jax.jit(self._make_step())
         self._spec_fn = jax.jit(self._make_spec_step()) if spec_k else None
+        self._select_fn = jax.jit(self._make_select()) \
+            if (spec_k and self.has_state) else None
         self._prefill_fn = jax.jit(self._make_prefill())
         self._prefill_shared_fn = jax.jit(self._make_prefill_shared())
         self._cow_fn = jax.jit(self._make_cow())
@@ -203,12 +283,14 @@ class PagedServingEngine:
     def _make_step(self):
         cfg, rules = self.cfg, self.rules
         eos, max_len, temp = self.eos_id, self.max_len, self.temperature
+        has_win = self.has_win
 
-        def step(params, cache, block_table, cur_tok, pos, live, gen,
-                 max_new, key):
-            logits, cache = api.decode_step(cfg, params, cache, cur_tok, pos,
-                                            rules=rules,
-                                            block_table=block_table)
+        def step(params, cache, block_table, win_table, cur_tok, pos, live,
+                 gen, max_new, key):
+            logits, cache = api.decode_step(
+                cfg, params, cache, cur_tok, pos, rules=rules,
+                block_table=block_table,
+                win_block_table=win_table if has_win else None)
             key, sub = jax.random.split(key)
             toks = _sample_logits(cfg, logits, temp, sub)
             livei = live.astype(jnp.int32)
@@ -230,58 +312,124 @@ class PagedServingEngine:
         Acceptance, rollback and finish bookkeeping stay host-side: the
         accepted length is data-dependent per request, exactly what a
         fixed-shape jitted program can't express without padding every
-        outcome."""
+        outcome. On stacks with recurrent layers the returned cache
+        carries CHECKPOINTED states — a T axis of per-row states — which
+        ``_select_fn`` collapses to each slot's accepted row."""
         cfg, rules = self.cfg, self.rules
+        has_win = self.has_win
 
-        def spec(params, cache, block_table, tok_block, pos):
-            logits, cache = api.decode_step(cfg, params, cache, tok_block,
-                                            pos, rules=rules,
-                                            block_table=block_table)
+        def spec(params, cache, block_table, win_table, tok_block, pos):
+            logits, cache = api.decode_step(
+                cfg, params, cache, tok_block, pos, rules=rules,
+                block_table=block_table,
+                win_block_table=win_table if has_win else None)
             toks = jnp.argmax(logits[..., : cfg.vocab], -1).astype(jnp.int32)
             return cache, toks
 
         return spec
 
+    def _make_select(self):
+        """Recurrent-state rollback for speculative decode: the verify
+        step's T-step recurrence checkpointed the state after EVERY block
+        row (ssm_decode / rglru_decode with T > 1); given each slot's
+        accepted row index this gathers the state the T=1 engine would
+        have reached — the state-slot analogue of the page rollback
+        ``PageAllocator.truncate_to`` performs for KV."""
+        kinds, tail = self._kinds, self._tail
+        state = set(api.STATE_KINDS)
+
+        def sel(cache, idx):          # idx: (slots,) accepted row per slot
+            def g_tail(leaf):         # (B, T, ...) -> (B, ...)
+                ix = idx.reshape((-1,) + (1,) * (leaf.ndim - 1))
+                return jnp.take_along_axis(leaf, ix, axis=1)[:, 0]
+
+            def g_scan(leaf):         # (L, B, T, ...) -> (L, B, ...)
+                ix = idx.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+                return jnp.take_along_axis(
+                    leaf, jnp.broadcast_to(
+                        ix, (leaf.shape[0],) + ix.shape[1:]), axis=2)[:, :, 0]
+
+            new_scan = {}
+            for j, kd in enumerate(kinds):
+                e = cache["scan"].get(str(j))
+                if e is None:
+                    continue
+                new_scan[str(j)] = jax.tree.map(g_scan, e) \
+                    if kd in state else e
+            new_tail = [jax.tree.map(g_tail, e) if kd in state else e
+                        for e, kd in zip(cache["tail"], tail)]
+            return {"scan": new_scan, "tail": new_tail}
+
+        return sel
+
     def _make_prefill(self):
         cfg, rules, temp = self.cfg, self.rules, self.temperature
         page = self.page_size
+        kinds, tail = self._kinds, self._tail
+        hybrid = self.has_win or self.has_state
 
-        def pf(params, cache, block_table, pos, cur_tok, live, gen,
-               max_new_arr, tokens, length, pages, row, slot, req_max_new,
-               key):
+        def pf(params, cache, block_table, win_table, pos, cur_tok, live,
+               gen, max_new_arr, tokens, length, pages, pages_win, row,
+               row_win, slot, req_max_new, key):
+            # hybrid stacks prefill with paged_kv: recurrent state updates
+            # are masked past `length` (bucket padding never leaks into
+            # the state slot) and local_attn yields full-sequence kv for
+            # the window-page scatter below
             logits, cache1, _ = api.prefill(cfg, params, {"tokens": tokens},
-                                            rules=rules, length=length)
+                                            rules=rules, length=length,
+                                            paged_kv=hybrid)
             key, sub = jax.random.split(key)
             tok = _sample_logits(cfg, logits, temp, sub)[0]
 
-            # scatter the prompt's kv blocks into the page pools. Blocks
-            # past the allocation (bucket padding) carry `pages` entries of
-            # SCRATCH_PAGE, so they land on the scratch page.
-            def merge_scan(pool, one):          # (L,P,pg,..) <- (L,1,Sb,..)
+            # scatter the prompt's kv blocks into the page pools: full-
+            # attention layers through `pages`, sliding-window layers
+            # through `pages_win` (whose below-window AND beyond-
+            # allocation/bucket-padding blocks are SCRATCH_PAGE); write
+            # recurrent layers' state into this request's slot.
+            def merge_scan(pool, one, pg):      # (L,P,pg,..) <- (L,1,Sb,..)
                 L = pool.shape[0]
                 nb = one.shape[2] // page
                 blocks = one.reshape((L, nb, page) + one.shape[3:])
-                return pool.at[:, pages].set(blocks.astype(pool.dtype))
+                return pool.at[:, pg].set(blocks.astype(pool.dtype))
 
-            def merge_tail(pool, one):          # (P,pg,..) <- (1,Sb,..)
+            def merge_tail(pool, one, pg):      # (P,pg,..) <- (1,Sb,..)
                 nb = one.shape[1] // page
                 blocks = one.reshape((nb, page) + one.shape[2:])
-                return pool.at[pages].set(blocks.astype(pool.dtype))
+                return pool.at[pg].set(blocks.astype(pool.dtype))
+
+            def state_scan(st, one):            # (L,slots,..) <- (L,1,..)
+                return st.at[:, slot].set(one[:, 0].astype(st.dtype))
+
+            def state_tail(st, one):            # (slots,..) <- (1,..)
+                return st.at[slot].set(one[0].astype(st.dtype))
+
+            def merged(kd, e, e1, scan_axis):
+                if kd in api.STATE_KINDS:
+                    return jax.tree.map(state_scan if scan_axis
+                                        else state_tail, e, e1)
+                pg = pages if kd in api.PAGEABLE_KINDS else pages_win
+                mg = merge_scan if scan_axis else merge_tail
+                return jax.tree.map(lambda p_, o, _pg=pg: mg(p_, o, _pg),
+                                    e, e1)
 
             new_cache = {
-                "scan": jax.tree.map(merge_scan, cache["scan"],
-                                     cache1["scan"]),
-                "tail": [jax.tree.map(merge_tail, cp, c1)
-                         for cp, c1 in zip(cache["tail"], cache1["tail"])],
+                "scan": {str(j): merged(kd, cache["scan"][str(j)],
+                                        cache1["scan"][str(j)], True)
+                         for j, kd in enumerate(kinds)
+                         if str(j) in cache["scan"]},
+                "tail": [merged(kd, e, e1, False)
+                         for kd, e, e1 in zip(tail, cache["tail"],
+                                              cache1["tail"])],
             }
             block_table = block_table.at[slot].set(row)
+            win_table = win_table.at[slot].set(row_win)
             pos = pos.at[slot].set(length)
             cur_tok = cur_tok.at[slot, 0].set(tok)
             live = live.at[slot].set(True)
             gen = gen.at[slot].set(1)
             max_new_arr = max_new_arr.at[slot].set(req_max_new)
-            return (new_cache, block_table, pos, cur_tok, live, gen,
-                    max_new_arr, tok, key)
+            return (new_cache, block_table, win_table, pos, cur_tok, live,
+                    gen, max_new_arr, tok, key)
 
         return pf
 
@@ -350,8 +498,16 @@ class PagedServingEngine:
 
     def _make_cow(self):
         """Device-side copy-on-write: duplicate one physical page (every
-        layer's pool) into a fresh private page, so a request can diverge
-        inside a shared page without corrupting the other readers."""
+        page-pool layer) into a fresh private page, so a request can
+        diverge inside a shared page without corrupting the other
+        readers. Recurrent state entries are NOT pools — their leading
+        axes are (slots, ...), not (pages, ...) — and pass through
+        untouched (sharing is rejected for state-bearing stacks anyway;
+        the per-kind dispatch keeps that a local fact, not a load-bearing
+        one)."""
+        kinds, tail = self._kinds, self._tail
+        state = set(api.STATE_KINDS)
+
         def cow(cache, src, dst):
             def cp_scan(pool):              # (L, P, pg, ..)
                 return pool.at[:, dst].set(pool[:, src])
@@ -359,9 +515,16 @@ class PagedServingEngine:
             def cp_tail(pool):              # (P, pg, ..)
                 return pool.at[dst].set(pool[src])
 
-            return {"scan": jax.tree.map(cp_scan, cache["scan"]),
-                    "tail": [jax.tree.map(cp_tail, cp)
-                             for cp in cache["tail"]]}
+            new_scan = {}
+            for j, kd in enumerate(kinds):
+                e = cache["scan"].get(str(j))
+                if e is None:
+                    continue
+                new_scan[str(j)] = e if kd in state \
+                    else jax.tree.map(cp_scan, e)
+            new_tail = [e if kd in state else jax.tree.map(cp_tail, e)
+                        for e, kd in zip(cache["tail"], tail)]
+            return {"scan": new_scan, "tail": new_tail}
 
         return cow
 
@@ -384,6 +547,25 @@ class PagedServingEngine:
     def _bucket(self, n: int) -> int:
         return min(max(self.page_size, _next_pow2(n)), self.max_len)
 
+    def win_pages_bound(self, n_tokens: int) -> int:
+        """Max simultaneous live window pages while serving ``n_tokens``:
+        the window plus one in-flight write block (which is spec_k + 1
+        tokens wide under speculative decode) can straddle
+        ceil((window + T)/page) + 1 pages; fewer if the request never
+        grows that long."""
+        t_block = self.spec_k + 1
+        return min(self.alloc.pages_for(n_tokens),
+                   -(-(self.window + t_block) // self.page_size) + 1)
+
+    def _worst_case_pages(self, n_tokens: int) -> int:
+        """Pages a request can ever hold at once (admission feasibility)."""
+        need = 0
+        if self.has_full:
+            need += self.alloc.pages_for(n_tokens)
+        if self.has_win:
+            need += self.win_pages_bound(n_tokens)
+        return need
+
     def submit(self, req: Request) -> bool:
         """Prefill `req` into a free slot. False if out of slots or pages
         (admission rejection — never corrupts a live neighbor's pages).
@@ -400,10 +582,11 @@ class PagedServingEngine:
         L = len(toks)
         remaining = req.max_new - len(req.generated)
         # decode stops at max_len-1 regardless of max_new, so the worst-
-        # case footprint is bounded by max_len tokens
+        # case footprint is bounded by max_len tokens (windowed tables by
+        # O(window) pages — recycling keeps them there)
         worst = min(L + remaining, self.max_len)
         if (L >= self.max_len - 1 or remaining <= 0
-                or self.alloc.pages_for(worst) > self.alloc.num_pages):
+                or self._worst_case_pages(worst) > self.alloc.num_pages):
             # can't (or needn't) ever serve this request: drop it as done
             # with whatever it has, rather than crash the loop or let the
             # scheduler retry an admission that can never succeed
@@ -419,7 +602,8 @@ class PagedServingEngine:
             m = self.prefix.match(toks, max_tokens=L - 1)
             shared = m.pages
             partial_page, partial_tokens = m.partial_page, m.partial_tokens
-        need_fresh = self.alloc.pages_for(L) - len(shared)
+        need_fresh = (self.alloc.pages_for(L) - len(shared)
+                      if self.has_full else 0)
         deficit = need_fresh - self.alloc.free_pages
         if deficit > 0 and self.prefix is not None:
             # evict idle cached pages before rejecting admission — but
@@ -432,9 +616,27 @@ class PagedServingEngine:
                 keep.add(partial_page)
             if self.prefix.evictable_count(protect=keep) >= deficit:
                 self.prefix.evict(deficit, protect=keep)
-        table = self.alloc.allocate_shared(req.rid, L, shared)
-        if table is None:
-            return False             # pool full: reject admission
+        table: List[int] = []
+        if self.has_full:
+            got = self.alloc.allocate_shared(req.rid, L, shared)
+            if got is None:
+                return False         # pool full: reject admission
+            table = got
+        wtable: List[int] = []
+        dead0 = 0
+        if self.has_win:
+            # a prompt longer than the window admits with its pre-window
+            # blocks never allocated (base_blocks): future queries sit at
+            # positions >= L and can only see keys > L - window
+            dead0 = min(max(0, L - self.window + 1) // self.page_size,
+                        self.alloc.pages_for(L) - 1)
+            got = self.alloc.allocate(_win_rid(req.rid), L,
+                                      base_blocks=dead0)
+            if got is None:
+                if self.has_full:
+                    self.alloc.free_request(req.rid)
+                return False         # pool full: reject admission
+            wtable = got
         if m is not None:
             # admission is now certain: count the lookup and touch the
             # matched path's LRU clock (a rejected-and-retried submit must
@@ -452,21 +654,30 @@ class PagedServingEngine:
 
         row = np.zeros((self.max_blocks,), np.int32)
         row[: len(table)] = table
+        # sliding-window device row: logical block j of [dead0, dead0+n)
+        # holds wtable[j - dead0]; everything else (recycled lead blocks,
+        # never-written tail) stays SCRATCH
+        row_win = np.zeros((self.max_blocks,), np.int32)
+        row_win[dead0: dead0 + len(wtable)] = wtable
         if prefix_len == 0:
             bucket = self._bucket(L)
             nb = bucket // self.page_size
             pages = np.full((nb,), SCRATCH_PAGE, np.int32)
             pages[: len(table)] = table[:nb]
+            pages_win = np.full((nb,), SCRATCH_PAGE, np.int32)
+            pages_win[dead0: min(dead0 + len(wtable), nb)] = \
+                wtable[: max(0, nb - dead0)]
             tok_arr = np.zeros((1, bucket), np.int32)
             tok_arr[0, :L] = toks
             self._prefill_for(bucket)
-            (self.cache, self.block_table, self.pos, self.cur_tok,
-             self.live_mask, self.gen_cnt, self.max_new_arr, tok,
-             self.key) = self._prefill_fn(
-                self.params, self.cache, self.block_table, self.pos,
-                self.cur_tok, self.live_mask, self.gen_cnt,
+            (self.cache, self.block_table, self.win_table, self.pos,
+             self.cur_tok, self.live_mask, self.gen_cnt, self.max_new_arr,
+             tok, self.key) = self._prefill_fn(
+                self.params, self.cache, self.block_table, self.win_table,
+                self.pos, self.cur_tok, self.live_mask, self.gen_cnt,
                 self.max_new_arr, jnp.asarray(tok_arr), jnp.int32(L),
-                jnp.asarray(pages), jnp.asarray(row), jnp.int32(slot),
+                jnp.asarray(pages), jnp.asarray(pages_win),
+                jnp.asarray(row), jnp.asarray(row_win), jnp.int32(slot),
                 jnp.int32(remaining), self.key)
             self.prefilled_tokens += L
         else:
@@ -527,8 +738,12 @@ class PagedServingEngine:
         a dead slot can only ever write to the scratch page."""
         req = self.live[slot]
         self.live[slot] = None
-        self.alloc.free_request(req.rid)
-        self.block_table = self.block_table.at[slot].set(SCRATCH_PAGE)
+        if self.has_full:
+            self.alloc.free_request(req.rid)
+            self.block_table = self.block_table.at[slot].set(SCRATCH_PAGE)
+        if self.has_win:
+            self.alloc.free_request(_win_rid(req.rid))
+            self.win_table = self.win_table.at[slot].set(SCRATCH_PAGE)
         self.live_mask = self.live_mask.at[slot].set(False)
         return req
 
@@ -582,42 +797,82 @@ class PagedServingEngine:
                 continue
             pos = self._pos_host[slot]
             target = min(pos + n_tokens, self.max_len)
-            # grow the table page-by-page until it covers `target` tokens
-            # (extend_to grows at most one page per call)
-            while True:
-                have = len(self.alloc.block_table(req.rid)) * page
-                got = self.alloc.extend_to(req.rid,
-                                           min(target, have + page))
-                if got is None:
-                    if not self._reclaim_one_page(slot, preempted):
-                        raise RuntimeError(
-                            "page pool too small for a single request")
-                    continue
-                if got:              # fresh page: publish to device table
+            if self.has_win:
+                # recycle window pages FIRST: blocks entirely below every
+                # future query's window (< pos - window + 1) free pages
+                # this very top-up may need — that recycling is what
+                # bounds a windowed request at O(window) live pages
+                self._recycle_win(slot, req.rid, pos)
+                self._grow_table(_win_rid(req.rid), slot, target,
+                                 preempted, win=True)
+                self._recycle_win(slot, req.rid, pos)
+            if self.has_full:
+                self._grow_table(req.rid, slot, target, preempted,
+                                 win=False)
+                # write exclusivity across every block the step may touch
+                # (only the first — the partially-written one — can
+                # actually be shared; the loop is the defensive spelling;
+                # window pages are never shared, so full tables only)
+                for blk in range(pos // page, (target - 1) // page + 1):
+                    while self.alloc.ref(
+                            self.alloc.block_table(req.rid)[blk]) > 1:
+                        swapped = self.alloc.replace_page(req.rid, blk)
+                        if swapped is not None:
+                            src, dst = swapped
+                            self.cache = self._cow_fn(self.cache,
+                                                      jnp.int32(src),
+                                                      jnp.int32(dst))
+                            self.block_table = self.block_table.at[
+                                slot, blk].set(dst)
+                            self.cow_copies += 1
+                            break
+                        if not self._reclaim_one_page(slot, preempted):
+                            raise RuntimeError(
+                                "page pool too small for a single request")
+        return preempted
+
+    def _grow_table(self, rid, slot: int, target: int,
+                    preempted: List[Request], *, win: bool) -> None:
+        """Grow ``rid``'s table page-by-page until it covers ``target``
+        tokens (extend_to grows at most one page per call), publishing
+        fresh pages to the matching device table and reclaiming (evict /
+        preempt-youngest) on pool exhaustion."""
+        page = self.page_size
+        while True:
+            have = (self.alloc.base_blocks(rid)
+                    + len(self.alloc.block_table(rid))) * page
+            got = self.alloc.extend_to(rid, min(target, have + page))
+            if got is None:
+                if not self._reclaim_one_page(slot, preempted):
+                    raise RuntimeError(
+                        "page pool too small for a single request")
+                continue
+            if got:              # fresh page: publish to device table
+                if win:
+                    self.win_table = self.win_table.at[
+                        slot, have // page].set(got)
+                else:
                     self.block_table = self.block_table.at[
                         slot, have // page].set(got)
-                if have + page >= target or not got:
-                    break
-            # write exclusivity across every block the step may touch
-            # (only the first — the partially-written one — can actually
-            # be shared; the loop is the defensive spelling)
-            for blk in range(pos // page, (target - 1) // page + 1):
-                while self.alloc.ref(
-                        self.alloc.block_table(req.rid)[blk]) > 1:
-                    swapped = self.alloc.replace_page(req.rid, blk)
-                    if swapped is not None:
-                        src, dst = swapped
-                        self.cache = self._cow_fn(self.cache,
-                                                  jnp.int32(src),
-                                                  jnp.int32(dst))
-                        self.block_table = self.block_table.at[
-                            slot, blk].set(dst)
-                        self.cow_copies += 1
-                        break
-                    if not self._reclaim_one_page(slot, preempted):
-                        raise RuntimeError(
-                            "page pool too small for a single request")
-        return preempted
+            if have + page >= target or not got:
+                break
+
+    def _recycle_win(self, slot: int, rid: int, pos: int) -> None:
+        """Free this slot's window pages that slid entirely below the
+        attention window: every query from here on sits at a position
+        >= ``pos``, so keys at positions <= pos - window can never be
+        read again. Their logical blocks go back to SCRATCH on device
+        (the kernel skips them) and their pages back to the free list
+        (PageAllocator.release_prefix). At least one block always stays
+        (the one being written)."""
+        wrid = _win_rid(rid)
+        dead = max(0, pos - self.window + 1) // self.page_size
+        base = self.alloc.base_blocks(wrid)
+        n = min(dead - base, len(self.alloc.block_table(wrid)) - 1)
+        if n > 0:
+            self.win_recycled_pages += self.alloc.release_prefix(wrid, n)
+            self.win_table = self.win_table.at[
+                slot, base:base + n].set(SCRATCH_PAGE)
 
     def step(self) -> List[Request]:
         """Advance every live slot: one device program, one host sync.
@@ -636,9 +891,9 @@ class PagedServingEngine:
         t0 = time.perf_counter()
         (self.cache, self.cur_tok, self.pos, self.gen_cnt, self.live_mask,
          done_d, toks_d, self.key) = self._step_fn(
-            self.params, self.cache, self.block_table, self.cur_tok,
-            self.pos, self.live_mask, self.gen_cnt, self.max_new_arr,
-            self.key)
+            self.params, self.cache, self.block_table, self.win_table,
+            self.cur_tok, self.pos, self.live_mask, self.gen_cnt,
+            self.max_new_arr, self.key)
         toks, done = jax.device_get((toks_d, done_d))
         self.step_wall_s += time.perf_counter() - t0
         self.decode_steps += 1
@@ -684,12 +939,13 @@ class PagedServingEngine:
             self.spec_drafted += len(d)
             self.spec_slot_steps += 1
         self.cache, toks_d = self._spec_fn(
-            self.params, self.cache, self.block_table,
+            self.params, self.cache, self.block_table, self.win_table,
             jnp.asarray(tok_block), jnp.asarray(self._pos_host, jnp.int32))
         greedy = np.asarray(jax.device_get(toks_d))   # (slots, T): one sync
         self.step_wall_s += time.perf_counter() - t0
         self.decode_steps += 1
         survivors = []            # (slot, new_pos, emitted, cur_tok) rows
+        accept_idx = np.zeros((self.slots,), np.int32)
         for s, r in enumerate(self.live):
             if r is None:
                 continue
@@ -713,18 +969,38 @@ class PagedServingEngine:
                     finished = True
                     break
             self.spec_accepted += m - 1
+            accept_idx[s] = m - 1          # recurrent state after row m-1
             if finished:
                 self._finish_slot(s)       # frees every page incl. drafts
                 continue
             # rollback: disown the whole pages past the accept point and
-            # republish their table slots as scratch on device
-            dropped = self.alloc.truncate_to(r.rid, pos0 + m)
-            if dropped:
-                keep = len(self.alloc.block_table(r.rid))
-                self.block_table = self.block_table.at[
-                    s, keep:keep + dropped].set(SCRATCH_PAGE)
+            # republish their table slots as scratch on device — full and
+            # window tables alike (a rejected row may have crossed a page
+            # boundary in either)
+            if self.has_full:
+                dropped = self.alloc.truncate_to(r.rid, pos0 + m)
+                if dropped:
+                    keep = len(self.alloc.block_table(r.rid))
+                    self.block_table = self.block_table.at[
+                        s, keep:keep + dropped].set(SCRATCH_PAGE)
+            if self.has_win:
+                wrid = _win_rid(r.rid)
+                dropped = self.alloc.truncate_to(wrid, pos0 + m)
+                if dropped:
+                    keep = (self.alloc.base_blocks(wrid)
+                            + len(self.alloc.block_table(wrid)))
+                    self.win_table = self.win_table.at[
+                        s, keep:keep + dropped].set(SCRATCH_PAGE)
             self._pos_host[s] = pos0 + m
             survivors.append((s, pos0 + m, m, int(r.generated[-1])))
+        if self._select_fn is not None:
+            # collapse the verify step's checkpointed recurrent states
+            # (T axis) to each slot's accepted row — the state-slot
+            # analogue of the page rollback above. Must run even when
+            # every slot finished: the next step's trace expects plain
+            # state shapes.
+            self.cache = self._select_fn(self.cache,
+                                         jnp.asarray(accept_idx))
         if survivors:
             # device mirrors (pos / gen / cur_tok) stay in sync — so
             # telemetry and a switch back to the T=1 path keep working —
@@ -790,12 +1066,20 @@ class PagedServingEngine:
         for slot, req in enumerate(self.live):
             if req is None:
                 continue
-            table = self.alloc.block_table(req.rid)
-            blk = self._pos_host[slot] // self.page_size
-            if blk < len(table):
-                assert self.alloc.ref(table[blk]) == 1, (
-                    f"slot {slot}: next-write page {table[blk]} is shared "
-                    f"(ref {self.alloc.ref(table[blk])})")
+            if self.has_full:
+                table = self.alloc.block_table(req.rid)
+                blk = self._pos_host[slot] // self.page_size
+                if blk < len(table):
+                    assert self.alloc.ref(table[blk]) == 1, (
+                        f"slot {slot}: next-write page {table[blk]} is "
+                        f"shared (ref {self.alloc.ref(table[blk])})")
+            if self.has_win:
+                wrid = _win_rid(req.rid)
+                live = len(self.alloc.block_table(wrid))
+                bound = self.win_pages_bound(self.max_len)
+                assert live <= bound, (
+                    f"slot {slot}: {live} live window pages exceed the "
+                    f"O(window) bound {bound} — recycling fell behind")
 
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10_000) -> List[Request]:

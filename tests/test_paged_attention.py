@@ -307,6 +307,145 @@ def test_property_multi_token_matches_ref(page, n_blocks, t_rows, group,
 
 
 # ---------------------------------------------------------------------------
+# Sliding windows (hybrid local_attn layers: in-sweep window masking +
+# below-window page skipping; ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window,page", [(4, 8), (16, 4), (7, 8), (32, 16)])
+def test_windowed_matches_hand_sliced_dense(window, page):
+    """Kernel with a window must equal plain dense attention over exactly
+    the last `window` keys — across windows smaller than, equal to, and
+    straddling the page size."""
+    B, H, KV, D, n_blocks = 3, 8, 2, 32, 4
+    lengths = [2, page + 1, min(3 * page + 2, n_blocks * page)][:B]
+    q, kp, vp, table, dk, dv = _paged_case(
+        jax.random.key(window * 100 + page), B, H, KV, D, page, n_blocks,
+        lengths)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths),
+                              window=window)
+    for b, n in enumerate(lengths):
+        lo = max(0, n - window)
+        want = ref.mha_ref(q[b][None, None], dk[b][None, lo:n],
+                           dv[b][None, lo:n], causal=False)[0, 0]
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(want),
+                                   rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("T", [2, 4])
+def test_windowed_multi_token_matches_ref(T):
+    """T-row verify blocks under a window: row t sees keys in
+    (base + t - window, base + t] — kernel == generalized oracle."""
+    B, H, KV, D, page, n_blocks, window = 2, 6, 3, 16, 8, 4, 5
+    lengths = [T + 1, 3 * page + T]
+    q, kp, vp, table, _, _ = _paged_case(
+        jax.random.key(21 + T), B, T * H, KV, D, page, n_blocks, lengths,
+        shuffle_key=jax.random.key(22))
+    q = q.reshape(B, T, H, D)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths),
+                              window=window)
+    want = ref.paged_attention_ref(q, kp, vp, table, jnp.asarray(lengths),
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_windowed_ignores_below_window_pages():
+    """Pages entirely below the window are skipped in-grid AND masked
+    in-sweep: poisoning every below-window key — including replacing
+    whole recycled pages with the scratch page, as the serving engine
+    does — must not move the output at all."""
+    B, H, KV, D, page, n_blocks, window = 2, 4, 2, 16, 4, 8, 6
+    lengths = [13, 29]
+    q, kp, vp, table, _, _ = _paged_case(jax.random.key(31), B, H, KV, D,
+                                         page, n_blocks, lengths)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths),
+                              window=window)
+    kp2, vp2 = kp.at[SCRATCH_PAGE].set(1e4), vp.at[SCRATCH_PAGE].set(1e4)
+    table2 = np.asarray(table).copy()
+    for b, n in enumerate(lengths):
+        lo = n - window                      # first visible key position
+        for p_ in range(max(lo, 0)):
+            kp2 = kp2.at[table[b, p_ // page], p_ % page].set(1e4)
+            vp2 = vp2.at[table[b, p_ // page], p_ % page].set(1e4)
+        # recycle: whole blocks below the window point at scratch
+        dead = max(0, lo) // page
+        table2[b, :dead] = SCRATCH_PAGE
+    got2 = ops.paged_attention(q, kp2, vp2, table, jnp.asarray(lengths),
+                               window=window)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+    got3 = ops.paged_attention(q, kp2, vp2, jnp.asarray(table2),
+                               jnp.asarray(lengths), window=window)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got3))
+
+
+def test_windowed_int8_pool():
+    B, H, KV, D, page, n_blocks, window = 2, 8, 2, 32, 8, 3, 10
+    lengths = [7, 23]
+    q, kp, vp, table, _, _ = _paged_case(jax.random.key(41), B, H, KV, D,
+                                         page, n_blocks, lengths)
+    scale = 8.0
+    kq = jnp.clip(jnp.round(kp * 127 / scale), -127, 127).astype(jnp.int8)
+    vq = jnp.clip(jnp.round(vp * 127 / scale), -127, 127).astype(jnp.int8)
+    got = ops.paged_attention(q, kq, vq, table, jnp.asarray(lengths),
+                              kv_scale=scale, window=window)
+    want = ref.paged_attention_ref(q, kq, vq, table, jnp.asarray(lengths),
+                                   kv_scale=scale, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_windowed_gather_oracle_matches_ref():
+    """layers.attend_decode with window (ring=False, absolute positions)
+    is the paged gather baseline's masking — it must agree with the
+    dense-gather oracle for T == 1 and T > 1."""
+    from repro.models.layers import attend_decode
+    B, H, KV, D, page, n_blocks, window, T = 2, 4, 2, 16, 8, 3, 5, 3
+    lengths = [T + 2, 2 * page + T]
+    q, kp, vp, table, _, _ = _paged_case(jax.random.key(51), B, T * H, KV,
+                                         D, page, n_blocks, lengths)
+    q = q.reshape(B, T, H, D)
+    kg = kp[table].reshape(B, n_blocks * page, KV, D)
+    vg = vp[table].reshape(B, n_blocks * page, KV, D)
+    pos = jnp.asarray(lengths) - T          # first new token's position
+    got = attend_decode(q, kg, vg, pos, window=window)
+    want = ref.paged_attention_ref(q, kp, vp, table, jnp.asarray(lengths),
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    page=st.sampled_from([4, 8]),
+    n_blocks=st.integers(min_value=1, max_value=4),
+    t_rows=st.integers(min_value=1, max_value=3),
+    window=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    data=st.data(),
+)
+def test_property_windowed_matches_ref(page, n_blocks, t_rows, window,
+                                       seed, data):
+    """Property: random shapes, T-row blocks, windows and ragged lengths
+    — windowed kernel == windowed dense-gather oracle."""
+    B, KV, D = 2, 2, 16
+    H = KV * 2
+    lengths = [data.draw(st.integers(min_value=t_rows,
+                                     max_value=page * n_blocks))
+               for _ in range(B)]
+    q, kp, vp, table, _, _ = _paged_case(
+        jax.random.key(seed), B, t_rows * H, KV, D, page, n_blocks, lengths,
+        shuffle_key=jax.random.key(seed + 1))
+    q = q.reshape(B, t_rows, H, D)
+    got = ops.paged_attention(q, kp, vp, table, jnp.asarray(lengths),
+                              window=window)
+    want = ref.paged_attention_ref(q, kp, vp, table, jnp.asarray(lengths),
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
 # End-to-end: the serving engine on the kernel path
 # ---------------------------------------------------------------------------
 
