@@ -2,7 +2,7 @@
 attention) vs the seed dense-slot engine, plus the prefix-sharing,
 speculative-decode and hybrid-stack scenarios.
 
-Four scenarios, all generated deterministically from ``--seed`` so the CI
+Five scenarios, all generated deterministically from ``--seed`` so the CI
 bench-smoke CSV artifacts are comparable run-to-run:
 
 **mixed** — a mixed-length request trace (every prompt a different length —
@@ -71,8 +71,20 @@ layers ride along in fixed-size state slots. Extra columns:
 enforces), and the ``paged/dense`` ratio row's ``peak_kv_tokens`` is the
 headline (window / max_len-bound memory, identical greedy tokens).
 
+**sharded** — the mixed trace through the paged[kernel] engine at
+model = 1/2/4 tensor-parallel shards (``parallel/tp.py`` over
+``launch/mesh.make_host_mesh`` meshes; on CPU CI the devices come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``). Extra columns:
+``model_shards`` / ``sharded_axes``, ``peak_pages_per_shard`` (equals the
+allocator peak — block tables are replicated, each shard holds its
+KV-head slice of the same page set), ``pool_bytes_per_shard`` (what TP
+actually divides) and ``tokens_match_tp1`` (every shard count must emit
+the single-shard engine's exact greedy tokens). Shard counts the backend
+cannot fold are emitted as skip-note rows, not dropped.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen2.5-3b]
-      [--seed 0] [--scenario mixed|shared-prefix|speculative|hybrid|all]
+      [--seed 0]
+      [--scenario mixed|shared-prefix|speculative|hybrid|sharded|all]
 
 (the hybrid scenario pins its own arch — recurrentgemma-9b smoke — since
 it exists to exercise the windowed/recurrent block kinds.)
@@ -412,6 +424,59 @@ def _run_hybrid(slots, max_len, n_requests, max_new, seed) -> List[Dict]:
     return rows
 
 
+def _run_sharded(cfg, params, slots, max_len, n_requests, max_new,
+                 seed) -> List[Dict]:
+    """Tensor-parallel scaling rows (ISSUE 6): the same mixed trace
+    through the paged[kernel] engine at model=1/2/4 shards, one
+    ``("data","model")`` mesh per shard count over the first ``s`` visible
+    devices (single-shard = no mesh — the baseline every sharded row must
+    match token-for-token). Shard counts the backend can't fold (fewer
+    devices than shards — e.g. a CI leg without the forced-host-device
+    flag) are skipped with a note row, NOT silently dropped: an empty
+    scaling table must say why. Per-shard columns come from
+    ``engine.shard_stats()``: pages are allocated logically and block
+    tables are replicated, so ``peak_pages_per_shard`` equals the
+    allocator's peak while ``pool_bytes_per_shard`` is what tensor
+    parallelism actually divides."""
+    from repro.launch.mesh import make_host_mesh
+
+    def mk(new):
+        return _trace(cfg, n_requests, new, seed)
+
+    n_dev = len(jax.devices())
+    rows: List[Dict] = []
+    baseline: Optional[List[List[int]]] = None
+    for s in (1, 2, 4):
+        if s > n_dev:
+            rows.append({"engine": f"paged[kernel,tp{s}]",
+                         "model_shards": s, "skipped":
+                         f"needs {s} devices, have {n_dev} "
+                         f"(XLA_FLAGS=--xla_force_host_platform_"
+                         f"device_count=4)"})
+            continue
+        mesh = make_host_mesh(model=s, devices=jax.devices()[:s]) \
+            if s > 1 else None
+        eng = PagedServingEngine(cfg, params, slots=slots, max_len=max_len,
+                                 attn_impl="kernel", mesh=mesh)
+        _warm(eng, mk)
+        reqs = mk(max_new)
+        row = _drive(eng, reqs, 4000, cfg, name=f"paged[kernel,tp{s}]")
+        toks = [r.generated for r in reqs]
+        if baseline is None:
+            baseline = toks
+        st = eng.shard_stats()
+        row["model_shards"] = int(st["model_shards"])
+        row["sharded_axes"] = st["sharded_axes"] or "-"
+        row["peak_pages_per_shard"] = int(st["peak_pages_per_shard"])
+        row["pool_bytes_per_shard"] = int(st["pool_bytes_per_shard"])
+        # the contract the scaling table rides on: every shard count
+        # emits the SAME greedy tokens — a row that didn't is not a
+        # data point, it's a bug, and the CSV must say so
+        row["tokens_match_tp1"] = int(toks == baseline)
+        rows.append(row)
+    return rows
+
+
 def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
         n_requests: int = 12, max_new: int = 8, smoke: bool = False,
         seed: int = 0, scenario: str = "all",
@@ -440,6 +505,9 @@ def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
         # smoke) and a decode tail long enough to slide past the window
         rows += _run_hybrid(slots, max_len, max(4, n_requests // 2),
                             max(max_new, 24), seed)
+    if scenario in ("sharded", "all"):
+        rows += _run_sharded(cfg, params, slots, max_len, n_requests,
+                             max_new, seed)
     return rows
 
 
@@ -455,7 +523,7 @@ def main() -> None:
                          "so CI CSV artifacts are comparable run-to-run)")
     ap.add_argument("--scenario",
                     choices=["mixed", "shared-prefix", "speculative",
-                             "hybrid", "all"],
+                             "hybrid", "sharded", "all"],
                     default="all")
     ap.add_argument("--sys-len", type=int, default=48,
                     help="shared system-prompt length for shared-prefix")

@@ -13,9 +13,14 @@ with page recycling (O(window) live pages per request), recurrent layers
 fixed-size state slots — continuous batching, bucketed prefill and
 speculative decode all included.
 
+--shards M serves tensor-parallel over M devices (sharded KV pools +
+weights, identical greedy tokens), --replicas R adds data-parallel
+whole-engine replicas behind a router; on CPU force the devices with
+XLA_FLAGS=--xla_force_host_platform_device_count=N.
+
   PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
            [--slots 4] [--requests 8] [--max-new 16] [--prefix-cache]
-           [--spec-k 4]
+           [--spec-k 4] [--shards 2] [--replicas 2]
 """
 import argparse
 import time
@@ -24,6 +29,7 @@ import jax
 
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import api
+from repro.runtime.router import make_replicas
 from repro.runtime.serving import PagedServingEngine, Request, ServingEngine
 
 
@@ -45,18 +51,35 @@ def main() -> None:
     ap.add_argument("--spec-k", type=int, default=0,
                     help="verify up to K prompt-lookup drafted tokens per "
                          "decode step (exact greedy; temperature 0 only)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="tensor-parallel shards: KV pools + attn/mlp "
+                         "weights shard over this many devices")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind a router "
+                         "(each gets --shards devices)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     print(f"[serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"{args.slots} slots, {args.requests} requests")
     params = api.init_params(cfg, jax.random.key(0))
-    eng = ServingEngine(cfg, params, slots=args.slots, max_len=128,
-                        page_size=args.page_size,
-                        temperature=args.temperature,
-                        attn_impl=args.paged_attn,
-                        prefix_cache=args.prefix_cache,
-                        spec_k=args.spec_k)
+    kw = dict(slots=args.slots, max_len=128, page_size=args.page_size,
+              temperature=args.temperature, attn_impl=args.paged_attn,
+              prefix_cache=args.prefix_cache, spec_k=args.spec_k)
+    router = None
+    if args.replicas > 1:
+        router = make_replicas(cfg, params, replicas=args.replicas,
+                               model=args.shards, **kw)
+        eng = router.engines[0]
+        print(f"[serve] router: {args.replicas} x {args.shards}-shard "
+              f"replicas on {len(jax.devices())} device(s)")
+    else:
+        mesh = None
+        if args.shards > 1:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(model=args.shards,
+                                  devices=jax.devices()[:args.shards])
+        eng = ServingEngine(cfg, params, mesh=mesh, **kw)
     print(f"[serve] engine: {type(eng).__name__}")
 
     sys_prompt = [(3 * j + 1) % cfg.vocab for j in range(2 * args.page_size)]
@@ -65,13 +88,26 @@ def main() -> None:
                     max_new=args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
-    done = eng.run_to_completion(reqs, max_steps=2000)
+    driver = router if router is not None else eng
+    done = driver.run_to_completion(reqs, max_steps=2000)
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
+    traces = sum(e.prefill_traces for e in router.engines) \
+        if router is not None else eng.prefill_traces
     print(f"[serve] {len(done)}/{len(reqs)} done, {toks} tokens in "
           f"{dt:.2f}s ({toks/dt:.1f} tok/s CPU), "
-          f"{eng.prefill_traces} prefill traces")
+          f"{traces} prefill traces")
+    if router is not None:
+        rs = router.stats()
+        print(f"[serve] routed {rs['routed']}, peak pages per replica "
+              f"{[int(p) for p in rs['peak_pages_per_replica']]}")
     if isinstance(eng, PagedServingEngine):
+        ss = eng.shard_stats()
+        if ss["model_shards"] > 1:
+            print(f"[serve] tensor-parallel: {int(ss['model_shards'])} "
+                  f"shards ({ss['sharded_axes']}), peak "
+                  f"{int(ss['peak_pages_per_shard'])} pages/shard, "
+                  f"{int(ss['pool_bytes_per_shard'])} pool bytes/shard")
         st = eng.pool_stats()
         print(f"[serve] kv pool: page={st.page_size} peak "
               f"{st.peak_pages}/{st.num_pages} pages "

@@ -14,9 +14,15 @@ Current shims:
 * ``make_mesh`` — ``jax.make_mesh`` grew an ``axis_types=`` kwarg (and
   ``jax.sharding.AxisType``) in 0.5. On older JAX every axis is already
   implicitly Auto, so dropping the kwarg is semantics-preserving.
+* ``shard_map`` — promoted from ``jax.experimental.shard_map`` to
+  ``jax.shard_map`` in 0.6, and its replication-check kwarg was renamed
+  ``check_rep`` -> ``check_vma`` along the way. We always DISABLE the
+  check: the manual bodies the serving path maps contain ``pallas_call``
+  and explicit ``psum``s, which the checker cannot type.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -59,12 +65,52 @@ def set_mesh(mesh: jax.sharding.Mesh):
     return mesh
 
 
-def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
-              ) -> jax.sharding.Mesh:
+# jax.make_mesh has taken devices= across the whole supported range, but
+# feature-detect per the shim policy so a future rename fails HERE.
+_MAKE_MESH_HAS_DEVICES = \
+    "devices" in inspect.signature(jax.make_mesh).parameters
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices: Optional[Sequence[Any]] = None) -> jax.sharding.Mesh:
     """``jax.make_mesh`` with every axis explicitly Auto where the concept
-    exists (JAX >= 0.5) and implicitly Auto where it doesn't (0.4.x)."""
+    exists (JAX >= 0.5) and implicitly Auto where it doesn't (0.4.x).
+    ``devices``: explicit device list (e.g. a replica's slice of
+    ``jax.devices()``); default lets JAX pick all local devices."""
+    kwargs: dict = {}
+    if devices is not None:
+        if not _MAKE_MESH_HAS_DEVICES:
+            import numpy as np
+            return jax.sharding.Mesh(
+                np.asarray(devices).reshape(tuple(axis_shapes)),
+                tuple(axis_names))
+        kwargs["devices"] = tuple(devices)
     if HAS_AXIS_TYPE:
-        return jax.make_mesh(
-            tuple(axis_shapes), tuple(axis_names),
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
-    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+        kwargs["axis_types"] = \
+            (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# --------------------------------------------------------------------------
+# shard_map: jax.shard_map (>= 0.6) vs jax.experimental.shard_map (0.4/0.5),
+# check_rep (old) vs check_vma (new) — always off, see module docstring
+# --------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    _SHARD_MAP = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _SHARD_MAP
+
+_SHARD_MAP_CHECK_KWARG = next(
+    (k for k in ("check_rep", "check_vma")
+     if k in inspect.signature(_SHARD_MAP).parameters), None)
+
+
+def shard_map(fn, mesh: jax.sharding.Mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with the replication check disabled
+    (manual bodies here carry pallas_call + explicit psums, which the
+    checker rejects)."""
+    kwargs = {_SHARD_MAP_CHECK_KWARG: False} if _SHARD_MAP_CHECK_KWARG \
+        else {}
+    return _SHARD_MAP(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)

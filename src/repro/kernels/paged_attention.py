@@ -44,7 +44,16 @@ indirection *inside* the attention kernel, vLLM-style:
   grows — and the straddling page is trimmed by an extra in-sweep mask
   term (key position must exceed ``base + t - window``);
 * int8 KV pools are dequantized tile-by-tile inside the kernel
-  (``kv_scale``), so the f32 view of the cache never materializes either.
+  (``kv_scale``), so the f32 view of the cache never materializes either;
+* **tensor parallelism** (ISSUE 6) needs NO kernel change: under the
+  serving TP plan (``parallel/tp.py``) this kernel runs inside a
+  ``shard_map`` body on each shard's LOCAL slice of the pool — ``KV`` is
+  the per-shard KV-head count, ``q`` carries the matching ``H/M`` heads,
+  and because GQA groups shard whole (heads and kv_heads divide the mesh
+  together), ``H % KV == 0`` and the group fold are unchanged. Block
+  tables and lengths are replicated, pages are local, and the online-
+  softmax scratch never crosses shards — the psum happens later, at the
+  out-projection (``layers.attention_decode``).
 
 The pure-jnp oracle (dense gather + masked softmax) is
 ``repro.kernels.ref.paged_attention_ref``; dispatch (TPU compiled vs

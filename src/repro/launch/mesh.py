@@ -22,8 +22,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
-    """Tiny mesh over the actually-available devices (tests/examples)."""
-    n = len(jax.devices())
-    assert n % model == 0
-    return make_mesh((n // model, model), ("data", "model"))
+def make_host_mesh(model: int = 1, *,
+                   devices=None) -> jax.sharding.Mesh:
+    """Tiny ("data", "model") mesh over the actually-available devices
+    (tests/examples), or over an explicit ``devices`` subset — which is
+    how the replica router gives each engine replica its own disjoint
+    slice of the host's devices, and how forced-host-device tests
+    (XLA_FLAGS=--xla_force_host_platform_device_count=N) pin a mesh to
+    fewer devices than the backend exposes."""
+    devs = list(devices) if devices is not None else list(jax.devices())
+    n = len(devs)
+    if model < 1 or n % model != 0:
+        raise ValueError(
+            f"make_host_mesh: cannot fold {n} device(s) into a "
+            f"(data, model) mesh with model={model} — n must be a "
+            f"positive multiple of model")
+    return make_mesh((n // model, model), ("data", "model"), devices=devs)

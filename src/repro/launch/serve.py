@@ -3,7 +3,7 @@
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       [--slots 4] [--requests 8] [--max-new 12] [--engine paged|dense] \
       [--page-size 16] [--num-pages N] [--paged-attn kernel|gather] \
-      [--prefix-cache] [--spec-k K]
+      [--prefix-cache] [--spec-k K] [--shards M] [--replicas R]
 
 Every decoder-only stack defaults to the paged KV-cache engine (continuous
 batching over a shared page pool, bucketed prefill) — hybrid stacks
@@ -12,6 +12,12 @@ recycled as they slide out of the window (O(window) live pages per
 request), recurrent layers get fixed-size state slots. Only
 encoder-decoder stacks fall back to the dense-slot engine (with a warning
 naming any paged-engine kwargs that fallback drops).
+
+``--shards M`` serves tensor-parallel over M devices (KV pools + attn/mlp
+weights sharded on a ("data","model") mesh; same greedy tokens as M=1);
+``--replicas R`` runs R data-parallel engine replicas behind a router
+(R x M devices total — on CPU, force devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ import jax
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.models import api
+from repro.runtime.router import make_replicas
 from repro.runtime.serving import (DenseServingEngine, PagedServingEngine,
                                    Request, ServingEngine)
 
@@ -53,6 +60,16 @@ def main() -> None:
                     help="speculative decode: verify up to K prompt-lookup "
                          "drafted tokens per multi-token step (exact "
                          "greedy; paged engine only, temperature 0)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="tensor-parallel shards per engine: KV pools and "
+                         "attn/mlp weights shard over a ('data','model') "
+                         "mesh of this many devices (paged engine only)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind a router "
+                         "(each replica gets --shards devices; paged "
+                         "engine only)")
+    ap.add_argument("--route", choices=["hash", "least_loaded"],
+                    default="hash", help="replica routing policy")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -61,20 +78,31 @@ def main() -> None:
     params = api.init_params(cfg, jax.random.key(0))
     common = dict(slots=args.slots, max_len=args.max_len,
                   temperature=args.temperature)
-    if args.engine == "dense":
+    paged_kw = dict(page_size=args.page_size, num_pages=args.num_pages,
+                    attn_impl=args.paged_attn,
+                    prefix_cache=args.prefix_cache, spec_k=args.spec_k)
+    router = None
+    if args.replicas > 1:
+        if args.engine == "dense":
+            raise SystemExit("--replicas needs the paged engine")
+        router = make_replicas(cfg, params, replicas=args.replicas,
+                               model=args.shards, policy=args.route,
+                               **paged_kw, **common)
+        eng = router.engines[0]          # telemetry shape reference
+        print(f"[launch.serve] router: {args.replicas} replica(s) x "
+              f"{args.shards} shard(s) over {len(jax.devices())} "
+              f"device(s), policy {args.route}")
+    elif args.engine == "dense":
         eng = DenseServingEngine(cfg, params, **common)
-    elif args.engine == "paged":
-        eng = PagedServingEngine(cfg, params, page_size=args.page_size,
-                                 num_pages=args.num_pages,
-                                 attn_impl=args.paged_attn,
-                                 prefix_cache=args.prefix_cache,
-                                 spec_k=args.spec_k, **common)
     else:
-        eng = ServingEngine(cfg, params, page_size=args.page_size,
-                            num_pages=args.num_pages,
-                            attn_impl=args.paged_attn,
-                            prefix_cache=args.prefix_cache,
-                            spec_k=args.spec_k, **common)
+        mesh = None
+        if args.shards > 1:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(model=args.shards,
+                                  devices=jax.devices()[:args.shards])
+        builder = PagedServingEngine if args.engine == "paged" \
+            else ServingEngine
+        eng = builder(cfg, params, mesh=mesh, **paged_kw, **common)
     print(f"[launch.serve] engine: {type(eng).__name__}")
     # production-shaped traffic: every request opens with the same system
     # prompt (what --prefix-cache shares), tails vary in length (what the
@@ -86,12 +114,30 @@ def main() -> None:
                     max_new=args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
-    done = eng.run_to_completion(reqs, max_steps=5000)
+    driver = router if router is not None else eng
+    done = driver.run_to_completion(reqs, max_steps=5000)
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in done)
+    traces = sum(e.prefill_traces for e in router.engines) \
+        if router is not None else eng.prefill_traces
     print(f"[launch.serve] {len(done)}/{len(reqs)} requests, {toks} tokens, "
-          f"{toks/dt:.1f} tok/s, {eng.prefill_traces} prefill traces")
+          f"{toks/dt:.1f} tok/s, {traces} prefill traces")
+    if router is not None:
+        rs = router.stats()
+        print(f"[launch.serve] routed per replica: {rs['routed']}, peak "
+              f"pages per replica: "
+              f"{[int(p) for p in rs['peak_pages_per_replica']]}, "
+              f"preemptions: {rs['preempted']}")
     if isinstance(eng, PagedServingEngine):
+        for e_i, e in enumerate(router.engines if router is not None
+                                else [eng]):
+            ss = e.shard_stats()
+            if ss["model_shards"] > 1:
+                print(f"[launch.serve] replica {e_i}: "
+                      f"{int(ss['model_shards'])} shards "
+                      f"({ss['sharded_axes']}), peak "
+                      f"{int(ss['peak_pages_per_shard'])} pages/shard, "
+                      f"{int(ss['pool_bytes_per_shard'])} pool bytes/shard")
         st = eng.pool_stats()
         print(f"[launch.serve] kv pages: peak {st.peak_pages}/{st.num_pages} "
               f"({st.peak_pages * st.page_size} tokens reserved at peak vs "

@@ -383,6 +383,33 @@ def paged_cache_init(cfg, batch: int, num_pages: int, page_size: int):
     return {"scan": scan, "tail": [entry(k) for k in tail]}
 
 
+def paged_cache_axes(cfg):
+    """Logical axes tree matching paged_cache_init structure — the paged
+    analogue of cache_axes, used by the tensor-parallel serving plan
+    (parallel/tp.py) to shard the page pools over KV heads.
+
+    Page-pool k/v leaves are (num_pages, page_size, KV, D): dim 2 is the
+    shard axis (",,kv_heads"); block tables and lengths never appear here
+    (they are engine-side and replicated). Recurrent state slots are
+    deliberately replicated ("" — NOT cache_axes' "batch,heads"): their
+    mixer params stay replicated under the TP plan, so the state must
+    match, and at O(slots) scalars per layer there is nothing worth
+    sharding."""
+    shapes = jax.eval_shape(
+        functools.partial(paged_cache_init, cfg, 1, 2, 2))
+
+    def ax(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", "")))
+                 for k in path]
+        leafname = names[-1] if names else ""
+        base = ",,kv_heads" if leafname in ("k", "v") else ""
+        if "scan" in names:
+            base = ("layers," + base) if base else "layers"
+        return base
+
+    return jax.tree_util.tree_map_with_path(ax, shapes)
+
+
 def cache_shapes(cfg, batch: int, seq_len: int):
     return jax.eval_shape(functools.partial(cache_init, cfg, batch, seq_len))
 

@@ -372,6 +372,10 @@ def attention_apply(cfg, p, x, *, rules: Rules = NO_RULES, positions=None,
                                   chunked=cfg.flash_chunking)
         kv = (k, v)
     out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    # contraction over heads: under manual TP (ManualRules inside a
+    # shard_map body) each shard holds H/M heads and this is the psum
+    # point; identity everywhere else
+    out = rules.contract(out, "heads")
     return rules.cons(out, "batch,seq,embed"), kv
 
 
@@ -477,6 +481,7 @@ def attention_decode(cfg, p, x, cache, pos, *, rules: Rules = NO_RULES,
                             kv_chunk=cfg.decode_kv_chunk)
         new_cache = {"k": ck, "v": cv}
     out = jnp.einsum("bshe,hed->bsd", out, p["wo"])
+    out = rules.contract(out, "heads")   # TP psum point (see attention_apply)
     return rules.cons(out, "batch,seq,embed"), new_cache
 
 
@@ -506,6 +511,10 @@ def mlp_apply(cfg, p, x, *, rules: Rules = NO_RULES):
         h = _act(cfg, h)
     h = rules.cons(h, "batch,seq,ffn")
     out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    # contraction over ffn: the TP psum point when wi/wg/wo are sharded
+    # over the model axis (identity otherwise — including MoE configs,
+    # whose plan never shards ffn so the shared expert stays correct)
+    out = rules.contract(out, "ffn")
     return rules.cons(out, "batch,seq,embed")
 
 

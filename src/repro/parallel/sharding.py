@@ -2,16 +2,25 @@
 
 Models annotate tensors with *logical* axis names (comma-separated strings,
 one name per dim, ``""``/missing = replicated). ``Rules`` maps them onto the
-physical mesh, silently falling back to replication when a dim is not
-divisible by the mapped mesh-axis size (e.g. llama4's 40 heads on a 16-way
-``model`` axis) — the standard production-framework behaviour.
+physical mesh, falling back to replication when a dim is not divisible by
+the mapped mesh-axis size (e.g. llama4's 40 heads on a 16-way ``model``
+axis) — the standard production-framework behaviour, but LOUD: the first
+fallback per (instance, logical axis) emits a ``warnings.warn`` naming the
+axis, so a config silently serving replicated where the operator asked for
+sharded is visible (ISSUE 6 satellite).
 
 Weight FSDP axes use the dedicated name ``wembed``/``wff`` so that weight
 sharding (over ``pod``+``data``) never collides with activation sharding.
+
+``ManualRules`` is the in-``shard_map`` variant: inside a manual-mode body
+arrays are per-device blocks, so ``cons`` (a GSPMD hint) is meaningless and
+becomes identity, while contractions over a sharded logical axis need an
+explicit ``psum`` — that is ``contract``, identity on the base class.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple, Union
+import warnings
+from typing import Dict, FrozenSet, Iterable, Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -53,6 +62,7 @@ class Rules:
         self.table = dict(DEFAULT_TABLE)
         if table:
             self.table.update(table)
+        self._warned_axes: set = set()   # one fallback warning per axis
 
     # -- helpers ----------------------------------------------------------
     def _axis_size(self, phys: Phys) -> int:
@@ -76,9 +86,22 @@ class Rules:
             pt = tuple(a for a in (phys if isinstance(phys, tuple)
                                    else (phys,))
                        if a in self.mesh.shape)    # drop absent axes (pod)
-            if (not pt or any(a in used for a in pt)
-                    or dim % self._axis_size(pt) != 0):
-                out.append(None)            # divisibility / conflict fallback
+            if not pt or any(a in used for a in pt):
+                out.append(None)            # absent-axis / conflict fallback
+                continue
+            if dim % self._axis_size(pt) != 0:
+                # divisibility fallback: replicate, but say so ONCE per
+                # (instance, logical axis) — a 16-way mesh quietly serving
+                # llama4's 40 heads replicated is exactly the surprise an
+                # operator wants named (ISSUE 6 satellite)
+                if name not in self._warned_axes:
+                    self._warned_axes.add(name)
+                    warnings.warn(
+                        f"logical axis {name!r} (dim {dim}) is not "
+                        f"divisible by mesh axis {'x'.join(pt)} (size "
+                        f"{self._axis_size(pt)}); replicating this dim "
+                        f"instead of sharding it", stacklevel=3)
+                out.append(None)
                 continue
             out.append(pt if len(pt) > 1 else pt[0])
             used.update(pt)
@@ -97,6 +120,14 @@ class Rules:
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(self.mesh, self.spec(x.shape, axes)))
 
+    def contract(self, x, axis: str):
+        """Hook at a contraction over logical ``axis`` (e.g. the attention
+        out-projection contracts "heads", the MLP down-projection "ffn").
+        Identity under GSPMD auto-partitioning — the partitioner inserts
+        the reduction itself; ``ManualRules`` overrides with an explicit
+        psum for shard_map bodies."""
+        return x
+
     def tree_specs(self, shapes_tree, axes_tree):
         """PartitionSpec pytree from a ShapeDtypeStruct tree + axes-str tree."""
         return jax.tree.map(lambda s, a: self.spec(s.shape, a),
@@ -107,6 +138,30 @@ class Rules:
         return jax.tree.map(
             lambda s, a: NamedSharding(self.mesh, self.spec(s.shape, a)),
             shapes_tree, axes_tree)
+
+
+class ManualRules(Rules):
+    """Rules for use INSIDE a ``shard_map`` body (manual mode).
+
+    Per-device blocks mean ``cons`` must be identity and ``spec`` sees no
+    mesh (both inherited by constructing the base with ``mesh=None``);
+    what manual mode DOES need is an explicit all-reduce wherever the
+    model contracts over a logical axis that is physically sharded —
+    ``contract`` psums over ``axis_name`` for exactly the axes in
+    ``contract_axes`` and is identity for the rest (an axis that fell
+    back to replication must NOT be reduced, or the output is multiplied
+    by the shard count)."""
+
+    def __init__(self, contract_axes: Iterable[str] = (),
+                 axis_name: str = "model"):
+        super().__init__(None)
+        self.contract_axes: FrozenSet[str] = frozenset(contract_axes)
+        self.axis_name = axis_name
+
+    def contract(self, x, axis: str):
+        if axis in self.contract_axes:
+            return jax.lax.psum(x, self.axis_name)
+        return x
 
 
 NO_RULES = Rules(None)

@@ -1,0 +1,152 @@
+"""Tensor-parallel plan for the paged serving engine.
+
+One ``TPPlan`` per (config, mesh) answers three questions the sharded
+engine needs settled BEFORE tracing anything:
+
+* **What shards.** KV heads are the shard axis (the paper's banked shared
+  memory mapped to devices: each bank/shard owns its GQA group's pages and
+  every page access stays shard-local). Attention weights shard over
+  heads/kv_heads — but only when BOTH divide the ``model`` axis size: head
+  j reads kv head ``j // G`` (kv-major), so sharding q-heads while
+  replicating kv-heads would break the grouping inside a shard. MLP
+  weights shard over ``ffn`` unless the config carries MoE (the MoE block
+  stays replicated, and its always-on shared expert runs through
+  ``mlp_apply`` whose unconditional ``contract("ffn")`` would then psum an
+  already-full output). Everything else — embeddings, norms, recurrent
+  mixers, MoE, block tables, positions, recurrent state slots — is
+  replicated; a non-divisible axis falls back to replication with a loud
+  warning (``parallel/sharding.py``) instead of crashing the engine.
+* **Which specs.** Param specs come from the same logical-axes tree the
+  models already emit (``api.param_axes``), restricted to the ``attn`` /
+  ``mlp`` param subtrees; cache specs from ``api.paged_cache_axes`` (page
+  pools shard dim 2 — KV heads — state slots replicate). Both are plain
+  ``PartitionSpec`` trees, usable as ``shard_map`` in/out specs and (via
+  ``NamedSharding``) as ``device_put`` targets.
+* **Where the psums go.** ``plan.rules`` is a ``ManualRules`` whose
+  ``contract`` psums over ``"model"`` for exactly the axes that actually
+  sharded — the attention out-projection ("heads") and the MLP
+  down-projection ("ffn") are the only two contraction points, and the
+  online-softmax state inside each shard's flash-decode never crosses
+  shards (GQA groups are self-contained).
+
+The engine then wraps each traced program's model call in ONE
+``compat.shard_map`` boundary (``plan.shard``), so the
+one-host-sync-per-step contract survives sharding unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, FrozenSet, Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map as _shard_map
+from repro.parallel.sharding import DEFAULT_TABLE, ManualRules, Rules
+
+# logical axes that may shard over "model" under the serving TP plan, and
+# the contraction axis each group funds (None = pure weight-dim sharding)
+_ATTN_AXES = ("heads", "kv_heads", "wheads", "wkv_heads")
+_FFN_AXES = ("ffn", "wff")
+# param subtrees whose weights participate in TP; everything outside
+# (embed/head/norms, "mixer", "moe", "cross") is replicated — mixers have
+# no contract() hook and MoE dispatch needs its full expert dim
+_SHARDED_SUBTREES = ("attn", "mlp")
+
+
+@dataclasses.dataclass(frozen=True)
+class TPPlan:
+    """Frozen answers: mesh + which logical axes actually sharded."""
+    mesh: jax.sharding.Mesh
+    model_shards: int
+    sharded_axes: FrozenSet[str]
+    rules: ManualRules                 # for INSIDE shard_map bodies
+
+    # -- spec construction -------------------------------------------------
+    def _spec_rules(self) -> Rules:
+        table = {name: ("model" if name in self.sharded_axes else None)
+                 for name in DEFAULT_TABLE}
+        return Rules(self.mesh, table)
+
+    def param_specs(self, cfg) -> Any:
+        """PartitionSpec tree matching ``api.init_params(cfg, ...)``: attn
+        and mlp weights shard per ``sharded_axes``, everything else P()."""
+        from repro.models import api
+        rules = self._spec_rules()
+        shapes = api.param_shapes(cfg)
+        axes = api.param_axes(cfg)
+
+        def spec(path, shape_leaf, axes_leaf):
+            keys = [str(getattr(k, "key", getattr(k, "name", "")))
+                    for k in path]
+            if not any(k in _SHARDED_SUBTREES for k in keys):
+                return P()
+            return rules.spec(shape_leaf.shape, axes_leaf)
+
+        return jax.tree_util.tree_map_with_path(spec, shapes, axes)
+
+    def cache_specs(self, cfg, cache) -> Any:
+        """PartitionSpec tree for a concrete paged cache tree: page pools
+        shard their KV-heads dim, recurrent state slots replicate."""
+        from repro.models import api
+        rules = self._spec_rules()
+        axes = api.paged_cache_axes(cfg)
+        return jax.tree.map(lambda leaf, a: rules.spec(leaf.shape, a),
+                            cache, axes)
+
+    # -- placement / mapping ----------------------------------------------
+    def shardings(self, specs) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def put(self, tree, specs) -> Any:
+        """device_put `tree` onto the mesh per `specs` (replicated where
+        P()) so the first traced program starts from resident shards
+        instead of paying a broadcast per call."""
+        return jax.device_put(tree, self.shardings(specs))
+
+    def shard(self, fn, in_specs, out_specs):
+        """The one manual boundary per traced program."""
+        return _shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+
+
+def tp_plan(cfg, mesh: Optional[jax.sharding.Mesh]) -> Optional[TPPlan]:
+    """Decide what shards for ``cfg`` on ``mesh`` (None mesh -> None plan).
+
+    The divisibility coupling lives here, not per-leaf: heads and kv_heads
+    shard together or not at all (GQA alignment), ffn sharding is disabled
+    outright for MoE-bearing configs. Either fallback warns once, naming
+    the axis — the engine keeps serving, replicated."""
+    if mesh is None:
+        return None
+    if "model" not in mesh.shape:
+        raise ValueError(
+            f"tp_plan needs a mesh with a 'model' axis; got axes "
+            f"{tuple(mesh.shape)}")
+    m = int(mesh.shape["model"])
+    sharded: set = set()
+    if m > 1:
+        if cfg.num_heads % m == 0 and cfg.kv_heads % m == 0:
+            sharded.update(_ATTN_AXES)
+        else:
+            warnings.warn(
+                f"{cfg.name}: heads={cfg.num_heads}/kv_heads="
+                f"{cfg.kv_heads} do not both divide model={m}; attention "
+                f"(weights AND kv page pools) replicates per shard",
+                stacklevel=2)
+        has_moe = cfg.moe is not None and cfg.moe.num_experts > 0
+        if has_moe:
+            pass                       # MoE block replicates; see module doc
+        elif cfg.d_ff % m == 0:
+            sharded.update(_FFN_AXES)
+        else:
+            warnings.warn(
+                f"{cfg.name}: d_ff={cfg.d_ff} does not divide model={m}; "
+                f"MLP weights replicate per shard", stacklevel=2)
+    contract = {a for a in ("heads", "ffn") if a in sharded}
+    return TPPlan(mesh=mesh, model_shards=m,
+                  sharded_axes=frozenset(sharded),
+                  rules=ManualRules(contract, axis_name="model"))

@@ -25,6 +25,17 @@ architecture (PAPER.md):
   mid-page divergence and LRU eviction of idle cached pages under pool
   pressure. Both decode attention impls work unchanged — block tables
   already indirect through physical pages.
+* **Tensor parallelism** (``mesh=``, ISSUE 6) — pass a ``("data",
+  "model")`` mesh (``launch/mesh.make_host_mesh``) and the engine shards
+  its KV pools and attn/mlp weights over KV heads on the ``model`` axis
+  (``parallel/tp.py``): each shard owns its GQA groups' slice of every
+  page, block tables / lengths / bookkeeping stay replicated, and each
+  traced program wraps exactly its model call + pool scatter in ONE
+  ``shard_map`` boundary — sampling and bookkeeping stay outside the
+  manual region, so the one-host-sync-per-step contract and every
+  feature above (prefix cache, speculative decode, hybrid stacks)
+  compose with sharding unchanged. Data parallelism layers on top as
+  whole-engine replicas (``runtime/router.py``).
 
 * **Hybrid / windowed / recurrent stacks** are first-class since ISSUE 5:
   sliding-window layers (``local_attn``) get *paged ring buffers with
@@ -57,10 +68,12 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.models import api
 from repro.models import transformer as tfm
 from repro.parallel.sharding import NO_RULES, Rules
+from repro.parallel.tp import tp_plan
 from repro.runtime.drafter import ngram_propose
 from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PoolStats
 from repro.runtime.prefix_cache import PrefixCache
@@ -106,6 +119,12 @@ def _win_rid(rid: int):
     return ("win", rid)
 
 
+def _spec_uses(spec: P, axis: str) -> bool:
+    """Whether a PartitionSpec shards any dim over mesh axis ``axis``."""
+    return any(e == axis or (isinstance(e, tuple) and axis in e)
+               for e in spec)
+
+
 def _run_to_completion(engine, requests: List[Request],
                        max_steps: int) -> List[Request]:
     """Shared drive loop for both engines, routed through the Scheduler so
@@ -138,7 +157,7 @@ def ServingEngine(cfg, params, **kwargs):
         return PagedServingEngine(cfg, params, **kwargs)
     paged_defaults = {"page_size": 16, "num_pages": None,
                       "attn_impl": "kernel", "prefix_cache": False,
-                      "spec_k": 0, "spec_ngram": 3}
+                      "spec_k": 0, "spec_ngram": 3, "mesh": None}
     dropped = []
     for k, default in paged_defaults.items():
         if k in kwargs:
@@ -174,7 +193,8 @@ class PagedServingEngine:
                  rules: Rules = NO_RULES, eos_id: int = -1,
                  temperature: float = 0.0, seed: int = 0,
                  attn_impl: str = "kernel", prefix_cache: bool = False,
-                 spec_k: int = 0, spec_ngram: int = 3):
+                 spec_k: int = 0, spec_ngram: int = 3,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         if not _pageable(cfg):
             raise ValueError(
                 f"paged serving cannot host pattern "
@@ -220,6 +240,19 @@ class PagedServingEngine:
         self.temperature = temperature
         self.key = jax.random.key(seed)
 
+        # tensor parallelism: one TPPlan per (config, mesh) decides what
+        # shards (parallel/tp.py) — KV-head pools and attn/mlp weights over
+        # the mesh's "model" axis, everything else replicated. mesh=None is
+        # the single-shard engine, byte-for-byte the pre-TP code paths.
+        # Inside shard_map bodies the model uses the plan's ManualRules
+        # (explicit psum at the two contraction points); the GSPMD `rules`
+        # kwarg keeps steering the non-TP path.
+        self.tp = tp_plan(cfg, mesh)
+        self._model_rules = self.tp.rules if self.tp is not None else rules
+        if self.tp is not None:
+            self._param_specs = self.tp.param_specs(cfg)
+            self.params = self.tp.put(self.params, self._param_specs)
+
         usable = num_pages if num_pages is not None \
             else slots * self.max_blocks
         self.alloc = PageAllocator(usable, page_size)
@@ -231,6 +264,12 @@ class PagedServingEngine:
             PrefixCache(self.alloc) if prefix_cache else None
         # pool row 0 is the scratch page -> usable + 1 physical rows
         self.cache = api.paged_cache_init(cfg, slots, usable + 1, page_size)
+        if self.tp is not None:
+            # shard the pools over KV heads at rest: block tables stay
+            # replicated (logical pages are a host-side fact), each shard
+            # owns its GQA groups' slice of EVERY page
+            self._cache_specs = self.tp.cache_specs(cfg, self.cache)
+            self.cache = self.tp.put(self.cache, self._cache_specs)
         self.block_table = jnp.zeros((slots, self.max_blocks), jnp.int32)
         # sliding-window block table: logical block j still means absolute
         # positions [j*page, (j+1)*page), but entries that slid below the
@@ -279,18 +318,54 @@ class PagedServingEngine:
         self._seen_buckets: set = set()
 
     # -- jitted device programs -------------------------------------------
+    #
+    # TP boundary discipline: each traced program keeps its single jax.jit
+    # wrapper, and INSIDE it exactly the model call + page-pool
+    # scatter/gather is shard_map'd (`_wrap_sharded`). Sampling, the PRNG
+    # key split and the slot-bookkeeping updates stay outside the manual
+    # region but inside the jit — typed PRNG keys never cross the manual
+    # boundary, replicated bookkeeping compiles as trivially-partitioned
+    # ops, and the one-dispatch / one-host-sync-per-step contract is
+    # untouched by sharding.
+
+    def _wrap_sharded(self, fn, n_rep: int):
+        """Wrap a ``(params, cache, *replicated) -> (out, new_cache)``
+        model call in the plan's ONE manual boundary; identity when
+        single-shard. ``n_rep`` counts the replicated operands after
+        (params, cache)."""
+        if self.tp is None:
+            return fn
+        rep = (P(),) * n_rep
+        return self.tp.shard(
+            fn,
+            in_specs=(self._param_specs, self._cache_specs) + rep,
+            out_specs=(P(), self._cache_specs))
+
+    def _decode_call(self):
+        """The model call both decode-side programs share — the exact
+        extent of the TP manual region for a decode step. Works for T=1
+        rows (plain step) and T=spec_k+1 blocks (speculative verify): the
+        per-shard flash-decode sweep sees its local KV-head slice of the
+        pool and the GQA fold is untouched (kernels/paged_attention.py)."""
+        cfg, rules, has_win = self.cfg, self._model_rules, self.has_win
+
+        def call(params, cache, block_table, win_table, tok, pos):
+            return api.decode_step(
+                cfg, params, cache, tok, pos, rules=rules,
+                block_table=block_table,
+                win_block_table=win_table if has_win else None)
+
+        return call
 
     def _make_step(self):
-        cfg, rules = self.cfg, self.rules
+        cfg = self.cfg
         eos, max_len, temp = self.eos_id, self.max_len, self.temperature
-        has_win = self.has_win
+        decode = self._wrap_sharded(self._decode_call(), 4)
 
         def step(params, cache, block_table, win_table, cur_tok, pos, live,
                  gen, max_new, key):
-            logits, cache = api.decode_step(
-                cfg, params, cache, cur_tok, pos, rules=rules,
-                block_table=block_table,
-                win_block_table=win_table if has_win else None)
+            logits, cache = decode(params, cache, block_table, win_table,
+                                   cur_tok, pos)
             key, sub = jax.random.split(key)
             toks = _sample_logits(cfg, logits, temp, sub)
             livei = live.astype(jnp.int32)
@@ -314,15 +389,15 @@ class PagedServingEngine:
         fixed-shape jitted program can't express without padding every
         outcome. On stacks with recurrent layers the returned cache
         carries CHECKPOINTED states — a T axis of per-row states — which
-        ``_select_fn`` collapses to each slot's accepted row."""
-        cfg, rules = self.cfg, self.rules
-        has_win = self.has_win
+        ``_select_fn`` collapses to each slot's accepted row. (The
+        checkpointed leaves still match ``_cache_specs``: specs constrain
+        only the dims they name, state slots are P() at any rank.)"""
+        cfg = self.cfg
+        decode = self._wrap_sharded(self._decode_call(), 4)
 
         def spec(params, cache, block_table, win_table, tok_block, pos):
-            logits, cache = api.decode_step(
-                cfg, params, cache, tok_block, pos, rules=rules,
-                block_table=block_table,
-                win_block_table=win_table if has_win else None)
+            logits, cache = decode(params, cache, block_table, win_table,
+                                   tok_block, pos)
             toks = jnp.argmax(logits[..., : cfg.vocab], -1).astype(jnp.int32)
             return cache, toks
 
@@ -363,14 +438,13 @@ class PagedServingEngine:
         return sel
 
     def _make_prefill(self):
-        cfg, rules, temp = self.cfg, self.rules, self.temperature
+        cfg, temp = self.cfg, self.temperature
+        rules = self._model_rules
         page = self.page_size
         kinds, tail = self._kinds, self._tail
         hybrid = self.has_win or self.has_state
 
-        def pf(params, cache, block_table, win_table, pos, cur_tok, live,
-               gen, max_new_arr, tokens, length, pages, pages_win, row,
-               row_win, slot, req_max_new, key):
+        def model(params, cache, tokens, length, pages, pages_win, slot):
             # hybrid stacks prefill with paged_kv: recurrent state updates
             # are masked past `length` (bucket padding never leaks into
             # the state slot) and local_attn yields full-sequence kv for
@@ -378,8 +452,6 @@ class PagedServingEngine:
             logits, cache1, _ = api.prefill(cfg, params, {"tokens": tokens},
                                             rules=rules, length=length,
                                             paged_kv=hybrid)
-            key, sub = jax.random.split(key)
-            tok = _sample_logits(cfg, logits, temp, sub)[0]
 
             # scatter the prompt's kv blocks into the page pools: full-
             # attention layers through `pages`, sliding-window layers
@@ -421,6 +493,17 @@ class PagedServingEngine:
                          for kd, e, e1 in zip(tail, cache["tail"],
                                               cache1["tail"])],
             }
+            return logits, new_cache
+
+        model = self._wrap_sharded(model, 5)
+
+        def pf(params, cache, block_table, win_table, pos, cur_tok, live,
+               gen, max_new_arr, tokens, length, pages, pages_win, row,
+               row_win, slot, req_max_new, key):
+            logits, new_cache = model(params, cache, tokens, length, pages,
+                                      pages_win, slot)
+            key, sub = jax.random.split(key)
+            tok = _sample_logits(cfg, logits, temp, sub)[0]
             block_table = block_table.at[slot].set(row)
             win_table = win_table.at[slot].set(row_win)
             pos = pos.at[slot].set(length)
@@ -442,12 +525,12 @@ class PagedServingEngine:
         (``phys_tok``/``row_tok``: physical page + row per suffix token,
         SCRATCH for bucket padding — token-granular because a CoW'd
         divergence can start mid-page)."""
-        cfg, rules, temp = self.cfg, self.rules, self.temperature
+        cfg, temp = self.cfg, self.temperature
+        rules = self._model_rules
         page = self.page_size
 
-        def pf(params, cache, block_table, pos, cur_tok, live, gen,
-               max_new_arr, tokens, length, prefix_pages, prefix_len,
-               phys_tok, row_tok, row, slot, req_max_new, key):
+        def model(params, cache, tokens, length, prefix_pages, prefix_len,
+                  phys_tok, row_tok):
             npb = prefix_pages.shape[0]
 
             def gather_scan(pool):          # (L,P,pg,..) -> (L,1,npb*pg,..)
@@ -468,8 +551,6 @@ class PagedServingEngine:
                                             rules=rules, length=length,
                                             prefix_kv=prefix_kv,
                                             prefix_len=prefix_len)
-            key, sub = jax.random.split(key)
-            tok = _sample_logits(cfg, logits, temp, sub)[0]
 
             def merge_scan(pool, one):      # (L,P,pg,..) <- (L,1,Sb,..)
                 return pool.at[:, phys_tok, row_tok].set(
@@ -485,6 +566,18 @@ class PagedServingEngine:
                 "tail": [jax.tree.map(merge_tail, cp, c1)
                          for cp, c1 in zip(cache["tail"], cache1["tail"])],
             }
+            return logits, new_cache
+
+        model = self._wrap_sharded(model, 6)
+
+        def pf(params, cache, block_table, pos, cur_tok, live, gen,
+               max_new_arr, tokens, length, prefix_pages, prefix_len,
+               phys_tok, row_tok, row, slot, req_max_new, key):
+            logits, new_cache = model(params, cache, tokens, length,
+                                      prefix_pages, prefix_len, phys_tok,
+                                      row_tok)
+            key, sub = jax.random.split(key)
+            tok = _sample_logits(cfg, logits, temp, sub)[0]
             block_table = block_table.at[slot].set(row)
             pos = pos.at[slot].set(prefix_len + length)
             cur_tok = cur_tok.at[slot, 0].set(tok)
@@ -1036,6 +1129,35 @@ class PagedServingEngine:
 
     def pool_stats(self) -> PoolStats:
         return PoolStats.of(self.alloc, self.slots, self.max_len)
+
+    def shard_stats(self) -> Dict[str, float]:
+        """Per-shard telemetry for the TP engine (meaningful, if boring,
+        on the single-shard engine too). Pages are allocated logically —
+        host-side, shard-agnostic — and the block table is replicated, so
+        every shard holds the SAME page set; what tensor parallelism
+        divides is each page's bytes (a shard owns its KV-head slice of
+        every page). ``peak_pages_per_shard`` is therefore the allocator's
+        peak, and the per-shard byte number is what shrinks with M."""
+        m = self.tp.model_shards if self.tp is not None else 1
+        sharded_axes = sorted(self.tp.sharded_axes) if self.tp else []
+        spec_leaves = None
+        if self.tp is not None:
+            spec_leaves = jax.tree.leaves(
+                self._cache_specs, is_leaf=lambda x: isinstance(x, P))
+        per_shard = 0
+        for i, leaf in enumerate(jax.tree.leaves(self.cache)):
+            nbytes = leaf.size * leaf.dtype.itemsize
+            if spec_leaves is not None and _spec_uses(spec_leaves[i],
+                                                      "model"):
+                nbytes //= m
+            per_shard += nbytes
+        return {
+            "model_shards": float(m),
+            # "+"-joined, not ","-joined: this string lands in CSV cells
+            "sharded_axes": "+".join(sharded_axes),
+            "peak_pages_per_shard": float(self.alloc.peak_pages),
+            "pool_bytes_per_shard": float(per_shard),
+        }
 
     def prefix_stats(self) -> Dict[str, float]:
         """Prefix-sharing telemetry: token-level hit rate, prefill compute
