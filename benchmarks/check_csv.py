@@ -1,0 +1,120 @@
+"""CI gate over the bench-smoke CSV: equivalence columns must hold.
+
+The serving benchmarks carry correctness contracts inside the perf CSV —
+``tokens_match_tp1`` (every tensor-parallel shard count emits the
+single-shard engine's exact greedy tokens) and
+``tokens_match_unconstrained`` (a pool capped far below the working set,
+evict-only or host-tiered, emits the unconstrained engine's exact greedy
+tokens). A perf artifact whose equivalence column is 0 is not a slow data
+point, it's a wrong one — so CI fails the build instead of uploading it.
+
+Rules, applied to every ``tokens_match_*`` column in every section:
+
+* every non-empty cell must be exactly ``1`` (``0`` = mismatch = FAIL;
+  empty = the row predates the column / is a ratio row, allowed);
+* each REQUIRED column (``tokens_match_tp1``,
+  ``tokens_match_unconstrained``) must appear with at least one ``1``
+  somewhere in the file — a silently-dropped scenario must not pass the
+  gate by absence (skip-note rows don't count: a run where every sharded
+  leg was skipped still fails, loudly, so the CI leg without forced host
+  devices is visibly not covering the contract).
+
+Input format: ``benchmarks/run.py --out`` artifacts — one CSV block per
+suite behind a ``# === name ===`` header — or a bare single-suite CSV
+from ``python -m benchmarks.serve_bench``.
+
+  python -m benchmarks.check_csv bench-smoke.csv
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+from typing import Dict, List, Tuple
+
+REQUIRED = ("tokens_match_tp1", "tokens_match_unconstrained")
+
+
+def parse_sections(text: str) -> List[Tuple[str, List[Dict[str, str]]]]:
+    """Split a run.py artifact into (section_name, rows) pairs. Lines
+    starting with ``#`` delimit sections; the first non-comment line of
+    each section is its header. Cells are RFC-4180 CSV (``emit()`` quotes
+    fields with embedded commas — engine names like ``paged[kernel,tp2]``,
+    skip notes)."""
+    sections: List[Tuple[str, List[Dict[str, str]]]] = []
+    name, header, rows = "", None, []
+
+    def flush():
+        if header is not None:
+            sections.append((name, rows))
+
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.lstrip().startswith("#"):
+            flush()
+            name = line.strip().strip("#= ").strip() or name
+            header, rows = None, []
+            continue
+        cells = next(csv.reader(io.StringIO(line)))
+        if header is None:
+            header = cells
+        else:
+            # short rows pad with "" (emit() never writes them, but be
+            # liberal in what we accept from hand-concatenated artifacts)
+            cells += [""] * (len(header) - len(cells))
+            rows.append(dict(zip(header, cells)))
+    flush()
+    return sections
+
+
+def check(text: str) -> List[str]:
+    """Return the list of violations (empty = gate passes)."""
+    errors: List[str] = []
+    seen_ok: Dict[str, int] = {k: 0 for k in REQUIRED}
+    sections = parse_sections(text)
+    if not any(rows for _, rows in sections):
+        return ["no CSV rows found — empty or truncated artifact"]
+    for name, rows in sections:
+        for i, row in enumerate(rows):
+            for col, val in row.items():
+                if not col.startswith("tokens_match_"):
+                    continue
+                if val == "":
+                    continue
+                if val == "1":
+                    if col in seen_ok:
+                        seen_ok[col] += 1
+                    continue
+                eng = row.get("engine", f"row {i}")
+                errors.append(
+                    f"[{name or 'csv'}] {eng}: {col}={val!r} — capped/"
+                    f"sharded replay diverged from its baseline tokens")
+    for col, n in seen_ok.items():
+        if n == 0:
+            errors.append(
+                f"required equivalence column {col!r} never passed "
+                f"(missing column or every leg skipped) — the scenario "
+                f"that enforces it did not run")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("csv", help="bench CSV artifact (run.py --out format)")
+    args = ap.parse_args()
+    with open(args.csv) as f:
+        text = f.read()
+    errors = check(text)
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    n = sum(len(rows) for _, rows in parse_sections(text))
+    print(f"check_csv: OK — {n} rows, equivalence columns "
+          f"{', '.join(REQUIRED)} all green")
+
+
+if __name__ == "__main__":
+    main()

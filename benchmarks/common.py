@@ -23,7 +23,13 @@ def emit(rows: Iterable[Dict], header: bool = True) -> str:
 def _fmt(v) -> str:
     if isinstance(v, float):
         return f"{v:.6g}"
-    return str(v)
+    s = str(v)
+    if "," in s or '"' in s or "\n" in s:
+        # RFC-4180 quoting: engine names like paged[kernel,tp2] and
+        # skip-note cells embed commas; unquoted they shift every later
+        # column, which broke machine consumers (benchmarks/check_csv.py)
+        s = '"' + s.replace('"', '""') + '"'
+    return s
 
 
 def time_call(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:

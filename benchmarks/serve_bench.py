@@ -2,7 +2,7 @@
 attention) vs the seed dense-slot engine, plus the prefix-sharing,
 speculative-decode and hybrid-stack scenarios.
 
-Five scenarios, all generated deterministically from ``--seed`` so the CI
+Six scenarios, all generated deterministically from ``--seed`` so the CI
 bench-smoke CSV artifacts are comparable run-to-run:
 
 **mixed** — a mixed-length request trace (every prompt a different length —
@@ -82,9 +82,24 @@ actually divides) and ``tokens_match_tp1`` (every shard count must emit
 the single-shard engine's exact greedy tokens). Shard counts the backend
 cannot fold are emitted as skip-note rows, not dropped.
 
+**oversubscribe** — working set >> device pool (ISSUE 7): the mixed trace
+through an unconstrained paged engine, then through pools capped at ~40%
+of the trace's KV footprint, evict-only vs host-tiered
+(``runtime/host_tier.py``). Every capped row must report
+``tokens_match_unconstrained=1`` — a capped pool may change WHEN tokens
+are computed, never WHICH — and CI's ``benchmarks/check_csv.py`` gate
+fails the build on any other value. The tiered rows' headline is
+``reprefill_tokens_saved`` (prefill compute the evict-only engine
+re-spent on preemption-resume that swap-in did not) plus the streamer
+telemetry: ``prefetch_hit_rate`` / ``copy_stall_ticks`` /
+``host_bytes_peak``. Prefix-cache and hybrid pairs ride along so all
+three demotion sources (idle radix nodes, preempted requests incl.
+recurrent state, slid-out window pages) run inside the timed replay.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen2.5-3b]
       [--seed 0]
-      [--scenario mixed|shared-prefix|speculative|hybrid|sharded|all]
+      [--scenario mixed|shared-prefix|speculative|hybrid|sharded|
+       oversubscribe|all]
 
 (the hybrid scenario pins its own arch — recurrentgemma-9b smoke — since
 it exists to exercise the windowed/recurrent block kinds.)
@@ -180,6 +195,11 @@ def _warm(engine, mk_trace) -> None:
             # keep the warmed radix tree (steady-state cache) but zero the
             # hit counters so the timed replay's telemetry is its own
             engine.prefix.reset_hit_counters()
+        if engine.tier is not None:
+            # same deal for the host tier: keep its contents (demoted
+            # radix nodes ARE the steady state) but report the replay's
+            # own demotion/prefetch rates
+            engine.tier.reset_counters()
 
 
 def _attn_peak_live_bytes(cfg, engine) -> int:
@@ -477,6 +497,146 @@ def _run_sharded(cfg, params, slots, max_len, n_requests, max_new,
     return rows
 
 
+def _pool_cap(reqs: List[Request], max_len: int, page_size: int,
+              frac: float = 0.4) -> int:
+    """Device-pool cap (in pages) for the oversubscribe scenario: ``frac``
+    of the trace's total worst-case KV footprint, floored at one page above
+    the largest single request (below that the engine rightly rejects the
+    request as infeasible rather than thrashing)."""
+    need = [-(-min(len(r.prompt) + r.max_new, max_len) // page_size)
+            for r in reqs]
+    return max(int(sum(need) * frac), max(need) + 1)
+
+
+def _run_oversubscribe(cfg, params, slots, max_len, n_requests, max_new,
+                       seed, sys_len) -> List[Dict]:
+    """Working set >> device pool (ISSUE 7): the mixed trace replayed
+    through an unconstrained paged engine, then through engines whose pool
+    is capped at ~40% of the trace's KV footprint — once with eviction-only
+    preemption (resume = destructive re-prefill) and once with the host
+    tier on (resume = swap-in from host RAM). Every capped row must emit
+    the unconstrained engine's exact greedy tokens
+    (``tokens_match_unconstrained`` — CI's check_csv gate fails the build
+    otherwise); the tiered row's claim is ``reprefill_tokens_saved``:
+    prefill compute the evict-only engine re-spent that the tier's
+    promote path did not. A prefix-cache pair (shared-prefix trace, radix
+    nodes demote to host instead of LRU-evicting and promote on hit) and a
+    hybrid pair (recurrentgemma: recurrent STATE swaps with the pages)
+    ride along so every demotion source is exercised."""
+    rows: List[Dict] = []
+
+    def mk(new):
+        return _trace(cfg, n_requests, new, seed)
+
+    for impl in ("gather", "kernel"):
+        base = PagedServingEngine(cfg, params, slots=slots, max_len=max_len,
+                                  attn_impl=impl)
+        cap = _pool_cap(mk(max_new), max_len, base.page_size)
+        _warm(base, mk)
+        reqs = mk(max_new)
+        row = _drive(base, reqs, 8000, cfg, name=f"paged[{impl},uncapped]")
+        row["pool_pages"] = base.alloc.num_pages
+        base_toks = [list(r.generated) for r in reqs]
+        base_prefilled = base.prefilled_tokens
+        rows.append(row)
+        evict_reprefill = 0
+        for tier, name in ((False, f"paged[{impl},evict@cap]"),
+                           (True, f"paged[{impl},tiered@cap]")):
+            eng = PagedServingEngine(cfg, params, slots=slots,
+                                     max_len=max_len, attn_impl=impl,
+                                     num_pages=cap, host_tier=tier)
+            _warm(eng, mk)
+            reqs = mk(max_new)
+            row = _drive(eng, reqs, 8000, cfg, name=name)
+            row["pool_pages"] = cap
+            row["preemptions"] = sum(r.preemptions for r in reqs)
+            # the contract the whole scenario rides on: a capped pool may
+            # change WHEN tokens are computed, never WHICH tokens
+            row["tokens_match_unconstrained"] = \
+                int([list(r.generated) for r in reqs] == base_toks)
+            # prefill compute re-spent on preemption-resume (0 for the
+            # unconstrained engine by construction)
+            row["reprefill_tokens"] = eng.prefilled_tokens - base_prefilled
+            if not tier:
+                evict_reprefill = row["reprefill_tokens"]
+            else:
+                ts = eng.tier_stats()
+                row["reprefill_tokens_saved"] = \
+                    evict_reprefill - row["reprefill_tokens"]
+                for k in ("swap_outs", "swap_ins", "demoted_pages",
+                          "promoted_pages", "prefetch_hit_rate",
+                          "copy_stall_ticks", "host_bytes_peak"):
+                    row[k] = ts[k]
+            rows.append(row)
+
+    # prefix-cache pair: idle radix nodes demote to host before LRU
+    # eviction; radix hits on host-resident nodes promote (prefetched a
+    # tick early) instead of re-prefilling the shared system prompt
+    def mk_shared(new):
+        return _shared_trace(cfg, n_requests, new, seed, sys_len)
+
+    base = PagedServingEngine(cfg, params, slots=slots, max_len=max_len,
+                              attn_impl="kernel", prefix_cache=True)
+    cap = _pool_cap(mk_shared(max_new), max_len, base.page_size)
+    _warm(base, mk_shared)
+    reqs = mk_shared(max_new)
+    row = _drive(base, reqs, 8000, cfg, name="paged[kernel,prefix,uncapped]")
+    row["pool_pages"] = base.alloc.num_pages
+    base_toks = [list(r.generated) for r in reqs]
+    rows.append(row)
+    eng = PagedServingEngine(cfg, params, slots=slots, max_len=max_len,
+                             attn_impl="kernel", prefix_cache=True,
+                             num_pages=cap, host_tier=True)
+    _warm(eng, mk_shared)
+    reqs = mk_shared(max_new)
+    row = _drive(eng, reqs, 8000, cfg, name="paged[kernel,prefix,tiered@cap]")
+    row["pool_pages"] = cap
+    row["preemptions"] = sum(r.preemptions for r in reqs)
+    row["tokens_match_unconstrained"] = \
+        int([list(r.generated) for r in reqs] == base_toks)
+    ts = eng.tier_stats()
+    for k in ("cache_demotions", "cache_promotions", "prefetch_hit_rate",
+              "copy_stall_ticks", "host_bytes_peak"):
+        row[k] = ts[k]
+    rows.append(row)
+
+    # hybrid pair: a preempted recurrentgemma request swaps its recurrent
+    # state slots AND its window pages to host — resume restores both
+    # (no re-prefill; PR 5 resumed these by re-prefilling)
+    hcfg = get_smoke_config("recurrentgemma-9b")
+    hparams = api.init_params(hcfg, jax.random.key(0))
+    hn, hnew = max(4, n_requests // 2), max(max_new, 24)
+
+    def mk_hybrid(new):
+        return _hybrid_trace(hcfg, hn, new, seed, hcfg.hybrid.window)
+
+    base = PagedServingEngine(hcfg, hparams, slots=slots, max_len=max_len,
+                              attn_impl="gather")
+    cap = _pool_cap(mk_hybrid(hnew), max_len, base.page_size)
+    _warm(base, mk_hybrid)
+    reqs = mk_hybrid(hnew)
+    row = _drive(base, reqs, 8000, hcfg, name="paged[hybrid,uncapped]")
+    row["pool_pages"] = base.alloc.num_pages
+    base_toks = [list(r.generated) for r in reqs]
+    rows.append(row)
+    eng = PagedServingEngine(hcfg, hparams, slots=slots, max_len=max_len,
+                             attn_impl="gather", num_pages=cap,
+                             host_tier=True)
+    _warm(eng, mk_hybrid)
+    reqs = mk_hybrid(hnew)
+    row = _drive(eng, reqs, 8000, hcfg, name="paged[hybrid,tiered@cap]")
+    row["pool_pages"] = cap
+    row["preemptions"] = sum(r.preemptions for r in reqs)
+    row["tokens_match_unconstrained"] = \
+        int([list(r.generated) for r in reqs] == base_toks)
+    ts = eng.tier_stats()
+    for k in ("swap_outs", "swap_ins", "win_archived_pages",
+              "prefetch_hit_rate", "copy_stall_ticks", "host_bytes_peak"):
+        row[k] = ts[k]
+    rows.append(row)
+    return rows
+
+
 def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
         n_requests: int = 12, max_new: int = 8, smoke: bool = False,
         seed: int = 0, scenario: str = "all",
@@ -508,6 +668,11 @@ def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
     if scenario in ("sharded", "all"):
         rows += _run_sharded(cfg, params, slots, max_len, n_requests,
                              max_new, seed)
+    if scenario in ("oversubscribe", "all"):
+        # host-tier oversubscription is a preemption story: decode tails
+        # long enough that capped pools MUST preempt mid-generation
+        rows += _run_oversubscribe(cfg, params, slots, max_len, n_requests,
+                                   max(max_new, 24), seed, sys_len)
     return rows
 
 
@@ -523,7 +688,7 @@ def main() -> None:
                          "so CI CSV artifacts are comparable run-to-run)")
     ap.add_argument("--scenario",
                     choices=["mixed", "shared-prefix", "speculative",
-                             "hybrid", "sharded", "all"],
+                             "hybrid", "sharded", "oversubscribe", "all"],
                     default="all")
     ap.add_argument("--sys-len", type=int, default=48,
                     help="shared system-prompt length for shared-prefix")

@@ -18,9 +18,15 @@ weights, identical greedy tokens), --replicas R adds data-parallel
 whole-engine replicas behind a router; on CPU force the devices with
 XLA_FLAGS=--xla_force_host_platform_device_count=N.
 
+--host-tier (with --num-pages small enough to oversubscribe) turns on the
+two-tier KV hierarchy: preempted requests swap pages + recurrent state to
+host RAM and resume by promotion (prefetched a tick early) instead of
+re-prefilling.
+
   PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
            [--slots 4] [--requests 8] [--max-new 16] [--prefix-cache]
            [--spec-k 4] [--shards 2] [--replicas 2]
+           [--host-tier --num-pages 12]
 """
 import argparse
 import time
@@ -51,6 +57,13 @@ def main() -> None:
     ap.add_argument("--spec-k", type=int, default=0,
                     help="verify up to K prompt-lookup drafted tokens per "
                          "decode step (exact greedy; temperature 0 only)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="usable KV pages (default covers slots*max_len; "
+                         "set it low with --host-tier to see swapping)")
+    ap.add_argument("--host-tier", action="store_true",
+                    help="two-tier KV: swap preempted pages + recurrent "
+                         "state to host RAM, resume by prefetched "
+                         "promotion instead of re-prefill (single shard)")
     ap.add_argument("--shards", type=int, default=1,
                     help="tensor-parallel shards: KV pools + attn/mlp "
                          "weights shard over this many devices")
@@ -64,8 +77,9 @@ def main() -> None:
           f"{args.slots} slots, {args.requests} requests")
     params = api.init_params(cfg, jax.random.key(0))
     kw = dict(slots=args.slots, max_len=128, page_size=args.page_size,
-              temperature=args.temperature, attn_impl=args.paged_attn,
-              prefix_cache=args.prefix_cache, spec_k=args.spec_k)
+              num_pages=args.num_pages, temperature=args.temperature,
+              attn_impl=args.paged_attn, prefix_cache=args.prefix_cache,
+              spec_k=args.spec_k, host_tier=args.host_tier)
     router = None
     if args.replicas > 1:
         router = make_replicas(cfg, params, replicas=args.replicas,
@@ -123,6 +137,13 @@ def main() -> None:
         if eng.has_win:
             print(f"[serve] sliding window ({eng.window} tokens): "
                   f"{eng.win_recycled_pages} pages recycled in-flight")
+        if eng.tier is not None:
+            ts = eng.tier_stats()
+            print(f"[serve] host tier: {ts['swap_outs']:.0f} swap-outs / "
+                  f"{ts['swap_ins']:.0f} swap-ins, "
+                  f"{ts['reprefill_tokens_saved']:.0f} re-prefill tokens "
+                  f"saved, prefetch hit rate "
+                  f"{ts['prefetch_hit_rate']:.2f}")
         if eng.spec_k:
             ss = eng.spec_stats()
             print(f"[serve] speculative (K={eng.spec_k}): "

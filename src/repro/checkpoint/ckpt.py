@@ -61,13 +61,27 @@ def save(path: str, state, *, extra: Optional[Dict[str, Any]] = None) -> None:
 
 
 class AsyncCheckpointer:
-    """Fire-and-forget saves on a background thread (one in flight)."""
+    """Fire-and-forget saves on a background thread (one in flight).
+
+    A failed background save is NEVER silent: the exception is re-raised
+    on the next ``save()`` or ``wait()`` — whichever comes first — and
+    counted in ``failed_saves`` so telemetry consumers (the trainer, the
+    host-tier swap-out path in ``runtime/host_tier.py``, which persists
+    swap records through this class) see the failure even if they poll
+    instead of joining. ``last_error`` is readable without consuming it;
+    raising clears it so one failure surfaces exactly once."""
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
         self.last_error: Optional[BaseException] = None
+        self.completed_saves = 0
+        self.failed_saves = 0
 
     def save(self, path: str, state, *, extra=None) -> None:
+        # join + re-raise FIRST: a caller that only ever calls save() in a
+        # loop still sees the previous save's failure before work based on
+        # the assumption it succeeded is queued
         self.wait()
         # device_get on the caller thread (cheap on CPU; on TPU this is the
         # D2H copy we deliberately take before releasing the step).
@@ -77,8 +91,12 @@ class AsyncCheckpointer:
         def work():
             try:
                 save(path, host_state, extra=extra)
-            except BaseException as e:  # surfaced on next wait()
-                self.last_error = e
+                with self._lock:
+                    self.completed_saves += 1
+            except BaseException as e:  # surfaced on next save()/wait()
+                with self._lock:
+                    self.last_error = e
+                    self.failed_saves += 1
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -87,8 +105,9 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self.last_error is not None:
+        with self._lock:
             err, self.last_error = self.last_error, None
+        if err is not None:
             raise err
 
 

@@ -114,3 +114,44 @@ def shard_map(fn, mesh: jax.sharding.Mesh, in_specs, out_specs):
         else {}
     return _SHARD_MAP(fn, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# Canary self-test: re-run every shim's feature detection, report per shim
+# --------------------------------------------------------------------------
+
+def selftest() -> dict:
+    """Re-resolve every shim and report how each one landed.
+
+    The weekly ``compat-canary`` CI job runs this against JAX prereleases
+    (``jax>=0.7.0.dev0 --pre``) and posts the output in its step summary:
+    when upstream renames an API again, the summary names the SHIM that
+    needs a new branch, instead of leaving a mid-suite AttributeError to
+    bisect. Every value is ``"OK: <how it resolved>"`` or
+    ``"FAIL: <exception>"``; a FAIL here is always a missing detection
+    branch in this module, never a caller bug."""
+    checks = {
+        # construct the params object for real — the rename history is
+        # TPUCompilerParams -> CompilerParams, and a third name would
+        # resolve neither branch
+        "tpu_compiler_params": lambda: type(
+            tpu_compiler_params(dimension_semantics=("arbitrary",))
+        ).__name__,
+        "set_mesh": lambda: "jax.set_mesh" if hasattr(jax, "set_mesh")
+        else "Mesh-as-context-manager (0.4.x)",
+        "make_mesh.devices": lambda: "devices= kwarg"
+        if _MAKE_MESH_HAS_DEVICES else "Mesh(np.reshape) fallback",
+        "make_mesh.axis_types": lambda: "axis_types=Auto"
+        if HAS_AXIS_TYPE else "implicit Auto (0.4.x)",
+        "shard_map": lambda:
+            f"{_SHARD_MAP.__module__}.{_SHARD_MAP.__name__}",
+        "shard_map.check_kwarg": lambda:
+            _SHARD_MAP_CHECK_KWARG or "no replication-check kwarg",
+    }
+    report = {}
+    for name, probe in checks.items():
+        try:
+            report[name] = f"OK: {probe()}"
+        except Exception as e:                      # pragma: no cover
+            report[name] = f"FAIL: {type(e).__name__}: {e}"
+    return report

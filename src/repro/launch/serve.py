@@ -4,6 +4,7 @@
       [--slots 4] [--requests 8] [--max-new 12] [--engine paged|dense] \
       [--page-size 16] [--num-pages N] [--paged-attn kernel|gather] \
       [--prefix-cache] [--spec-k K] [--shards M] [--replicas R]
+      [--host-tier]
 
 Every decoder-only stack defaults to the paged KV-cache engine (continuous
 batching over a shared page pool, bucketed prefill) — hybrid stacks
@@ -60,6 +61,11 @@ def main() -> None:
                     help="speculative decode: verify up to K prompt-lookup "
                          "drafted tokens per multi-token step (exact "
                          "greedy; paged engine only, temperature 0)")
+    ap.add_argument("--host-tier", action="store_true",
+                    help="two-tier KV: demote idle/preempted pages (and "
+                         "recurrent state) to host RAM and promote them "
+                         "back through a prefetch stream instead of "
+                         "evict + re-prefill (paged engine, single shard)")
     ap.add_argument("--shards", type=int, default=1,
                     help="tensor-parallel shards per engine: KV pools and "
                          "attn/mlp weights shard over a ('data','model') "
@@ -80,7 +86,8 @@ def main() -> None:
                   temperature=args.temperature)
     paged_kw = dict(page_size=args.page_size, num_pages=args.num_pages,
                     attn_impl=args.paged_attn,
-                    prefix_cache=args.prefix_cache, spec_k=args.spec_k)
+                    prefix_cache=args.prefix_cache, spec_k=args.spec_k,
+                    host_tier=args.host_tier)
     router = None
     if args.replicas > 1:
         if args.engine == "dense":
@@ -154,6 +161,15 @@ def main() -> None:
                   f"prompt tokens served from cache, "
                   f"{ps['prefill_tokens_saved']:.0f} prefill tokens saved, "
                   f"{ps['cow_copies']:.0f} CoW copies")
+        if eng.tier is not None:
+            ts = eng.tier_stats()
+            print(f"[launch.serve] host tier: {ts['swap_outs']:.0f} swap-"
+                  f"outs / {ts['swap_ins']:.0f} swap-ins, "
+                  f"{ts['demoted_pages']:.0f} pages demoted / "
+                  f"{ts['promoted_pages']:.0f} promoted, "
+                  f"{ts['reprefill_tokens_saved']:.0f} re-prefill tokens "
+                  f"saved, prefetch hit rate {ts['prefetch_hit_rate']:.2f}, "
+                  f"{ts['host_bytes_peak']:.0f} host bytes at peak")
         if eng.spec_k:
             ss = eng.spec_stats()
             print(f"[launch.serve] speculative (K={eng.spec_k}): "

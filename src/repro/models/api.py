@@ -383,6 +383,55 @@ def paged_cache_init(cfg, batch: int, num_pages: int, page_size: int):
     return {"scan": scan, "tail": [entry(k) for k in tail]}
 
 
+def state_slot_export(cfg, cache, slot):
+    """Serialize one slot's recurrent state (every ssm/rglru layer of a
+    paged cache tree) into a detached tree — the swap-out half of the
+    host-tier protocol (runtime/host_tier.py): a preempted hybrid request
+    carries its state to host RAM instead of rebuilding it by re-prefill.
+    Non-state entries are omitted (tail is dict-keyed by entry index so
+    the import can realign). ``slot`` may be traced."""
+    kinds = tfm.pattern_for(cfg)
+    _, tail = tfm.layer_plan(cfg)
+    state = set(STATE_KINDS)
+    return {
+        "scan": {str(j): jax.tree.map(lambda le: le[:, slot],
+                                      cache["scan"][str(j)])
+                 for j, kd in enumerate(kinds)
+                 if kd in state and str(j) in cache["scan"]},
+        "tail": {str(i): jax.tree.map(lambda le: le[slot], e)
+                 for i, (e, kd) in enumerate(zip(cache["tail"], tail))
+                 if kd in state},
+    }
+
+
+def state_slot_import(cfg, cache, slot, state_tree):
+    """Restore a ``state_slot_export`` tree into ``slot`` of a paged
+    cache — the swap-in half. Dtypes are cast back to each entry's
+    storage dtype; non-state entries pass through untouched."""
+    kinds = tfm.pattern_for(cfg)
+    _, tail = tfm.layer_plan(cfg)
+    state = set(STATE_KINDS)
+
+    def w_scan(le, s):              # (L, slots, ..) <- (L, ..)
+        return le.at[:, slot].set(s.astype(le.dtype))
+
+    def w_tail(le, s):              # (slots, ..) <- (..)
+        return le.at[slot].set(s.astype(le.dtype))
+
+    new_scan = {}
+    for j, kd in enumerate(kinds):
+        e = cache["scan"].get(str(j))
+        if e is None:
+            continue
+        new_scan[str(j)] = jax.tree.map(w_scan, e,
+                                        state_tree["scan"][str(j)]) \
+            if kd in state else e
+    new_tail = [jax.tree.map(w_tail, e, state_tree["tail"][str(i)])
+                if kd in state else e
+                for i, (e, kd) in enumerate(zip(cache["tail"], tail))]
+    return {"scan": new_scan, "tail": new_tail}
+
+
 def paged_cache_axes(cfg):
     """Logical axes tree matching paged_cache_init structure — the paged
     analogue of cache_axes, used by the tensor-parallel serving plan

@@ -1,0 +1,334 @@
+"""Host-RAM KV page tier with async copy streams (two-tier memory
+hierarchy for the paged serving engine).
+
+The serving-scale reproduction of Voltra's shared-memory streamers
+(PAPER.md): the paper's temporal-utilization win comes from *mixed-grained
+hardware prefetching* plus dynamic allocation — data is staged into the
+shared memory ahead of the consumer instead of fetched on demand. Here the
+"shared memory" is the device page pool and the backing store is host RAM:
+cold pages DEMOTE to a NumPy-backed host store instead of being destroyed,
+and the copy stream prefetches them back ahead of the decode sweep, so a
+working set much larger than the device pool serves with zero output
+change (benchmarks/serve_bench.py ``--scenario oversubscribe``).
+
+Three demotion sources (wired in ``runtime/serving.py``):
+
+* **idle prefix-cache pages** — demoted before LRU-evicting; a radix hit
+  on a host-resident node promotes (H2D) instead of re-prefilling;
+* **preempted requests** — their whole table (and a hybrid stack's
+  recurrent state slots) swaps out request-granularly; resume = promote +
+  scatter + state import, NO re-prefill;
+* **slid-out window pages** — archived (capped) for future hybrid prefix
+  caching rather than destroyed outright.
+
+The streamer is mixed-grained like the paper's: *page-granular* readahead
+(individual radix-node pages for pending prompts) and *request-granular*
+bulk restore (a preempted request's whole swap set), both started one
+scheduler tick ahead (``Scheduler.tick`` -> ``engine.prefetch_pending``)
+so the H2D copies overlap the current decode step.
+
+Copy-stream contract (what the streamer may and may not reorder):
+
+* D2H copies start at demotion time (``jax.Array.copy_to_host_async``)
+  and are FINALIZED at most one decode tick later (``drain()`` — the
+  engine calls it once per ``step()``, mirroring the one-host-sync
+  contract) or on first use, whichever comes first. Gather-then-free is
+  safe without a sync: the gather was dispatched against the pre-free
+  pool value, and JAX's dispatch ordering keeps that buffer alive until
+  the copy completes.
+* H2D prefetches (``jax.device_put``) may start any tick and complete in
+  any order; a consumer that finds its copy not yet started pays a
+  demand fetch (counted as a copy-stream stall).
+* The stream never reorders *visibility*: a handle is only consumed via
+  ``take``/``get``, which always returns the complete blob.
+
+Host-side module: the only jax calls are ``device_put`` and the async
+D2H finalization — no tracing, no kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _tree_nbytes(tree) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+
+
+def _finalize(tree):
+    """Resolve a pending D2H tree to host numpy leaves."""
+    return jax.tree.map(lambda a: np.asarray(a), tree)
+
+
+class HostPageStore:
+    """Handle-addressed store of per-layer page blobs in host RAM.
+
+    ``put`` takes a tree of DEVICE arrays (an engine gather's output),
+    starts the D2H copy asynchronously and returns a handle immediately;
+    the blob is finalized to NumPy on ``drain()`` (once per decode tick)
+    or on first ``get`` — whichever comes first — so a demote never
+    blocks the decode loop. Blob dtypes are whatever the pool stores
+    (int8 pools round-trip bitwise)."""
+
+    def __init__(self):
+        self._next = 0
+        self._blobs: Dict[int, Any] = {}       # handle -> numpy tree
+        self._pending: Dict[int, Any] = {}     # handle -> device tree
+        self.put_events = 0
+        self.bytes_stored = 0                  # current resident bytes
+        self.peak_bytes = 0
+
+    def put(self, device_tree) -> int:
+        handle = self._next
+        self._next += 1
+        for leaf in jax.tree.leaves(device_tree):
+            start = getattr(leaf, "copy_to_host_async", None)
+            if start is not None:
+                start()
+        self._pending[handle] = device_tree
+        self.put_events += 1
+        self.bytes_stored += _tree_nbytes(device_tree)
+        self.peak_bytes = max(self.peak_bytes, self.bytes_stored)
+        return handle
+
+    def drain(self) -> int:
+        """Finalize every pending D2H copy; returns how many were."""
+        n = len(self._pending)
+        for handle, tree in self._pending.items():
+            self._blobs[handle] = _finalize(tree)
+        self._pending.clear()
+        return n
+
+    def get(self, handle: int):
+        """The blob, finalized on demand (covers same-tick demote->use)."""
+        if handle in self._pending:
+            self._blobs[handle] = _finalize(self._pending.pop(handle))
+        return self._blobs[handle]
+
+    def pop(self, handle: int) -> None:
+        tree = self._pending.pop(handle, None)
+        if tree is None:
+            tree = self._blobs.pop(handle)
+        self.bytes_stored -= _tree_nbytes(tree)
+
+    def __contains__(self, handle: int) -> bool:
+        return handle in self._blobs or handle in self._pending
+
+    def __len__(self) -> int:
+        return len(self._blobs) + len(self._pending)
+
+
+class CopyStream:
+    """H2D prefetch stream over a HostPageStore, keyed by handle.
+
+    ``prefetch(handle)`` starts an async ``jax.device_put`` of the blob;
+    ``take(handle)`` returns the device tree — the in-flight copy when
+    one was started ahead (a prefetch hit), else a demand fetch counted
+    as a stall (the decode sweep had to start its own copy)."""
+
+    def __init__(self, store: HostPageStore):
+        self.store = store
+        self._inflight: Dict[int, Any] = {}
+        self.prefetch_starts = 0
+        self.prefetch_hits = 0
+        self.demand_fetches = 0
+
+    def prefetch(self, handle: int) -> None:
+        if handle in self._inflight or handle not in self.store:
+            return
+        self._inflight[handle] = jax.device_put(self.store.get(handle))
+        self.prefetch_starts += 1
+
+    def take(self, handle: int):
+        dev = self._inflight.pop(handle, None)
+        if dev is not None:
+            self.prefetch_hits += 1
+            return dev
+        self.demand_fetches += 1
+        return jax.device_put(self.store.get(handle))
+
+    def cancel(self, handle: int) -> None:
+        self._inflight.pop(handle, None)
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """Everything needed to resume a preempted request WITHOUT re-prefill:
+    its decode position, the store handles of its full-attention pages,
+    live window pages (+ base offset), and recurrent state slots."""
+    rid: int
+    pos: int
+    full: Optional[int] = None       # store handle of full-attn page blob
+    full_pages: int = 0              # real (unpadded) page count
+    win: Optional[int] = None        # store handle of window page blob
+    win_pages: int = 0
+    win_base: int = 0                # logical blocks below the blob
+    state: Optional[int] = None      # store handle of state-slot export
+
+    def handles(self) -> List[int]:
+        return [h for h in (self.full, self.win, self.state)
+                if h is not None]
+
+
+class HostTier:
+    """The engine-facing facade: one page store + one copy stream + the
+    swap-record registry + the slid-out window archive + telemetry.
+
+    ``max_bytes`` caps the store (None = unbounded): a demotion that
+    would exceed the cap is refused (``can_accept``) and the caller falls
+    back to the destructive path (evict / plain preempt), loudly counted.
+    ``persist_dir`` additionally checkpoints every swap record through
+    ``checkpoint.ckpt.AsyncCheckpointer`` (crash-durable swap state; the
+    checkpointer re-raises a failed background save on the next swap, so
+    persistence failures are never silent)."""
+
+    WIN_ARCHIVE_PAGES = 64           # default cap on archived slid-out pages
+
+    def __init__(self, *, max_bytes: Optional[int] = None,
+                 persist_dir: Optional[str] = None,
+                 win_archive_pages: Optional[int] = None):
+        self.store = HostPageStore()
+        self.stream = CopyStream(self.store)
+        self.max_bytes = max_bytes
+        self._swaps: Dict[int, SwapRecord] = {}
+        # rid -> [(base_block, n_pages, handle)]: slid-out window pages,
+        # archived for hybrid prefix caching (ROADMAP open 5) — nothing
+        # consumes them yet; the cap keeps the archive honest meanwhile
+        self._win_archive: Dict[int, List[Tuple[int, int, int]]] = {}
+        self._win_archive_order: List[Tuple[int, int]] = []  # (rid, idx)
+        self.win_archive_pages_cap = (self.WIN_ARCHIVE_PAGES
+                                      if win_archive_pages is None
+                                      else win_archive_pages)
+        self.win_archived_pages = 0      # currently archived
+        self.win_archive_drops = 0       # cap evictions
+        # demotion/promotion telemetry (engine exports via tier_stats)
+        self.demoted_pages = 0
+        self.promoted_pages = 0
+        self.cache_demotions = 0         # prefix-cache nodes demoted
+        self.cache_promotions = 0        # prefix-cache nodes promoted back
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.refused_demotions = 0       # cap refusals (fell back, loudly)
+        self.reprefill_tokens_saved = 0  # tokens resumed without re-prefill
+        self._ckpt = None
+        self.persist_dir = persist_dir
+        if persist_dir is not None:
+            from repro.checkpoint.ckpt import AsyncCheckpointer
+            self._ckpt = AsyncCheckpointer()
+
+    # -- capacity ---------------------------------------------------------
+    def can_accept(self, nbytes: int) -> bool:
+        if self.max_bytes is None:
+            return True
+        if self.store.bytes_stored + nbytes <= self.max_bytes:
+            return True
+        self.refused_demotions += 1
+        return False
+
+    # -- swap records (request-granular) ----------------------------------
+    def record_swap(self, rec: SwapRecord) -> None:
+        assert rec.rid not in self._swaps
+        self._swaps[rec.rid] = rec
+        self.swap_outs += 1
+        if self._ckpt is not None:
+            import os
+            blobs = {str(h): self.store.get(h) for h in rec.handles()}
+            self._ckpt.save(
+                os.path.join(self.persist_dir, f"swap_{rec.rid}"), blobs,
+                extra={"rid": rec.rid, "pos": rec.pos,
+                       "full_pages": rec.full_pages,
+                       "win_pages": rec.win_pages,
+                       "win_base": rec.win_base})
+
+    def has_swap(self, rid: int) -> bool:
+        return rid in self._swaps
+
+    def peek_swap(self, rid: int) -> SwapRecord:
+        return self._swaps[rid]
+
+    def pop_swap(self, rid: int) -> SwapRecord:
+        rec = self._swaps.pop(rid)
+        for h in rec.handles():
+            self.stream.cancel(h)
+            self.store.pop(h)
+        self.swap_ins += 1
+        self.reprefill_tokens_saved += rec.pos
+        return rec
+
+    def drop_swap(self, rid: int) -> None:
+        """Discard a swap record without resuming (request abandoned)."""
+        rec = self._swaps.pop(rid)
+        for h in rec.handles():
+            self.stream.cancel(h)
+            self.store.pop(h)
+
+    # -- window archive (slid-out pages; consumer: hybrid prefix caching) --
+    def archive_window(self, rid: int, base_block: int, n_pages: int,
+                       handle: int) -> None:
+        self._win_archive.setdefault(rid, []).append(
+            (base_block, n_pages, handle))
+        self._win_archive_order.append((rid, handle))
+        self.win_archived_pages += n_pages
+        while self.win_archived_pages > self.win_archive_pages_cap \
+                and self._win_archive_order:
+            old_rid, old_h = self._win_archive_order.pop(0)
+            entries = self._win_archive.get(old_rid, [])
+            for i, (_, n, h) in enumerate(entries):
+                if h == old_h:
+                    entries.pop(i)
+                    self.store.pop(h)
+                    self.win_archived_pages -= n
+                    self.win_archive_drops += 1
+                    break
+
+    # -- per-tick maintenance ---------------------------------------------
+    def drain(self) -> int:
+        """Finalize pending D2H copies; the engine calls this once per
+        decode tick (the copy-stream contract's visibility point)."""
+        if self._ckpt is not None and self._ckpt.last_error is not None:
+            self._ckpt.wait()            # re-raise the failed persist
+        return self.store.drain()
+
+    def reset_counters(self) -> None:
+        """Zero the telemetry (benchmarks call this after a warmup run so
+        the timed replay reports its own rates); store contents, swap
+        records and the window archive survive."""
+        self.demoted_pages = self.promoted_pages = 0
+        self.cache_demotions = self.cache_promotions = 0
+        self.swap_outs = self.swap_ins = 0
+        self.refused_demotions = 0
+        self.reprefill_tokens_saved = 0
+        self.win_archive_drops = 0
+        self.stream.prefetch_starts = 0
+        self.stream.prefetch_hits = 0
+        self.stream.demand_fetches = 0
+        self.store.put_events = 0
+        self.store.peak_bytes = self.store.bytes_stored
+
+    # -- telemetry ---------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return {
+            "demoted_pages": float(self.demoted_pages),
+            "promoted_pages": float(self.promoted_pages),
+            "cache_demotions": float(self.cache_demotions),
+            "cache_promotions": float(self.cache_promotions),
+            "swap_outs": float(self.swap_outs),
+            "swap_ins": float(self.swap_ins),
+            "refused_demotions": float(self.refused_demotions),
+            "reprefill_tokens_saved": float(self.reprefill_tokens_saved),
+            "prefetch_starts": float(self.stream.prefetch_starts),
+            "prefetch_hits": float(self.stream.prefetch_hits),
+            "copy_stall_ticks": float(self.stream.demand_fetches),
+            "prefetch_hit_rate": (
+                self.stream.prefetch_hits
+                / (self.stream.prefetch_hits + self.stream.demand_fetches)
+                if (self.stream.prefetch_hits
+                    + self.stream.demand_fetches) else 0.0),
+            "host_bytes": float(self.store.bytes_stored),
+            "host_bytes_peak": float(self.store.peak_bytes),
+            "win_archived_pages": float(self.win_archived_pages),
+            "win_archive_drops": float(self.win_archive_drops),
+        }

@@ -37,6 +37,17 @@ slid entirely out of the attention window and their pages were recycled
 request's footprint stays O(window) pages while its logical length keeps
 growing. ``allocate(..., base_blocks=)`` admits a long prompt with the
 pre-window blocks never allocated at all.
+
+**Host-resident tables** (two-tier KV hierarchy, ``runtime/host_tier.py``):
+``demote(rid)`` moves a request's table into a third lifecycle class —
+neither live nor freed — releasing its device pages while remembering the
+token count and window base, so ``promote(rid)`` can later rebuild the
+table from fresh pages and the engine can scatter the host-held page
+contents back. The allocator only tracks the *bookkeeping* of the tier
+(which rids are host-resident, how many pages they need back); the page
+CONTENTS move through the engine's gather/scatter programs and the host
+page store. ``check()`` verifies the host class stays disjoint from the
+live tables.
 """
 from __future__ import annotations
 
@@ -66,9 +77,14 @@ class PageAllocator:
         self._base: Dict[int, int] = {}           # rid -> recycled lead blocks
         self._ref: Dict[int, int] = {}            # page -> refcount (>0)
         self._pinned: Set[int] = set()            # prefix-cache pins (+1 ref)
+        # rid -> (tokens, base_blocks) for demoted (host-resident) tables:
+        # no device pages, but not forgotten — promote() rebuilds the table
+        self._host: Dict[int, Tuple[int, int]] = {}
         self.peak_pages = 0                        # high-water mark
         self.alloc_events = 0                      # pages handed out, total
         self.share_events = 0                      # table refs to shared pages
+        self.demote_events = 0                     # tables demoted to host
+        self.promote_events = 0                    # tables promoted back
 
     # -- queries ----------------------------------------------------------
     @property
@@ -286,6 +302,77 @@ class PageAllocator:
             freed += self._decref(p)
         return freed
 
+    # -- host tier (two-tier KV hierarchy) ---------------------------------
+    def host_resident(self, rid) -> bool:
+        return rid in self._host
+
+    def host_tokens(self, rid) -> int:
+        return self._host[rid][0]
+
+    def host_base_blocks(self, rid) -> int:
+        return self._host[rid][1]
+
+    def host_pages_needed(self, rid) -> int:
+        """Device pages ``promote(rid)`` would have to allocate."""
+        tokens, base = self._host[rid]
+        return self.pages_for(tokens) - base
+
+    def demote(self, rid) -> List[int]:
+        """Move ``rid``'s table to the host-resident class: drop its
+        reference to every device page (shared / cache-pinned pages
+        survive their other references) while remembering the token count
+        and window base so ``promote`` can rebuild it. Returns the old
+        block table — the caller must have GATHERED those pages' contents
+        to a host copy before the freed pages are rewritten (JAX dispatch
+        ordering makes gather-then-free safe: the gather was dispatched
+        against the pre-free pool value)."""
+        assert rid not in self._host, f"rid {rid} already host-resident"
+        pages = self._tables.pop(rid)
+        tokens = self._tokens.pop(rid)
+        base = self._base.pop(rid, 0)
+        self._host[rid] = (tokens, base)
+        for p in reversed(pages):       # LIFO: reuse hottest first
+            self._decref(p)
+        self.demote_events += 1
+        return pages
+
+    def promote(self, rid) -> Optional[List[int]]:
+        """Rebuild a host-resident table from fresh device pages. Returns
+        the new block table (the caller scatters the host page contents
+        into it and republishes the device row), or None (state unchanged,
+        rid stays host-resident) if the free list can't cover it. Shared
+        prefix pages are NOT re-shared: the promoted table is fully
+        private — correct, slightly wasteful, and CoW-free."""
+        tokens, base = self._host[rid]
+        need = self.pages_for(tokens) - base
+        if need > len(self._free):
+            return None
+        del self._host[rid]
+        pages = [self._pop_free() for _ in range(need)]
+        self._tables[rid] = pages
+        self._tokens[rid] = tokens
+        if base:
+            self._base[rid] = base
+        self.promote_events += 1
+        self.peak_pages = max(self.peak_pages, self.allocated_pages)
+        return list(pages)
+
+    def drop_host(self, rid) -> None:
+        """Forget a host-resident table (the request finished or was
+        abandoned while swapped out)."""
+        del self._host[rid]
+
+    def alloc_pinned_page(self) -> Optional[int]:
+        """Allocate one page whose ONLY reference is a prefix-cache pin
+        (no table occurrence) — the target of a host-resident radix
+        node's promotion. None if the free list is dry."""
+        if not self._free:
+            return None
+        page = self._pop_free()         # ref = 1 ...
+        self._pinned.add(page)          # ... and that 1 is the pin
+        self.peak_pages = max(self.peak_pages, self.allocated_pages)
+        return page
+
     # -- prefix-cache pins -------------------------------------------------
     def cache_pin(self, page: int) -> None:
         """The prefix cache keeps ``page`` alive (+1 ref) while it sits in
@@ -331,6 +418,15 @@ class PageAllocator:
                 f"window base for dead rid {rid}"
             assert self._tokens[rid] >= base * self.page_size, \
                 f"rid {rid}: base {base} past its {self._tokens[rid]} tokens"
+        for rid, (tokens, base) in self._host.items():
+            assert rid not in self._tables, \
+                f"rid {rid} is both live and host-resident"
+            assert tokens >= 1 and base >= 0, \
+                f"host rid {rid}: bad record ({tokens}, {base})"
+            assert tokens >= base * self.page_size, \
+                f"host rid {rid}: base {base} past its {tokens} tokens"
+            assert self.pages_for(tokens) - base >= 1, \
+                f"host rid {rid}: promotion would rebuild an empty table"
         assert len(free) + len(self._ref) == self.num_pages
         assert SCRATCH_PAGE not in free and SCRATCH_PAGE not in self._ref
 

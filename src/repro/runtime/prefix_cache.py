@@ -31,6 +31,14 @@ Structure
   runs dry, BEFORE falling back to preempting a live request — dropping
   an idle cached page costs one future re-prefill at most, preemption
   costs a guaranteed one.
+* **Host tier**: with the two-tier hierarchy on (``runtime/host_tier.py``)
+  idle pages *demote* instead of evicting: the node stays in the tree but
+  ``page`` becomes None and ``host`` holds the host-store handle of the
+  page's KV. A host node is still matchable — ``match()`` walks through
+  it (page placeholder ``-1``) and reports the node path so the engine
+  can promote (H2D) instead of re-prefilling. Demotion carries NO
+  leaf-first constraint (the node keeps its place in the tree), so any
+  idle device node may demote, in LRU order (``demotable``).
 
 Host-side only (no jax): physical page ids in, physical page ids out.
 """
@@ -45,15 +53,16 @@ Chunk = Tuple[int, ...]
 
 
 class _Node:
-    __slots__ = ("chunk", "page", "parent", "children", "last_used")
+    __slots__ = ("chunk", "page", "parent", "children", "last_used", "host")
 
     def __init__(self, chunk: Optional[Chunk], page: int,
                  parent: Optional["_Node"]):
         self.chunk = chunk              # None only for the root
-        self.page = page                # physical page id (root: SCRATCH)
+        self.page = page                # physical page id; None = demoted
         self.parent = parent
         self.children: Dict[Chunk, _Node] = {}
         self.last_used = 0
+        self.host = None                # host-store handle when demoted
 
 
 @dataclasses.dataclass
@@ -64,13 +73,20 @@ class PrefixMatch:
     block table). ``partial_page``/``partial_tokens`` describe a hit that
     ends inside a cached page: the first ``partial_tokens`` rows of
     ``partial_page`` hold valid KV, the engine must copy-on-write before
-    prefilling past them. ``tokens`` counts every matched token."""
+    prefilling past them. ``tokens`` counts every matched token.
+
+    With the host tier on, a matched node may be host-resident: its entry
+    in ``pages`` is the ``-1`` placeholder and ``path`` (the full-page
+    node chain, one node per ``pages`` entry) carries the node so the
+    engine can promote it back to a device page before use."""
     pages: List[int]
     tokens: int = 0
     partial_page: Optional[int] = None
     partial_tokens: int = 0
     # deepest matched node, for commit()'s LRU touch (internal)
     node: Optional[_Node] = None
+    # full-page node chain, parallel to ``pages`` (internal)
+    path: List[_Node] = dataclasses.field(default_factory=list)
 
 
 class PrefixCache:
@@ -91,6 +107,7 @@ class PrefixCache:
         self.partial_hits = 0           # matches ending inside a page (CoW)
         self.inserted_pages = 0
         self.evicted_pages = 0
+        self.host_nodes = 0             # demoted (host-resident) nodes
 
     # -- queries ----------------------------------------------------------
     @property
@@ -125,21 +142,29 @@ class PrefixCache:
                                                            max_tokens)
         node = self.root
         pages: List[int] = []
+        path: List[_Node] = []
         i = 0
         while limit - i >= ps:
             child = node.children.get(tuple(tokens[i:i + ps]))
             if child is None:
                 break
-            pages.append(child.page)
+            # host-resident node: still a hit — placeholder page, the
+            # engine promotes it (or truncates the match there).
+            pages.append(child.page if child.page is not None else -1)
+            path.append(child)
             node = child
             i += ps
         # divergence inside the next page: longest common prefix against
         # any child chunk (> 0 tokens) is still reusable KV, via CoW.
+        # Device children only — a partial hit is consumed by an on-device
+        # page copy, which a demoted page cannot serve.
         best_node: Optional[_Node] = None
         best_p = 0
         if limit > i:
             want = tuple(tokens[i:min(i + ps, limit)])
             for chunk, child in node.children.items():
+                if child.page is None:
+                    continue
                 p = 0
                 for a, b in zip(want, chunk):
                     if a != b:
@@ -150,9 +175,9 @@ class PrefixCache:
         matched = i + best_p
         if best_node is not None:
             return PrefixMatch(pages, matched, best_node.page, best_p,
-                               node=best_node)
+                               node=best_node, path=path)
         return PrefixMatch(pages, matched,
-                           node=node if pages else None)
+                           node=node if pages else None, path=path)
 
     def commit(self, m: PrefixMatch, total_tokens: int) -> None:
         """Record that a match() result was used to admit a request of
@@ -207,6 +232,48 @@ class PrefixCache:
             self._touch(node)
             self.inserted_pages += added
         return added
+
+    # -- host tier: demote / promote ---------------------------------------
+    def demotable(self, protect: Optional[Set[int]] = None) -> List["_Node"]:
+        """Idle device nodes (refcount == pin only), LRU first. Unlike
+        eviction there is NO leaf-first constraint: a demoted node keeps
+        its place in the tree (host nodes stay matchable), so an inner
+        node may demote while its children stay on device."""
+        protect = protect or set()
+        out = [n for n in self._by_page.values()
+               if n.page not in protect and self.alloc.ref(n.page) == 1]
+        out.sort(key=lambda n: n.last_used)
+        return out
+
+    def demotable_count(self, protect: Optional[Set[int]] = None) -> int:
+        return len(self.demotable(protect))
+
+    def demote_node(self, node: _Node, handle) -> int:
+        """Move ``node`` to the host tier: drop its pin (freeing the
+        device page) and remember the host-store ``handle``. The caller
+        must have dispatched the page-content gather BEFORE calling this
+        (gather-then-free is safe under JAX dispatch ordering). Returns
+        the freed page id."""
+        page = node.page
+        assert page is not None and node.host is None
+        del self._by_page[page]
+        node.page = None
+        node.host = handle
+        self.host_nodes += 1
+        became_free = self.alloc.cache_unpin(page)
+        assert became_free, "demoted an idle page that was still referenced"
+        return page
+
+    def promote_node(self, node: _Node, page: int) -> None:
+        """Re-attach a host-resident node to device ``page`` (allocated
+        pinned by the caller via ``PageAllocator.alloc_pinned_page``; the
+        caller also scatters the page contents back)."""
+        assert node.page is None and node.host is not None
+        assert self.alloc.is_pinned(page)
+        node.page = page
+        node.host = None
+        self._by_page[page] = node
+        self.host_nodes -= 1
 
     # -- eviction ----------------------------------------------------------
     def _evictable(self, protect: Set[int]) -> List[_Node]:
@@ -281,4 +348,5 @@ class PrefixCache:
             "inserted_pages": self.inserted_pages,
             "evicted_pages": self.evicted_pages,
             "cached_pages": self.cached_pages,
+            "host_nodes": self.host_nodes,
         }

@@ -15,6 +15,11 @@ prompt + generated-so-far, which also rebuilds what cannot be swapped
 out page-by-page — a hybrid stack's recurrent state slots and its
 sliding-window pages (the re-prefill re-admits with the pre-window
 blocks already recycled, so resume cost stays O(window) pages too).
+With the paged engine's host tier on (``host_tier=True``) the re-prefill
+is replaced by a swap-in — pages AND recurrent state promote back from
+host RAM — but the scheduler's contract is unchanged: re-queue the
+evictee, resubmit later; ``tick`` additionally passes the queue snapshot
+to the engine's prefetch streamer so those H2D copies start a tick early.
 """
 from __future__ import annotations
 
@@ -61,9 +66,15 @@ class Scheduler:
                 budget -= 1
 
     def tick(self) -> None:
-        """One scheduling round: admit -> decode (the engine's step tops up
-        pages itself and reports who it had to preempt)."""
+        """One scheduling round: admit -> prefetch -> decode (the engine's
+        step tops up pages itself and reports who it had to preempt). The
+        prefetch hook hands the engine's host-tier streamer the queue
+        snapshot so swap-ins and radix promotions for NEXT tick's
+        admissions start their H2D copies under THIS tick's decode."""
         self._admit()
+        prefetch = getattr(self.engine, "prefetch_pending", None)
+        if prefetch is not None:
+            prefetch(list(self.pending))
         evicted = self.engine.step() or []
         if evicted:
             self.preempted += len(evicted)

@@ -37,6 +37,22 @@ architecture (PAPER.md):
   compose with sharding unchanged. Data parallelism layers on top as
   whole-engine replicas (``runtime/router.py``).
 
+* **Host-tier KV pages with prefetch streamers** (``host_tier=True``,
+  ISSUE 7) — a second memory level under the device pool
+  (``runtime/host_tier.py``): cold pages DEMOTE to a NumPy-backed host
+  store instead of being destroyed, and a copy stream prefetches them
+  back one scheduler tick ahead. Three demotion sources replace today's
+  destructive paths: idle prefix-cache pages demote before LRU-evicting
+  (a radix hit on a host-resident node promotes instead of
+  re-prefilling), preempted requests swap out their whole table AND
+  their recurrent state slots (resume = promote + scatter + state
+  import — NO re-prefill), and slid-out window pages are archived. The
+  streamer is mixed-grained like the paper's: page-granular readahead
+  for radix promotions, request-granular bulk restore for swap-ins.
+  Net: a working set ≫ the device pool serves with zero output change
+  (``serve_bench --scenario oversubscribe``). Single-shard only for
+  now (``mesh=`` and ``host_tier=`` are mutually exclusive).
+
 * **Hybrid / windowed / recurrent stacks** are first-class since ISSUE 5:
   sliding-window layers (``local_attn``) get *paged ring buffers with
   page recycling* — a second block table whose pages are freed the moment
@@ -75,8 +91,9 @@ from repro.models import transformer as tfm
 from repro.parallel.sharding import NO_RULES, Rules
 from repro.parallel.tp import tp_plan
 from repro.runtime.drafter import ngram_propose
+from repro.runtime.host_tier import HostTier, SwapRecord, _tree_nbytes
 from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PoolStats
-from repro.runtime.prefix_cache import PrefixCache
+from repro.runtime.prefix_cache import PrefixCache, PrefixMatch
 
 
 @dataclasses.dataclass
@@ -157,7 +174,8 @@ def ServingEngine(cfg, params, **kwargs):
         return PagedServingEngine(cfg, params, **kwargs)
     paged_defaults = {"page_size": 16, "num_pages": None,
                       "attn_impl": "kernel", "prefix_cache": False,
-                      "spec_k": 0, "spec_ngram": 3, "mesh": None}
+                      "spec_k": 0, "spec_ngram": 3, "mesh": None,
+                      "host_tier": False}
     dropped = []
     for k, default in paged_defaults.items():
         if k in kwargs:
@@ -194,7 +212,8 @@ class PagedServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  attn_impl: str = "kernel", prefix_cache: bool = False,
                  spec_k: int = 0, spec_ngram: int = 3,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 host_tier: bool = False):
         if not _pageable(cfg):
             raise ValueError(
                 f"paged serving cannot host pattern "
@@ -208,6 +227,11 @@ class PagedServingEngine:
                 "speculative decode (spec_k > 0) requires greedy sampling "
                 "(temperature == 0): acceptance is exact-greedy — a drafted "
                 "token is kept iff it equals the argmax continuation")
+        if host_tier and mesh is not None:
+            raise ValueError(
+                "host_tier=True is single-shard only: swap blobs would "
+                "have to gather/scatter each shard's KV-head slice through "
+                "the manual boundary — TP + tiering is an open item")
         # block-kind split: full-attention layers share one block table,
         # sliding-window layers a second (recycled) one, recurrent layers
         # hold fixed-size per-slot state beside the pool
@@ -262,6 +286,10 @@ class PagedServingEngine:
         # callers that meter allocated_pages must opt into.
         self.prefix: Optional[PrefixCache] = \
             PrefixCache(self.alloc) if prefix_cache else None
+        # two-tier memory hierarchy: host-RAM page store + copy stream
+        # (runtime/host_tier.py). Off by default — demotion keeps blobs
+        # alive in host RAM, which callers that meter memory opt into.
+        self.tier: Optional[HostTier] = HostTier() if host_tier else None
         # pool row 0 is the scratch page -> usable + 1 physical rows
         self.cache = api.paged_cache_init(cfg, slots, usable + 1, page_size)
         if self.tp is not None:
@@ -315,6 +343,24 @@ class PagedServingEngine:
         self._prefill_fn = jax.jit(self._make_prefill())
         self._prefill_shared_fn = jax.jit(self._make_prefill_shared())
         self._cow_fn = jax.jit(self._make_cow())
+        # host-tier page IO: kind-filtered gather/scatter pairs (full-attn
+        # pools and window pools move independently — a swap record holds
+        # one blob per table) plus recurrent state-slot export/import
+        if host_tier:
+            full_kinds = set(api.PAGEABLE_KINDS)
+            win_kinds = set(api.WINDOW_KINDS)
+            self._gather_full = jax.jit(self._make_pool_gather(full_kinds))
+            self._scatter_full = jax.jit(self._make_pool_scatter(full_kinds))
+            self._gather_win = jax.jit(self._make_pool_gather(win_kinds))
+            self._scatter_win = jax.jit(self._make_pool_scatter(win_kinds))
+            if self.has_state:
+                # the swap-out half of the carried-over PR 5 open: a
+                # preempted hybrid request carries its recurrent state to
+                # host RAM instead of rebuilding it by re-prefill
+                self._state_export_fn = jax.jit(
+                    lambda c, s: api.state_slot_export(cfg, c, s))
+                self._state_import_fn = jax.jit(
+                    lambda c, s, st: api.state_slot_import(cfg, c, s, st))
         self._seen_buckets: set = set()
 
     # -- jitted device programs -------------------------------------------
@@ -621,6 +667,73 @@ class PagedServingEngine:
 
         return cow
 
+    def _make_pool_gather(self, kinds_ok: set):
+        """Host-tier D2H staging: gather ``pages``'s rows out of every
+        page-pool layer whose kind is in ``kinds_ok`` into a detached blob
+        tree (dict-keyed tail so entry indices survive the round-trip).
+        Pages are padded to a power of two with SCRATCH (bounds trace
+        count; the padded rows carry scratch garbage and scatter back onto
+        the scratch page). Dtypes pass through — int8 pools swap bitwise."""
+        kinds, tail = self._kinds, self._tail
+
+        def gather(cache, pages):
+            def g_scan(leaf):           # (L,P,pg,..) -> (L,n,pg,..)
+                return jnp.take(leaf, pages, axis=1)
+
+            def g_tail(leaf):           # (P,pg,..) -> (n,pg,..)
+                return jnp.take(leaf, pages, axis=0)
+
+            return {
+                "scan": {str(j): jax.tree.map(g_scan, cache["scan"][str(j)])
+                         for j, kd in enumerate(kinds)
+                         if kd in kinds_ok and str(j) in cache["scan"]},
+                "tail": {str(i): jax.tree.map(g_tail, e)
+                         for i, (e, kd) in enumerate(zip(cache["tail"],
+                                                         tail))
+                         if kd in kinds_ok},
+            }
+
+        return gather
+
+    def _make_pool_scatter(self, kinds_ok: set):
+        """Host-tier H2D landing: write a gathered blob back into fresh
+        ``pages`` of every matching pool layer (the promote half of the
+        demote/promote round trip). Layers outside ``kinds_ok`` pass
+        through untouched."""
+        kinds, tail = self._kinds, self._tail
+
+        def scatter(cache, pages, blob):
+            def s_scan(pool, b):        # (L,P,pg,..) <- (L,n,pg,..)
+                return pool.at[:, pages].set(b.astype(pool.dtype))
+
+            def s_tail(pool, b):        # (P,pg,..) <- (n,pg,..)
+                return pool.at[pages].set(b.astype(pool.dtype))
+
+            new_scan = {}
+            for j, kd in enumerate(kinds):
+                e = cache["scan"].get(str(j))
+                if e is None:
+                    continue
+                new_scan[str(j)] = jax.tree.map(
+                    s_scan, e, blob["scan"][str(j)]) \
+                    if kd in kinds_ok else e
+            new_tail = [jax.tree.map(s_tail, e, blob["tail"][str(i)])
+                        if kd in kinds_ok else e
+                        for i, (e, kd) in enumerate(zip(cache["tail"],
+                                                        tail))]
+            return {"scan": new_scan, "tail": new_tail}
+
+        return scatter
+
+    def _pad_pages(self, pages) -> jax.Array:
+        """Page vector padded to a power of two with SCRATCH, so the
+        gather/scatter programs trace once per size class, not once per
+        page count (the prefill-bucket trick applied to swap IO)."""
+        n = _next_pow2(max(1, len(pages)))
+        out = np.full((n,), SCRATCH_PAGE, np.int32)
+        out[: len(pages)] = pages
+        return jnp.asarray(out)
+
     def _prefill_for(self, bucket) -> None:
         """jax.jit's shape cache gives one trace per bucket (plain bucket
         int for whole-prompt prefill, (suffix_bucket, prefix_pages) pairs
@@ -671,6 +784,14 @@ class PagedServingEngine:
         slot = self._free_slot()
         if slot is None:
             return False
+        if self.tier is not None and self.tier.has_swap(req.rid):
+            # swapped-out request: resume by promoting its pages + state
+            # back from the host tier — no re-prefill. Runs BEFORE the
+            # reject-as-done guard below on purpose: a request that was
+            # live when preempted always satisfies it (pos <= max_len - 2,
+            # generation budget left), and the guard's re-prefill footprint
+            # math doesn't describe a swap-in.
+            return self._swap_in(req, slot)
         toks = list(req.prompt) + list(req.generated)   # resume-on-preempt
         L = len(toks)
         remaining = req.max_new - len(req.generated)
@@ -693,22 +814,32 @@ class PagedServingEngine:
             # cap at L-1: at least one token must be prefilled — its logits
             # pick the next token, a pure cache hit has none to offer
             m = self.prefix.match(toks, max_tokens=L - 1)
+            if self.tier is not None:
+                # hits on host-resident radix nodes: promote them back to
+                # device pages (H2D, prefetched a tick ahead when the
+                # scheduler showed us this request) instead of letting the
+                # match silently shrink to the device-resident prefix
+                m = self._promote_match(m)
             shared = m.pages
             partial_page, partial_tokens = m.partial_page, m.partial_tokens
         need_fresh = (self.alloc.pages_for(L) - len(shared)
                       if self.has_full else 0)
         deficit = need_fresh - self.alloc.free_pages
         if deficit > 0 and self.prefix is not None:
-            # evict idle cached pages before rejecting admission — but
-            # only if eviction can actually cover the deficit: flushing
+            # shed idle cached pages before rejecting admission — but
+            # only if shedding can actually cover the deficit: flushing
             # still-matchable prefixes ahead of a rejection that happens
             # anyway would cost every future hit and buy nothing. The
             # match's own pages are not yet refcounted, so shield them.
+            # With the host tier on, "shed" means demote (the node stays
+            # matchable), and any idle node qualifies — not just leaves.
             keep = set(shared)
             if partial_page is not None:
                 keep.add(partial_page)
-            if self.prefix.evictable_count(protect=keep) >= deficit:
-                self.prefix.evict(deficit, protect=keep)
+            can = (self.prefix.demotable_count(keep) if self.tier is not None
+                   else self.prefix.evictable_count(protect=keep))
+            if can >= deficit:
+                self._shed_idle_cache(deficit, protect=keep)
         table: List[int] = []
         if self.has_full:
             got = self.alloc.allocate_shared(req.rid, L, shared)
@@ -844,27 +975,222 @@ class PagedServingEngine:
         self._release_slot(slot).done = True
 
     def _evict_slot(self, slot: int) -> Request:
-        """Preempt: reclaim pages, return the request for re-admission
-        (it resumes by re-prefilling prompt + generated-so-far)."""
+        """Preempt destructively: reclaim pages, return the request for
+        re-admission (it resumes by re-prefilling prompt +
+        generated-so-far). With the host tier on, ``_swap_out_slot`` is
+        the preferred path — this survives as its overflow fallback."""
         req = self._release_slot(slot)
         req.preemptions += 1
         return req
 
     def _reclaim_one_page(self, keep_slot: int,
                           preempted: List[Request]) -> bool:
-        """Free at least one page for `keep_slot`: first drop an idle
-        cached page (costs at most one future re-prefill), only then
-        preempt the youngest other live request (costs a guaranteed
-        re-prefill). False if neither source has anything left."""
-        if self.prefix is not None and self.prefix.evict(1):
+        """Free at least one page for `keep_slot`: first shed an idle
+        cached page (demote-or-evict — costs at most one future promote
+        or re-prefill), only then preempt the youngest other live request
+        (swap-out when the tier is on; destructive re-prefill preemption
+        otherwise). False if neither source has anything left."""
+        if self._shed_idle_cache(1):
             return True
         victims = [s for s, r in enumerate(self.live)
                    if r is not None and s != keep_slot]
         if not victims:
             return False
         youngest = max(victims, key=lambda s: self._admit_seq[s])
-        preempted.append(self._evict_slot(youngest))
+        preempted.append(self._swap_out_slot(youngest)
+                         if self.tier is not None
+                         else self._evict_slot(youngest))
         return True
+
+    # -- host tier: demote / promote / swap --------------------------------
+
+    def _shed_idle_cache(self, n_pages: int,
+                         protect: Optional[set] = None) -> int:
+        """Free ``n_pages`` device pages from the idle prefix cache. Tier
+        off: plain LRU eviction. Tier on: demote first — gather the page's
+        KV (one-page blobs: the page-granular half of the mixed-grained
+        streamer), hand it to the host store and free the device page
+        while the node stays matchable — falling back to eviction only
+        when the host store refuses (capacity cap). Returns pages freed."""
+        if self.prefix is None:
+            return 0
+        if self.tier is None:
+            return self.prefix.evict(n_pages, protect=protect)
+        freed = 0
+        for node in self.prefix.demotable(protect):
+            if freed >= n_pages:
+                break
+            blob = self._gather_full(self.cache,
+                                     self._pad_pages([node.page]))
+            if not self.tier.can_accept(_tree_nbytes(blob)):
+                break                # host store full: evict the rest
+            handle = self.tier.store.put(blob)
+            self.prefix.demote_node(node, handle)
+            self.tier.cache_demotions += 1
+            self.tier.demoted_pages += 1
+            freed += 1
+        if freed < n_pages:
+            freed += self.prefix.evict(n_pages - freed, protect=protect)
+        return freed
+
+    def _promote_match(self, m: PrefixMatch) -> PrefixMatch:
+        """Promote every host-resident node on a match's path back to a
+        fresh pinned device page (H2D through the copy stream — a hit
+        when the scheduler's prefetch hook saw this prompt last tick).
+        If the pool can't supply a page mid-path, the match truncates at
+        that node: the pages BELOW the cut are already promoted and
+        usable, everything above re-prefills."""
+        for i, node in enumerate(m.path):
+            if node.page is not None:
+                m.pages[i] = node.page     # promoted by an earlier caller
+                continue
+            page = self.alloc.alloc_pinned_page()
+            if page is None:
+                return PrefixMatch(
+                    m.pages[:i], i * self.page_size,
+                    node=m.path[i - 1] if i else None, path=m.path[:i])
+            handle = node.host
+            blob = self.tier.stream.take(handle)
+            self.cache = self._scatter_full(self.cache,
+                                            self._pad_pages([page]), blob)
+            self.tier.store.pop(handle)
+            self.prefix.promote_node(node, page)
+            self.tier.cache_promotions += 1
+            self.tier.promoted_pages += 1
+            m.pages[i] = page
+        return m
+
+    def _swap_out_slot(self, slot: int) -> Request:
+        """Preempt WITHOUT destroying work: gather the slot's full and
+        window tables into host blobs (request-granular), export its
+        recurrent state slots, then demote the allocator bookkeeping and
+        free the device pages — gather-then-free is safe under JAX
+        dispatch ordering. Falls back to destructive eviction when the
+        host store refuses the bytes (counted, loud)."""
+        req = self.live[slot]
+        tier = self.tier
+        rec = SwapRecord(rid=req.rid, pos=self._pos_host[slot])
+        blobs = {}
+        if self.has_full:
+            table = self.alloc.block_table(req.rid)
+            rec.full_pages = len(table)
+            blobs["full"] = self._gather_full(self.cache,
+                                              self._pad_pages(table))
+        if self.has_win:
+            wrid = _win_rid(req.rid)
+            wtable = self.alloc.block_table(wrid)
+            rec.win_pages = len(wtable)
+            rec.win_base = self.alloc.base_blocks(wrid)
+            blobs["win"] = self._gather_win(self.cache,
+                                            self._pad_pages(wtable))
+        if self.has_state:
+            blobs["state"] = self._state_export_fn(self.cache,
+                                                   jnp.int32(slot))
+        if not tier.can_accept(sum(_tree_nbytes(b) for b in blobs.values())):
+            return self._evict_slot(slot)
+        for name, blob in blobs.items():
+            setattr(rec, name, tier.store.put(blob))
+        if self.has_full:
+            self.alloc.demote(req.rid)
+            self.block_table = self.block_table.at[slot].set(SCRATCH_PAGE)
+        if self.has_win:
+            self.alloc.demote(_win_rid(req.rid))
+            self.win_table = self.win_table.at[slot].set(SCRATCH_PAGE)
+        tier.demoted_pages += rec.full_pages + rec.win_pages
+        self.live[slot] = None
+        self.live_mask = self.live_mask.at[slot].set(False)
+        tier.record_swap(rec)
+        req.preemptions += 1
+        return req
+
+    def _swap_in(self, req: Request, slot: int) -> bool:
+        """Resume a swapped-out request: promote its allocator tables,
+        scatter the host blobs into the fresh pages (the copy stream
+        already has them in flight when the prefetch hook fired), import
+        its recurrent state, and rebuild the slot bookkeeping exactly
+        where the preemption left it — pos, current token, remaining
+        generation budget. NO tokens are prefilled and none are emitted.
+        False (request keeps waiting) if the pool can't host it yet —
+        a swap-in never preempts someone else (anti-thrash)."""
+        tier = self.tier
+        rec = tier.peek_swap(req.rid)
+        need = 0
+        if self.has_full:
+            need += self.alloc.host_pages_needed(req.rid)
+        if self.has_win:
+            need += self.alloc.host_pages_needed(_win_rid(req.rid))
+        deficit = need - self.alloc.free_pages
+        if deficit > 0:
+            self._shed_idle_cache(deficit)
+            if need > self.alloc.free_pages:
+                return False
+        table: List[int] = []
+        if self.has_full:
+            table = self.alloc.promote(req.rid)
+            assert table is not None
+        wtable: List[int] = []
+        if self.has_win:
+            wtable = self.alloc.promote(_win_rid(req.rid))
+            assert wtable is not None
+        if rec.full is not None:
+            blob = tier.stream.take(rec.full)
+            self.cache = self._scatter_full(self.cache,
+                                            self._pad_pages(table), blob)
+        if rec.win is not None:
+            blob = tier.stream.take(rec.win)
+            self.cache = self._scatter_win(self.cache,
+                                           self._pad_pages(wtable), blob)
+        if rec.state is not None:
+            self.cache = self._state_import_fn(
+                self.cache, jnp.int32(slot), tier.stream.take(rec.state))
+        tier.promoted_pages += len(table) + len(wtable)
+        row = np.zeros((self.max_blocks,), np.int32)
+        row[: len(table)] = table
+        self.block_table = self.block_table.at[slot].set(jnp.asarray(row))
+        row_win = np.zeros((self.max_blocks,), np.int32)
+        row_win[rec.win_base: rec.win_base + len(wtable)] = wtable
+        self.win_table = self.win_table.at[slot].set(jnp.asarray(row_win))
+        self.pos = self.pos.at[slot].set(rec.pos)
+        self.cur_tok = self.cur_tok.at[slot, 0].set(int(req.generated[-1]))
+        self.live_mask = self.live_mask.at[slot].set(True)
+        # gen restarts at 1 with a rebased budget, exactly the re-prefill
+        # resume's accounting: done when total generated reaches max_new
+        self.gen_cnt = self.gen_cnt.at[slot].set(1)
+        self.max_new_arr = self.max_new_arr.at[slot].set(
+            req.max_new - len(req.generated) + 1)
+        self.live[slot] = req
+        self._pos_host[slot] = rec.pos
+        self._admit_counter += 1
+        self._admit_seq[slot] = self._admit_counter
+        tier.pop_swap(req.rid)
+        return True
+
+    def prefetch_pending(self, pending: List[Request]) -> None:
+        """The streamer's look-ahead (Scheduler.tick calls this with the
+        queue snapshot between admission and decode): start the H2D
+        copies that NEXT tick's admissions will consume — request-
+        granular for swapped-out requests (their whole swap set), page-
+        granular for prompts whose radix match crosses host-resident
+        nodes — so they overlap this tick's decode step."""
+        if self.tier is None:
+            return
+        for req in pending:
+            if self.tier.has_swap(req.rid):
+                for h in self.tier.peek_swap(req.rid).handles():
+                    self.tier.stream.prefetch(h)
+            elif self.prefix is not None:
+                toks = list(req.prompt) + list(req.generated)
+                m = self.prefix.match(toks, max_tokens=len(toks) - 1)
+                for node in m.path:
+                    if node.page is None:
+                        self.tier.stream.prefetch(node.host)
+
+    def tier_stats(self) -> Dict[str, float]:
+        """Host-tier telemetry (all zeros when the tier is off)."""
+        d: Dict[str, float] = {"host_tier": float(self.tier is not None)}
+        if self.tier is not None:
+            d.update(self.tier.stats())
+        return d
 
     def ensure_decode_capacity(self, n_tokens: int = 1) -> List[Request]:
         """Allocate the pages the next decode step will write into
@@ -963,6 +1289,16 @@ class PagedServingEngine:
         base = self.alloc.base_blocks(wrid)
         n = min(dead - base, len(self.alloc.block_table(wrid)) - 1)
         if n > 0:
+            if self.tier is not None:
+                # demotion source 3: archive the slid-out blocks (capped)
+                # before recycling — raw material for hybrid prefix
+                # caching (ROADMAP open 5), gathered while the pages are
+                # still live, freed right after (dispatch-order safe)
+                pages = self.alloc.block_table(wrid)[:n]
+                blob = self._gather_win(self.cache, self._pad_pages(pages))
+                if self.tier.can_accept(_tree_nbytes(blob)):
+                    self.tier.archive_window(rid, base, n,
+                                             self.tier.store.put(blob))
             self.win_recycled_pages += self.alloc.release_prefix(wrid, n)
             self.win_table = self.win_table.at[
                 slot, base:base + n].set(SCRATCH_PAGE)
@@ -976,6 +1312,10 @@ class PagedServingEngine:
         that write would land on the scratch page and silently corrupt
         the request); returns any requests preempted by that top-up, for
         the caller to resubmit."""
+        if self.tier is not None:
+            # the copy-stream contract's visibility point: pending D2H
+            # copies finalize exactly once per decode tick
+            self.tier.drain()
         if self.spec_k:
             return self._step_speculative()
         if not any(r is not None for r in self.live):

@@ -1,0 +1,86 @@
+"""AsyncCheckpointer failure semantics: a background save that dies must
+re-raise on the NEXT save() or wait() — never vanish. The host-tier swap
+path (runtime/host_tier.py with persist_dir=) persists swap records
+through this class, so a silent failure there would mean silently
+non-durable swap state."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import AsyncCheckpointer, restore
+from repro.runtime.host_tier import HostTier, SwapRecord
+
+
+def _state():
+    return {"w": jnp.arange(6.0).reshape(2, 3)}
+
+
+def test_async_save_round_trips(tmp_path):
+    ck = AsyncCheckpointer()
+    path = str(tmp_path / "step_1")
+    ck.save(path, _state(), extra={"step": 1})
+    ck.wait()
+    assert ck.completed_saves == 1 and ck.failed_saves == 0
+    got, extra = restore(path, _state())
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(_state()["w"]))
+    assert extra == {"step": 1}
+
+
+def test_failed_background_save_reraises_on_next_save(tmp_path):
+    ck = AsyncCheckpointer()
+    # an unwritable destination: the background thread's os.makedirs dies
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("file where a directory must go")
+    bad = str(blocker / "ckpt")
+    ck.save(bad, _state())
+    with pytest.raises(OSError):
+        ck.save(str(tmp_path / "step_2"), _state())     # re-raised HERE
+    assert ck.failed_saves == 1
+    # the error was consumed by raising: the checkpointer is usable again
+    ck.wait()
+    ck.save(str(tmp_path / "step_3"), _state())
+    ck.wait()
+    assert ck.completed_saves == 1
+    assert os.path.isdir(tmp_path / "step_3")
+
+
+def test_failed_background_save_reraises_on_wait(tmp_path):
+    ck = AsyncCheckpointer()
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("")
+    ck.save(str(blocker / "ckpt"), _state())
+    with pytest.raises(OSError):
+        ck.wait()
+    ck.wait()                                           # consumed: clean now
+    assert ck.failed_saves == 1 and ck.last_error is None
+
+
+def test_host_tier_persist_failure_is_loud(tmp_path):
+    """HostTier(persist_dir=...) rides AsyncCheckpointer: a failing persist
+    surfaces on the tier's next drain() (the once-per-decode-tick hook),
+    not never."""
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("")
+    tier = HostTier(persist_dir=str(blocker / "swaps"))
+    h = tier.store.put({"k": jnp.zeros((2, 4), jnp.int8)})
+    tier.record_swap(SwapRecord(rid=1, pos=4, full=h, full_pages=1))
+    tier._ckpt._thread.join()                           # let the save die
+    with pytest.raises(OSError):
+        tier.drain()
+    assert tier._ckpt.failed_saves == 1
+
+
+def test_host_tier_persist_writes_restorable_swaps(tmp_path):
+    tier = HostTier(persist_dir=str(tmp_path))
+    blob = {"k": jnp.arange(8, dtype=jnp.int8).reshape(2, 4)}
+    h = tier.store.put(blob)
+    tier.record_swap(SwapRecord(rid=3, pos=9, full=h, full_pages=2))
+    tier._ckpt.wait()
+    got, extra = restore(str(tmp_path / "swap_3"),
+                         {str(h): {"k": jnp.zeros((2, 4), jnp.int8)}})
+    np.testing.assert_array_equal(np.asarray(got[str(h)]["k"]),
+                                  np.asarray(blob["k"]))
+    assert extra["rid"] == 3 and extra["pos"] == 9
