@@ -17,7 +17,13 @@ Rules, applied to every ``tokens_match_*`` column in every section:
   somewhere in the file — a silently-dropped scenario must not pass the
   gate by absence (skip-note rows don't count: a run where every sharded
   leg was skipped still fails, loudly, so the CI leg without forced host
-  devices is visibly not covering the contract).
+  devices is visibly not covering the contract);
+* each unified metrics column (``ttft_p50`` / ``ttft_p95`` / ``tpot_p50``
+  / ``tpot_p95`` / ``temporal_util``) must appear with at least one
+  non-empty numeric cell, and every ``temporal_util`` value must lie in
+  [0, 1] — the serve rows carry the ``engine.metrics()`` latency/
+  utilization surface and a build that dropped it must not ship a CSV
+  that merely looks complete.
 
 Input format: ``benchmarks/run.py --out`` artifacts — one CSV block per
 suite behind a ``# === name ===`` header — or a bare single-suite CSV
@@ -34,6 +40,15 @@ import sys
 from typing import Dict, List, Tuple
 
 REQUIRED = ("tokens_match_tp1", "tokens_match_unconstrained")
+
+# unified latency/utilization columns (ISSUE 8): every serve scenario row
+# must carry them, so the artifact must contain each with at least one
+# non-empty (float-parsable) cell — a metrics() surface that silently
+# stopped flowing into the CSV must fail the gate, not upload zeros-by-
+# absence. temporal_util is a ratio by construction: any parsed value
+# outside [0, 1] is a broken timer, not a data point.
+REQUIRED_METRICS = ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95",
+                    "temporal_util")
 
 
 def parse_sections(text: str) -> List[Tuple[str, List[Dict[str, str]]]]:
@@ -73,12 +88,29 @@ def check(text: str) -> List[str]:
     """Return the list of violations (empty = gate passes)."""
     errors: List[str] = []
     seen_ok: Dict[str, int] = {k: 0 for k in REQUIRED}
+    seen_metric: Dict[str, int] = {k: 0 for k in REQUIRED_METRICS}
     sections = parse_sections(text)
     if not any(rows for _, rows in sections):
         return ["no CSV rows found — empty or truncated artifact"]
     for name, rows in sections:
         for i, row in enumerate(rows):
             for col, val in row.items():
+                if col in seen_metric and val != "":
+                    eng = row.get("engine", f"row {i}")
+                    try:
+                        x = float(val)
+                    except ValueError:
+                        errors.append(
+                            f"[{name or 'csv'}] {eng}: {col}={val!r} is "
+                            f"not a number")
+                        continue
+                    if col == "temporal_util" and not 0.0 <= x <= 1.0:
+                        errors.append(
+                            f"[{name or 'csv'}] {eng}: temporal_util={x} "
+                            f"outside [0, 1] — step wall exceeded tick "
+                            f"wall, the timers are broken")
+                        continue
+                    seen_metric[col] += 1
                 if not col.startswith("tokens_match_"):
                     continue
                 if val == "":
@@ -97,6 +129,11 @@ def check(text: str) -> List[str]:
                 f"required equivalence column {col!r} never passed "
                 f"(missing column or every leg skipped) — the scenario "
                 f"that enforces it did not run")
+    for col, n in seen_metric.items():
+        if n == 0:
+            errors.append(
+                f"required metrics column {col!r} missing or empty — the "
+                f"unified engine.metrics() surface did not reach the CSV")
     return errors
 
 
@@ -113,7 +150,8 @@ def main() -> None:
         raise SystemExit(1)
     n = sum(len(rows) for _, rows in parse_sections(text))
     print(f"check_csv: OK — {n} rows, equivalence columns "
-          f"{', '.join(REQUIRED)} all green")
+          f"{', '.join(REQUIRED)} all green, metrics columns "
+          f"{', '.join(REQUIRED_METRICS)} present")
 
 
 if __name__ == "__main__":

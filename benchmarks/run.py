@@ -44,6 +44,9 @@ def main() -> None:
                     help="trace seed for suites that generate random "
                          "traffic (serve): same seed -> same trace, so "
                          "CI CSV artifacts diff cleanly run-to-run")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.JSON",
+                    help="suites that support tracing (serve) export a "
+                         "Chrome Trace Event JSON of their run here")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
     t0 = time.time()
@@ -57,6 +60,9 @@ def main() -> None:
             kwargs["smoke"] = True
         if "seed" in inspect.signature(fn).parameters:
             kwargs["seed"] = args.seed
+        if args.trace_out and \
+                "trace_out" in inspect.signature(fn).parameters:
+            kwargs["trace_out"] = args.trace_out
         print(f"# === {name} ===", flush=True)
         csv = emit(fn(**kwargs))
         chunks.append(f"# === {name} ===\n{csv}\n")

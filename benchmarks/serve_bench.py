@@ -96,8 +96,16 @@ telemetry: ``prefetch_hit_rate`` / ``copy_stall_ticks`` /
 three demotion sources (idle radix nodes, preempted requests incl.
 recurrent state, slid-out window pages) run inside the timed replay.
 
+Every scenario row additionally carries the unified latency/utilization
+columns from ``engine.metrics()`` (ISSUE 8): ``ttft_p50`` / ``ttft_p95``
+(arrival-to-first-token, queue wait included), ``tpot_p50`` / ``tpot_p95``
+(per-token decode latency) and ``temporal_util`` (device-step wall over
+decode-tick wall — the serving analogue of the paper's Fig. 6 temporal-
+utilization breakdown). ``--trace-out trace.json`` exports the whole run
+as Chrome Trace Event JSON, loadable in Perfetto.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen2.5-3b]
-      [--seed 0]
+      [--seed 0] [--trace-out trace.json]
       [--scenario mixed|shared-prefix|speculative|hybrid|sharded|
        oversubscribe|all]
 
@@ -108,6 +116,7 @@ from __future__ import annotations
 
 import argparse
 import random
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -119,6 +128,7 @@ from repro.models import api
 from repro.runtime.scheduler import Scheduler
 from repro.runtime.serving import (DenseServingEngine, PagedServingEngine,
                                    Request)
+from repro.runtime.trace import NULL_TRACER, Tracer, set_default_tracer
 
 
 def _trace(cfg, n_requests: int, max_new: int, seed: int) -> List[Request]:
@@ -173,33 +183,13 @@ def _warm(engine, mk_trace) -> None:
     for r in mk_trace(2):
         sched.add(r)
     sched.drain(max_steps=1000)
-    # warmup compiled + ran; zero the telemetry the timed replay reports
-    engine.decode_steps = 0
-    engine.decoded_tokens = 0
-    engine.step_wall_s = 0.0
-    engine.first_token_at.clear()
-    if isinstance(engine, PagedServingEngine):
-        engine.prompt_tokens = 0
-        engine.prefilled_tokens = 0
-        engine.cow_copies = 0
-        engine.spec_drafted = 0
-        engine.spec_accepted = 0
-        engine.spec_slot_steps = 0
-        engine.win_recycled_pages = 0
-        # the pool's high-water marks survive the warmup run otherwise:
-        # the timed replay's peak_kv_tokens / shared_page_refs columns
-        # would report the warmup trace's peaks, not the replay's
-        engine.alloc.peak_pages = engine.alloc.allocated_pages
-        engine.alloc.share_events = 0
-        if engine.prefix is not None:
-            # keep the warmed radix tree (steady-state cache) but zero the
-            # hit counters so the timed replay's telemetry is its own
-            engine.prefix.reset_hit_counters()
-        if engine.tier is not None:
-            # same deal for the host tier: keep its contents (demoted
-            # radix nodes ARE the steady state) but report the replay's
-            # own demotion/prefetch rates
-            engine.tier.reset_counters()
+    # warmup compiled + ran; zero the telemetry the timed replay reports.
+    # One call owns the whole reset contract (engine counters, latency
+    # stamps, pool high-water marks, prefix hit counters, tier transfer
+    # rates) so benches can't drift out of sync with new subsystems —
+    # warmed STATE (radix tree contents, demoted host nodes, jit caches)
+    # survives; only the counters the replay reports are zeroed.
+    engine.reset_metrics()
 
 
 def _attn_peak_live_bytes(cfg, engine) -> int:
@@ -237,12 +227,14 @@ def _drive(engine, reqs: List[Request], max_steps: int, cfg,
     wall = time.perf_counter() - t0
     done = [r for r in reqs if r.done]
     toks = sum(len(r.generated) for r in done)
-    ttfts = [engine.first_token_at[r.rid] - t0 for r in done
-             if r.rid in engine.first_token_at]
     if name is None:
         name = type(engine).__name__
         if isinstance(engine, PagedServingEngine):
             name += f"[{engine.attn_impl}]"
+    # latency percentiles + temporal utilization come from the unified
+    # metrics surface (arrival stamped at Scheduler.add, so TTFT includes
+    # queue wait — the number a latency SLO is written against)
+    m = engine.metrics()
     row = {
         "engine": name,
         "requests_done": len(done),
@@ -251,7 +243,12 @@ def _drive(engine, reqs: List[Request], max_steps: int, cfg,
         "decode_tok_s": engine.decoded_tokens / engine.step_wall_s
         if engine.step_wall_s else 0.0,
         "trace_tok_s": toks / wall if wall else 0.0,
-        "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+        "ttft_mean_s": m["latency.ttft_mean_s"],
+        "ttft_p50": m["latency.ttft_p50_s"],
+        "ttft_p95": m["latency.ttft_p95_s"],
+        "tpot_p50": m["latency.tpot_p50_s"],
+        "tpot_p95": m["latency.tpot_p95_s"],
+        "temporal_util": m["util.temporal"],
         "prefill_traces": engine.prefill_traces,
         "sched_exhausted": int(sched.exhausted),
     }
@@ -640,39 +637,55 @@ def _run_oversubscribe(cfg, params, slots, max_len, n_requests, max_new,
 def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
         n_requests: int = 12, max_new: int = 8, smoke: bool = False,
         seed: int = 0, scenario: str = "all",
-        sys_len: int = 48, spec_k: int = 4) -> List[Dict]:
+        sys_len: int = 48, spec_k: int = 4,
+        trace_out: Optional[str] = None) -> List[Dict]:
     if smoke:       # decode-heavy but small: seconds, not minutes, with
         # enough steps that decode_tok_s isn't measuring scheduler noise
         slots, max_len, n_requests, max_new = 2, 128, 4, 24
         sys_len = 24
     cfg = get_smoke_config(arch)
     params = api.init_params(cfg, jax.random.key(0))
-    rows: List[Dict] = []
-    if scenario in ("mixed", "all"):
-        rows += _run_mixed(cfg, params, slots, max_len, n_requests,
-                           max_new, seed)
-    if scenario in ("shared-prefix", "all"):
-        rows += _run_shared_prefix(cfg, params, slots, max_len,
-                                   n_requests, max_new, seed, sys_len)
-    if scenario in ("speculative", "all"):
-        # speculative decode is a decode-tail story (every verify step
-        # amortizes one full weight+page stream): give it a decode-heavy
-        # trace even when the other scenarios run short ones
-        rows += _run_speculative(cfg, params, slots, max_len,
-                                 n_requests, max(max_new, 24), seed, spec_k)
-    if scenario in ("hybrid", "all"):
-        # windowed/recurrent stacks pin their own arch (recurrentgemma
-        # smoke) and a decode tail long enough to slide past the window
-        rows += _run_hybrid(slots, max_len, max(4, n_requests // 2),
-                            max(max_new, 24), seed)
-    if scenario in ("sharded", "all"):
-        rows += _run_sharded(cfg, params, slots, max_len, n_requests,
-                             max_new, seed)
-    if scenario in ("oversubscribe", "all"):
-        # host-tier oversubscription is a preemption story: decode tails
-        # long enough that capped pools MUST preempt mid-generation
-        rows += _run_oversubscribe(cfg, params, slots, max_len, n_requests,
-                                   max(max_new, 24), seed, sys_len)
+    # --trace-out: install a process-default tracer so EVERY engine the
+    # scenarios construct (they build their own) records into one timeline;
+    # exported as Chrome Trace Event JSON (open in Perfetto / about:tracing)
+    tracer = Tracer(enabled=True) if trace_out else None
+    if tracer is not None:
+        set_default_tracer(tracer)
+    try:
+        rows: List[Dict] = []
+        if scenario in ("mixed", "all"):
+            rows += _run_mixed(cfg, params, slots, max_len, n_requests,
+                               max_new, seed)
+        if scenario in ("shared-prefix", "all"):
+            rows += _run_shared_prefix(cfg, params, slots, max_len,
+                                       n_requests, max_new, seed, sys_len)
+        if scenario in ("speculative", "all"):
+            # speculative decode is a decode-tail story (every verify step
+            # amortizes one full weight+page stream): give it a decode-heavy
+            # trace even when the other scenarios run short ones
+            rows += _run_speculative(cfg, params, slots, max_len,
+                                     n_requests, max(max_new, 24), seed,
+                                     spec_k)
+        if scenario in ("hybrid", "all"):
+            # windowed/recurrent stacks pin their own arch (recurrentgemma
+            # smoke) and a decode tail long enough to slide past the window
+            rows += _run_hybrid(slots, max_len, max(4, n_requests // 2),
+                                max(max_new, 24), seed)
+        if scenario in ("sharded", "all"):
+            rows += _run_sharded(cfg, params, slots, max_len, n_requests,
+                                 max_new, seed)
+        if scenario in ("oversubscribe", "all"):
+            # host-tier oversubscription is a preemption story: decode tails
+            # long enough that capped pools MUST preempt mid-generation
+            rows += _run_oversubscribe(cfg, params, slots, max_len,
+                                       n_requests, max(max_new, 24), seed,
+                                       sys_len)
+    finally:
+        if tracer is not None:
+            set_default_tracer(NULL_TRACER)
+            tracer.export(trace_out)
+            print(f"# wrote {trace_out}: {len(tracer.events())} events "
+                  f"({tracer.dropped_events} dropped)", file=sys.stderr)
     return rows
 
 
@@ -696,11 +709,15 @@ def main() -> None:
                     help="drafted tokens per verify step for speculative")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace (seconds): CI per-PR regression signal")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.JSON",
+                    help="export a Chrome Trace Event JSON of the whole "
+                         "run (open in Perfetto / about:tracing; validate "
+                         "with python -m repro.runtime.trace)")
     args = ap.parse_args()
     rows = run(args.arch, args.slots, args.max_len, args.requests,
                args.max_new, smoke=args.smoke, seed=args.seed,
                scenario=args.scenario, sys_len=args.sys_len,
-               spec_k=args.spec_k)
+               spec_k=args.spec_k, trace_out=args.trace_out)
     print(emit(rows))
 
 

@@ -26,7 +26,7 @@ re-prefilling.
   PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
            [--slots 4] [--requests 8] [--max-new 16] [--prefix-cache]
            [--spec-k 4] [--shards 2] [--replicas 2]
-           [--host-tier --num-pages 12]
+           [--host-tier --num-pages 12] [--trace [trace.json]]
 """
 import argparse
 import time
@@ -37,6 +37,7 @@ from repro.configs import ARCHS, get_smoke_config
 from repro.models import api
 from repro.runtime.router import make_replicas
 from repro.runtime.serving import PagedServingEngine, Request, ServingEngine
+from repro.runtime.trace import Tracer, set_default_tracer
 
 
 def main() -> None:
@@ -70,7 +71,17 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel engine replicas behind a router "
                          "(each gets --shards devices)")
+    ap.add_argument("--trace", nargs="?", const="", default=None,
+                    metavar="TRACE.JSON",
+                    help="record per-tick spans and print the per-phase "
+                         "wall breakdown; with a filename, also export "
+                         "Chrome Trace Event JSON (open in Perfetto)")
     args = ap.parse_args()
+
+    # engines capture the process-default tracer at construction
+    tracer = Tracer(enabled=True) if args.trace is not None else None
+    if tracer is not None:
+        set_default_tracer(tracer)
 
     cfg = get_smoke_config(args.arch)
     print(f"[serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
@@ -150,6 +161,21 @@ def main() -> None:
                   f"{ss['accepted_per_step']:.2f} tokens/request/step, "
                   f"accept rate {ss['accept_rate']:.2f} "
                   f"({ss['spec_accepted']:.0f}/{ss['spec_drafted']:.0f})")
+    m = eng.metrics()
+    print(f"[serve] latency: ttft p50 {m['latency.ttft_p50_s']:.4f}s / "
+          f"p95 {m['latency.ttft_p95_s']:.4f}s, tpot p50 "
+          f"{m['latency.tpot_p50_s']:.4f}s / p95 "
+          f"{m['latency.tpot_p95_s']:.4f}s, temporal util "
+          f"{m['util.temporal']:.2f}")
+    if tracer is not None:
+        set_default_tracer(None)
+        print("[serve] per-phase wall breakdown (nested spans overlap "
+              "their parents):")
+        print(tracer.format_phase_walls())
+        if args.trace:
+            tracer.export(args.trace)
+            print(f"[serve] wrote {args.trace}: {len(tracer.events())} "
+                  f"events — open in Perfetto (https://ui.perfetto.dev)")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt {r.prompt[:4]}... -> "
               f"{r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")

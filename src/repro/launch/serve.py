@@ -4,7 +4,7 @@
       [--slots 4] [--requests 8] [--max-new 12] [--engine paged|dense] \
       [--page-size 16] [--num-pages N] [--paged-attn kernel|gather] \
       [--prefix-cache] [--spec-k K] [--shards M] [--replicas R]
-      [--host-tier]
+      [--host-tier] [--trace [trace.json]]
 
 Every decoder-only stack defaults to the paged KV-cache engine (continuous
 batching over a shared page pool, bucketed prefill) — hybrid stacks
@@ -32,6 +32,7 @@ from repro.models import api
 from repro.runtime.router import make_replicas
 from repro.runtime.serving import (DenseServingEngine, PagedServingEngine,
                                    Request, ServingEngine)
+from repro.runtime.trace import Tracer, set_default_tracer
 
 
 def main() -> None:
@@ -76,7 +77,18 @@ def main() -> None:
                          "engine only)")
     ap.add_argument("--route", choices=["hash", "least_loaded"],
                     default="hash", help="replica routing policy")
+    ap.add_argument("--trace", nargs="?", const="", default=None,
+                    metavar="TRACE.JSON",
+                    help="record per-tick spans and print the per-phase "
+                         "wall breakdown; with a filename, also export "
+                         "Chrome Trace Event JSON (open in Perfetto)")
     args = ap.parse_args()
+
+    # install the tracer BEFORE engine construction: engines capture the
+    # process default at init
+    tracer = Tracer(enabled=True) if args.trace is not None else None
+    if tracer is not None:
+        set_default_tracer(tracer)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     print(f"[launch.serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
@@ -177,6 +189,23 @@ def main() -> None:
                   f"accept rate {ss['accept_rate']:.2f} "
                   f"({ss['spec_accepted']:.0f}/{ss['spec_drafted']:.0f} "
                   f"drafts)")
+    m = eng.metrics()
+    print(f"[launch.serve] latency: ttft p50 {m['latency.ttft_p50_s']:.4f}s "
+          f"/ p95 {m['latency.ttft_p95_s']:.4f}s, tpot p50 "
+          f"{m['latency.tpot_p50_s']:.4f}s / p95 "
+          f"{m['latency.tpot_p95_s']:.4f}s, temporal util "
+          f"{m['util.temporal']:.2f}")
+    if tracer is not None:
+        set_default_tracer(None)
+        print("[launch.serve] per-phase wall breakdown (nested spans "
+              "overlap their parents):")
+        print(tracer.format_phase_walls())
+        if args.trace:
+            tracer.export(args.trace)
+            print(f"[launch.serve] wrote {args.trace}: "
+                  f"{len(tracer.events())} events "
+                  f"({tracer.dropped_events} dropped) — open in Perfetto "
+                  f"(https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -53,6 +53,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.runtime.trace import NULL_TRACER, Tracer
+
 
 def _tree_nbytes(tree) -> int:
     return sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
@@ -73,7 +75,8 @@ class HostPageStore:
     blocks the decode loop. Blob dtypes are whatever the pool stores
     (int8 pools round-trip bitwise)."""
 
-    def __init__(self):
+    def __init__(self, *, tracer: Optional[Tracer] = None):
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self._next = 0
         self._blobs: Dict[int, Any] = {}       # handle -> numpy tree
         self._pending: Dict[int, Any] = {}     # handle -> device tree
@@ -97,9 +100,13 @@ class HostPageStore:
     def drain(self) -> int:
         """Finalize every pending D2H copy; returns how many were."""
         n = len(self._pending)
-        for handle, tree in self._pending.items():
-            self._blobs[handle] = _finalize(tree)
-        self._pending.clear()
+        if not n:
+            return 0
+        with self.trace.span("d2h_finalize", tid="tier",
+                             args={"blobs": n} if self.trace else None):
+            for handle, tree in self._pending.items():
+                self._blobs[handle] = _finalize(tree)
+            self._pending.clear()
         return n
 
     def get(self, handle: int):
@@ -129,8 +136,10 @@ class CopyStream:
     one was started ahead (a prefetch hit), else a demand fetch counted
     as a stall (the decode sweep had to start its own copy)."""
 
-    def __init__(self, store: HostPageStore):
+    def __init__(self, store: HostPageStore, *,
+                 tracer: Optional[Tracer] = None):
         self.store = store
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self._inflight: Dict[int, Any] = {}
         self.prefetch_starts = 0
         self.prefetch_hits = 0
@@ -141,14 +150,20 @@ class CopyStream:
             return
         self._inflight[handle] = jax.device_put(self.store.get(handle))
         self.prefetch_starts += 1
+        self.trace.instant("h2d_prefetch", tid="tier")
 
     def take(self, handle: int):
         dev = self._inflight.pop(handle, None)
         if dev is not None:
             self.prefetch_hits += 1
+            self.trace.instant("h2d_hit", tid="tier")
             return dev
+        # copy-stream stall: the consumer arrived before any prefetch —
+        # this span IS the paper's prefetch-vs-stall accounting on the
+        # timeline (tier.copy_stall_ticks is the counter view of it)
         self.demand_fetches += 1
-        return jax.device_put(self.store.get(handle))
+        with self.trace.span("h2d_demand_fetch", tid="tier"):
+            return jax.device_put(self.store.get(handle))
 
     def cancel(self, handle: int) -> None:
         self._inflight.pop(handle, None)
@@ -189,9 +204,11 @@ class HostTier:
 
     def __init__(self, *, max_bytes: Optional[int] = None,
                  persist_dir: Optional[str] = None,
-                 win_archive_pages: Optional[int] = None):
-        self.store = HostPageStore()
-        self.stream = CopyStream(self.store)
+                 win_archive_pages: Optional[int] = None,
+                 tracer: Optional[Tracer] = None):
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        self.store = HostPageStore(tracer=self.trace)
+        self.stream = CopyStream(self.store, tracer=self.trace)
         self.max_bytes = max_bytes
         self._swaps: Dict[int, SwapRecord] = {}
         # rid -> [(base_block, n_pages, handle)]: slid-out window pages,
@@ -309,6 +326,21 @@ class HostTier:
         self.store.peak_bytes = self.store.bytes_stored
 
     # -- telemetry ---------------------------------------------------------
+
+    #: Every key ``stats()`` returns, in order — the engine's
+    #: ``tier_stats`` zero-fills these when the tier is off so metric /
+    #: CSV key sets never depend on configuration.
+    STAT_KEYS = (
+        "demoted_pages", "promoted_pages", "cache_demotions",
+        "cache_promotions", "swap_outs", "swap_ins", "refused_demotions",
+        "reprefill_tokens_saved", "prefetch_starts", "prefetch_hits",
+        "copy_stall_ticks", "prefetch_hit_rate", "host_bytes",
+        "host_bytes_peak", "win_archived_pages", "win_archive_drops")
+
+    @staticmethod
+    def zero_stats() -> Dict[str, float]:
+        return {k: 0.0 for k in HostTier.STAT_KEYS}
+
     def stats(self) -> Dict[str, float]:
         return {
             "demoted_pages": float(self.demoted_pages),

@@ -48,6 +48,7 @@ import dataclasses
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.runtime.kv_cache import PageAllocator
+from repro.runtime.trace import NULL_TRACER, Tracer
 
 Chunk = Tuple[int, ...]
 
@@ -92,8 +93,10 @@ class PrefixMatch:
 class PrefixCache:
     """Radix tree mapping page-aligned token-id chunks -> physical pages."""
 
-    def __init__(self, alloc: PageAllocator):
+    def __init__(self, alloc: PageAllocator, *,
+                 tracer: Optional[Tracer] = None):
         self.alloc = alloc
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self.page_size = alloc.page_size
         self.root = _Node(None, -1, None)
         self._by_page: Dict[int, _Node] = {}
@@ -137,6 +140,11 @@ class PrefixCache:
         commits the match only once it is actually USED (commit()), so a
         rejected admission retried every scheduler tick doesn't inflate
         hit rates or keep a stalled request's prefix artificially hot."""
+        with self.trace.span("match", tid="prefix"):
+            return self._match(tokens, max_tokens=max_tokens)
+
+    def _match(self, tokens: Sequence[int], *,
+               max_tokens: Optional[int] = None) -> PrefixMatch:
         ps = self.page_size
         limit = len(tokens) if max_tokens is None else min(len(tokens),
                                                            max_tokens)
@@ -231,6 +239,9 @@ class PrefixCache:
         if added:
             self._touch(node)
             self.inserted_pages += added
+            if self.trace:
+                self.trace.instant("insert", tid="prefix",
+                                   args={"pages": added})
         return added
 
     # -- host tier: demote / promote ---------------------------------------
@@ -316,16 +327,17 @@ class PrefixCache:
         number of pages actually freed."""
         protect = protect or set()
         freed = 0
-        while freed < n_pages:
-            leaves = self._evictable(protect)
-            if not leaves:
-                break
-            for node in leaves:
-                if freed >= n_pages:
+        with self.trace.span("evict", tid="prefix"):
+            while freed < n_pages:
+                leaves = self._evictable(protect)
+                if not leaves:
                     break
-                self._drop(node)
-                freed += 1
-                self.evicted_pages += 1
+                for node in leaves:
+                    if freed >= n_pages:
+                        break
+                    self._drop(node)
+                    freed += 1
+                    self.evicted_pages += 1
         return freed
 
     def _drop(self, node: _Node) -> None:
@@ -334,6 +346,18 @@ class PrefixCache:
         del self._by_page[node.page]
         became_free = self.alloc.cache_unpin(node.page)
         assert became_free, "evicted an idle page that was still referenced"
+
+    #: Every key ``stats()`` returns — the engine's ``prefix_stats``
+    #: zero-fills these when sharing is off so metric / CSV key sets
+    #: never depend on configuration.
+    STAT_KEYS = (
+        "lookups", "hits", "hit_rate", "hit_tokens", "shared_token_frac",
+        "full_page_hits", "partial_hits", "inserted_pages",
+        "evicted_pages", "cached_pages", "host_nodes")
+
+    @staticmethod
+    def zero_stats() -> Dict[str, float]:
+        return {k: 0.0 for k in PrefixCache.STAT_KEYS}
 
     def stats(self) -> Dict[str, float]:
         return {

@@ -100,6 +100,11 @@ class ReplicaRouter:
         tick, so a momentarily-full replica queues rather than drops)."""
         i = self._pick(req)
         self.routed[i] += 1
+        tr = getattr(self.engines[i], "trace", None)
+        if tr:
+            tr.instant("dispatch", tid="router",
+                       args={"rid": req.rid, "replica": i,
+                             "policy": self.policy})
         self.scheds[i].add(req)
 
     add = submit                      # Scheduler-compatible spelling

@@ -28,6 +28,7 @@ from collections import deque
 from typing import Deque, Optional
 
 from repro.runtime.serving import Request
+from repro.runtime.trace import NULL_TRACER
 
 
 class SchedulerExhausted(RuntimeError):
@@ -46,6 +47,12 @@ class Scheduler:
         self.exhausted = False          # drain hit its budget with work left
 
     def add(self, req: Request) -> None:
+        # stamp arrival at ENQUEUE so TTFT includes queue wait, not just
+        # the admission-to-first-token gap (getattr-guarded: tests drive
+        # the scheduler with stub engines that have no metrics mixin)
+        note = getattr(self.engine, "note_arrival", None)
+        if note is not None:
+            note(req.rid)
         self.pending.append(req)
 
     def _admit(self) -> None:
@@ -71,18 +78,24 @@ class Scheduler:
         prefetch hook hands the engine's host-tier streamer the queue
         snapshot so swap-ins and radix promotions for NEXT tick's
         admissions start their H2D copies under THIS tick's decode."""
-        self._admit()
-        prefetch = getattr(self.engine, "prefetch_pending", None)
-        if prefetch is not None:
-            prefetch(list(self.pending))
-        evicted = self.engine.step() or []
-        if evicted:
-            self.preempted += len(evicted)
-            # resume order: oldest evictee first, ahead of fresh arrivals.
-            # evicted[] is youngest-first, so pushing it front-to-back
-            # leaves the oldest evictee at the head of the queue.
-            for r in evicted:
-                self.pending.appendleft(r)
+        tr = getattr(self.engine, "trace", NULL_TRACER)
+        with tr.span("tick", tid="sched",
+                     args={"pending": len(self.pending)} if tr else None):
+            with tr.span("admit_loop", tid="sched"):
+                self._admit()
+            prefetch = getattr(self.engine, "prefetch_pending", None)
+            if prefetch is not None:
+                with tr.span("prefetch", tid="sched"):
+                    prefetch(list(self.pending))
+            evicted = self.engine.step() or []
+            if evicted:
+                self.preempted += len(evicted)
+                # resume order: oldest evictee first, ahead of fresh
+                # arrivals. evicted[] is youngest-first, so pushing it
+                # front-to-back leaves the oldest evictee at the head of
+                # the queue.
+                for r in evicted:
+                    self.pending.appendleft(r)
         self.steps += 1
 
     def drain(self, max_steps: int = 10_000, *,

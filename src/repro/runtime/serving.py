@@ -94,6 +94,7 @@ from repro.runtime.drafter import ngram_propose
 from repro.runtime.host_tier import HostTier, SwapRecord, _tree_nbytes
 from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PoolStats
 from repro.runtime.prefix_cache import PrefixCache, PrefixMatch
+from repro.runtime.trace import Tracer, default_tracer, percentile
 
 
 @dataclasses.dataclass
@@ -155,6 +156,180 @@ def _run_to_completion(engine, requests: List[Request],
     return [r for r in requests if r.done]
 
 
+class ServingMetricsMixin:
+    """Shared observability layer for both engines (ISSUE 8): request
+    lifecycle bookkeeping (arrival / first token / last token), the timed
+    ``submit``/``step`` wrappers that feed the tracer and the wall-clock
+    accumulators, and the unified ``metrics()`` snapshot.
+
+    The engine class provides ``_submit`` / ``_step`` (the untimed
+    implementations) plus the five ``*_stats()`` methods; the mixin owns
+    everything that used to be duplicated between ``DenseServingEngine``
+    and ``PagedServingEngine`` — ``decode_steps`` / ``decoded_tokens`` /
+    ``step_wall_s`` / ``first_token_at`` — and adds:
+
+    * ``tick_wall_s`` — wall time of whole decode ticks (only ticks with
+      live slots count, so an idle scheduler doesn't dilute the ratio);
+    * ``prefill_wall_s`` — wall time of successful admissions;
+    * **temporal utilization** = ``step_wall_s / tick_wall_s``: the
+      fraction of each decode tick spent in the device program (dispatch
+      + the one host sync) rather than host-side bookkeeping, draft,
+      rollback or tier traffic — the serving-level analogue of the
+      paper's temporal-utilization metric (compute cycles over total
+      cycles; Fig. 6's 2.12-2.94x win is this ratio moved by prefetch).
+
+    TTFT is arrival -> first emitted token, where *arrival* is the
+    earliest of ``Scheduler.add`` (queue wait included) and the first
+    ``submit`` (direct-submit callers). TPOT is (last - first) /
+    (tokens - 1) per request with >= 2 tokens. Percentiles are computed
+    on demand in ``metrics()``; per-request stamps live in plain dicts.
+    """
+
+    def _init_metrics(self, tracer: Optional[Tracer]) -> None:
+        """Engine-constructor hook: install the tracer (falling back to
+        the process default — ``trace.set_default_tracer`` — so bench
+        harnesses can turn on tracing for every engine they build) and
+        zero every counter the mixin owns."""
+        self.trace = tracer if tracer is not None else default_tracer()
+        self.decode_steps = 0
+        self.decoded_tokens = 0
+        self.step_wall_s = 0.0        # device dispatch + sync, decode only
+        self.tick_wall_s = 0.0        # whole decode ticks (live slots only)
+        self.prefill_wall_s = 0.0     # successful admissions (prefill wall)
+        self.first_token_at: Dict[int, float] = {}
+        self._arrival_at: Dict[int, float] = {}
+        self._last_token_at: Dict[int, float] = {}
+        self._tokens_emitted: Dict[int, int] = {}
+
+    # -- request lifecycle -------------------------------------------------
+
+    def note_arrival(self, rid: int) -> None:
+        """Stamp a request's arrival (idempotent — the earliest stamp
+        wins). ``Scheduler.add`` calls this on enqueue so TTFT includes
+        queue wait; ``submit`` calls it too as the fallback for callers
+        that drive the engine directly."""
+        if rid not in self._arrival_at:
+            self._arrival_at[rid] = time.perf_counter()
+            self.trace.begin_async("request", rid)
+
+    def _note_emitted(self, rid: int, n: int = 1) -> None:
+        now = time.perf_counter()
+        if rid not in self.first_token_at:
+            self._arrival_at.setdefault(rid, now)
+            self.first_token_at[rid] = now
+            if self.trace:
+                self.trace.instant("first_token", args={"rid": rid})
+        self._last_token_at[rid] = now
+        self._tokens_emitted[rid] = self._tokens_emitted.get(rid, 0) + n
+
+    def _note_finished(self, rid: int) -> None:
+        self.trace.end_async("request", rid)
+
+    # -- timed wrappers ----------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Admit ``req`` (see the engine's ``_submit`` for semantics),
+        timed and traced."""
+        self.note_arrival(req.rid)
+        tr = self.trace
+        t0 = time.perf_counter()
+        with tr.span("admit", args={"rid": req.rid} if tr else None):
+            ok = self._submit(req)
+        if ok:
+            self.prefill_wall_s += time.perf_counter() - t0
+        return ok
+
+    def step(self) -> List[Request]:
+        """Advance every live slot (see the engine's ``_step``), timed and
+        traced. Idle ticks (no live slots — e.g. everything still queued)
+        run untimed so ``tick_wall_s`` divides only real decode work."""
+        if not self.has_live():
+            return self._step()
+        t0 = time.perf_counter()
+        with self.trace.span("decode_tick"):
+            out = self._step()
+        self.tick_wall_s += time.perf_counter() - t0
+        return out
+
+    # -- the unified snapshot ----------------------------------------------
+
+    def _latency_samples(self):
+        ttfts = [t - self._arrival_at[rid]
+                 for rid, t in self.first_token_at.items()
+                 if rid in self._arrival_at]
+        tpots = []
+        for rid, n in self._tokens_emitted.items():
+            if n > 1 and rid in self.first_token_at:
+                tpots.append((self._last_token_at[rid]
+                              - self.first_token_at[rid]) / (n - 1))
+        return ttfts, tpots
+
+    def metrics(self) -> Dict[str, object]:
+        """One flat snapshot of everything, under stable namespaced keys:
+        ``engine.*`` (throughput counters), ``latency.*`` (TTFT / TPOT
+        percentiles, seconds), ``util.*`` (wall-clock split + temporal
+        utilization), and every subsystem's stats under ``pool.*`` /
+        ``spec.*`` / ``prefix.*`` / ``tier.*`` / ``shard.*``. The key set
+        is IDENTICAL across engines and configurations — subsystems that
+        are off report zeros, never missing keys — so CSV columns and
+        dashboards line up between runs (tests/test_metrics.py)."""
+        ttfts, tpots = self._latency_samples()
+        tick = self.tick_wall_s
+        m: Dict[str, object] = {
+            "engine.kind": type(self).__name__,
+            "engine.decode_steps": float(self.decode_steps),
+            "engine.decoded_tokens": float(self.decoded_tokens),
+            "engine.prefill_traces": float(self.prefill_traces),
+            "latency.requests": float(len(ttfts)),
+            "latency.ttft_p50_s": percentile(ttfts, 0.50),
+            "latency.ttft_p95_s": percentile(ttfts, 0.95),
+            "latency.ttft_mean_s": (sum(ttfts) / len(ttfts)
+                                    if ttfts else 0.0),
+            "latency.tpot_p50_s": percentile(tpots, 0.50),
+            "latency.tpot_p95_s": percentile(tpots, 0.95),
+            "latency.tpot_mean_s": (sum(tpots) / len(tpots)
+                                    if tpots else 0.0),
+            "util.step_wall_s": self.step_wall_s,
+            "util.tick_wall_s": tick,
+            "util.prefill_wall_s": self.prefill_wall_s,
+            "util.temporal": self.step_wall_s / tick if tick > 0 else 0.0,
+        }
+        for ns, stats in (
+                ("pool", dataclasses.asdict(self.pool_stats())),
+                ("spec", self.spec_stats()),
+                ("prefix", self.prefix_stats()),
+                ("tier", self.tier_stats()),
+                ("shard", self.shard_stats())):
+            for k, v in stats.items():
+                m[f"{ns}.{k}"] = float(v) if isinstance(v, int) else v
+        return m
+
+    def reset_metrics(self) -> None:
+        """The single warm-up reset point (benchmarks call this between
+        the cache-warming pass and the timed replay): zero every latency
+        and wall-clock counter the mixin owns, then the engine's own
+        subsystem counters (``_reset_subsystem_counters``). Trace events
+        are NOT discarded — a ``reset_metrics`` instant marks the
+        boundary instead, so a trace of warm-up + replay stays one
+        coherent timeline. jit trace caches (``prefill_traces`` /
+        seen-bucket sets) survive too: retrace identity is a lifetime
+        fact, not a per-phase rate."""
+        self.decode_steps = 0
+        self.decoded_tokens = 0
+        self.step_wall_s = 0.0
+        self.tick_wall_s = 0.0
+        self.prefill_wall_s = 0.0
+        self.first_token_at.clear()
+        self._arrival_at.clear()
+        self._last_token_at.clear()
+        self._tokens_emitted.clear()
+        self.trace.instant("reset_metrics")
+        self._reset_subsystem_counters()
+
+    def _reset_subsystem_counters(self) -> None:
+        pass                          # engines with extra counters override
+
+
 def ServingEngine(cfg, params, **kwargs):
     """Engine factory: paged engine for every servable block pattern —
     full attention, sliding-window (local_attn) and recurrent (ssm/rglru)
@@ -203,7 +378,7 @@ def ServingEngine(cfg, params, **kwargs):
 # ===========================================================================
 
 
-class PagedServingEngine:
+class PagedServingEngine(ServingMetricsMixin):
     """Continuous batching over a paged KV cache with bucketed prefill."""
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
@@ -213,7 +388,8 @@ class PagedServingEngine:
                  attn_impl: str = "kernel", prefix_cache: bool = False,
                  spec_k: int = 0, spec_ngram: int = 3,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 host_tier: bool = False):
+                 host_tier: bool = False,
+                 tracer: Optional[Tracer] = None):
         if not _pageable(cfg):
             raise ValueError(
                 f"paged serving cannot host pattern "
@@ -263,6 +439,7 @@ class PagedServingEngine:
         self.rules, self.eos_id = rules, eos_id
         self.temperature = temperature
         self.key = jax.random.key(seed)
+        self._init_metrics(tracer)    # tracer + shared latency counters
 
         # tensor parallelism: one TPPlan per (config, mesh) decides what
         # shards (parallel/tp.py) — KV-head pools and attn/mlp weights over
@@ -285,11 +462,13 @@ class PagedServingEngine:
         # default: sharing keeps refcount-0 pages cached in the pool, which
         # callers that meter allocated_pages must opt into.
         self.prefix: Optional[PrefixCache] = \
-            PrefixCache(self.alloc) if prefix_cache else None
+            PrefixCache(self.alloc, tracer=self.trace) \
+            if prefix_cache else None
         # two-tier memory hierarchy: host-RAM page store + copy stream
         # (runtime/host_tier.py). Off by default — demotion keeps blobs
         # alive in host RAM, which callers that meter memory opt into.
-        self.tier: Optional[HostTier] = HostTier() if host_tier else None
+        self.tier: Optional[HostTier] = \
+            HostTier(tracer=self.trace) if host_tier else None
         # pool row 0 is the scratch page -> usable + 1 physical rows
         self.cache = api.paged_cache_init(cfg, slots, usable + 1, page_size)
         if self.tp is not None:
@@ -322,12 +501,10 @@ class PagedServingEngine:
         self.spec_k = spec_k
         self.spec_ngram = spec_ngram
 
-        # telemetry
+        # telemetry (decode_steps / decoded_tokens / wall clocks /
+        # first_token_at live in ServingMetricsMixin, shared with the
+        # dense engine)
         self.prefill_traces = 0               # == number of length buckets
-        self.decode_steps = 0
-        self.decoded_tokens = 0
-        self.step_wall_s = 0.0                # wall time inside step() only
-        self.first_token_at: Dict[int, float] = {}
         self.prompt_tokens = 0                # logical prompt tokens admitted
         self.prefilled_tokens = 0             # tokens actually prefilled
         self.cow_copies = 0                   # device page copies (CoW)
@@ -772,7 +949,7 @@ class PagedServingEngine:
             need += self.win_pages_bound(n_tokens)
         return need
 
-    def submit(self, req: Request) -> bool:
+    def _submit(self, req: Request) -> bool:
         """Prefill `req` into a free slot. False if out of slots or pages
         (admission rejection — never corrupts a live neighbor's pages).
 
@@ -791,7 +968,8 @@ class PagedServingEngine:
             # live when preempted always satisfies it (pos <= max_len - 2,
             # generation budget left), and the guard's re-prefill footprint
             # math doesn't describe a swap-in.
-            return self._swap_in(req, slot)
+            with self.trace.span("swap_in"):
+                return self._swap_in(req, slot)
         toks = list(req.prompt) + list(req.generated)   # resume-on-preempt
         L = len(toks)
         remaining = req.max_new - len(req.generated)
@@ -805,6 +983,7 @@ class PagedServingEngine:
             # with whatever it has, rather than crash the loop or let the
             # scheduler retry an admission that can never succeed
             req.done = True
+            self._note_finished(req.rid)
             return True
 
         shared: List[int] = []
@@ -819,7 +998,8 @@ class PagedServingEngine:
                 # device pages (H2D, prefetched a tick ahead when the
                 # scheduler showed us this request) instead of letting the
                 # match silently shrink to the device-resident prefix
-                m = self._promote_match(m)
+                with self.trace.span("promote_match"):
+                    m = self._promote_match(m)
             shared = m.pages
             partial_page, partial_tokens = m.partial_page, m.partial_tokens
         need_fresh = (self.alloc.pages_for(L) - len(shared)
@@ -875,6 +1055,7 @@ class PagedServingEngine:
             self.cache = self._cow_fn(self.cache, jnp.int32(partial_page),
                                       jnp.int32(dst))
             self.cow_copies += 1
+            self.trace.instant("cow_copy", tid="prefix")
 
         row = np.zeros((self.max_blocks,), np.int32)
         row[: len(table)] = table
@@ -894,15 +1075,19 @@ class PagedServingEngine:
             tok_arr = np.zeros((1, bucket), np.int32)
             tok_arr[0, :L] = toks
             self._prefill_for(bucket)
-            (self.cache, self.block_table, self.win_table, self.pos,
-             self.cur_tok, self.live_mask, self.gen_cnt, self.max_new_arr,
-             tok, self.key) = self._prefill_fn(
-                self.params, self.cache, self.block_table, self.win_table,
-                self.pos, self.cur_tok, self.live_mask, self.gen_cnt,
-                self.max_new_arr, jnp.asarray(tok_arr), jnp.int32(L),
-                jnp.asarray(pages), jnp.asarray(pages_win),
-                jnp.asarray(row), jnp.asarray(row_win), jnp.int32(slot),
-                jnp.int32(remaining), self.key)
+            tr = self.trace
+            with tr.span("prefill_dispatch",
+                         args={"bucket": bucket} if tr else None):
+                (self.cache, self.block_table, self.win_table, self.pos,
+                 self.cur_tok, self.live_mask, self.gen_cnt,
+                 self.max_new_arr, tok, self.key) = self._prefill_fn(
+                    self.params, self.cache, self.block_table,
+                    self.win_table, self.pos, self.cur_tok, self.live_mask,
+                    self.gen_cnt, self.max_new_arr, jnp.asarray(tok_arr),
+                    jnp.int32(L), jnp.asarray(pages),
+                    jnp.asarray(pages_win), jnp.asarray(row),
+                    jnp.asarray(row_win), jnp.int32(slot),
+                    jnp.int32(remaining), self.key)
             self.prefilled_tokens += L
         else:
             suffix = toks[prefix_len:]
@@ -927,16 +1112,20 @@ class PagedServingEngine:
             tok_arr = np.zeros((1, bucket), np.int32)
             tok_arr[0, : len(suffix)] = suffix
             self._prefill_for(("shared", bucket, npb))
-            (self.cache, self.block_table, self.pos, self.cur_tok,
-             self.live_mask, self.gen_cnt, self.max_new_arr, tok,
-             self.key) = self._prefill_shared_fn(
-                self.params, self.cache, self.block_table, self.pos,
-                self.cur_tok, self.live_mask, self.gen_cnt,
-                self.max_new_arr, jnp.asarray(tok_arr),
-                jnp.int32(len(suffix)), jnp.asarray(pages),
-                jnp.int32(prefix_len), jnp.asarray(phys),
-                jnp.asarray(rows), jnp.asarray(row), jnp.int32(slot),
-                jnp.int32(remaining), self.key)
+            tr = self.trace
+            with tr.span("prefill_dispatch",
+                         args={"bucket": bucket, "shared": prefix_len}
+                         if tr else None):
+                (self.cache, self.block_table, self.pos, self.cur_tok,
+                 self.live_mask, self.gen_cnt, self.max_new_arr, tok,
+                 self.key) = self._prefill_shared_fn(
+                    self.params, self.cache, self.block_table, self.pos,
+                    self.cur_tok, self.live_mask, self.gen_cnt,
+                    self.max_new_arr, jnp.asarray(tok_arr),
+                    jnp.int32(len(suffix)), jnp.asarray(pages),
+                    jnp.int32(prefix_len), jnp.asarray(phys),
+                    jnp.asarray(rows), jnp.asarray(row), jnp.int32(slot),
+                    jnp.int32(remaining), self.key)
             self.prefilled_tokens += len(suffix)
         self.prompt_tokens += L
         if self.prefix is not None:
@@ -951,8 +1140,7 @@ class PagedServingEngine:
         self._admit_seq[slot] = self._admit_counter
         t = int(tok)
         req.generated.append(t)
-        if req.rid not in self.first_token_at:
-            self.first_token_at[req.rid] = time.perf_counter()
+        self._note_emitted(req.rid)
         if (t == self.eos_id or len(req.generated) >= req.max_new):
             self._finish_slot(slot)
         return True
@@ -972,7 +1160,9 @@ class PagedServingEngine:
         return req
 
     def _finish_slot(self, slot: int) -> None:
-        self._release_slot(slot).done = True
+        req = self._release_slot(slot)
+        req.done = True
+        self._note_finished(req.rid)
 
     def _evict_slot(self, slot: int) -> Request:
         """Preempt destructively: reclaim pages, return the request for
@@ -997,9 +1187,12 @@ class PagedServingEngine:
         if not victims:
             return False
         youngest = max(victims, key=lambda s: self._admit_seq[s])
-        preempted.append(self._swap_out_slot(youngest)
-                         if self.tier is not None
-                         else self._evict_slot(youngest))
+        if self.tier is not None:
+            with self.trace.span("swap_out"):
+                preempted.append(self._swap_out_slot(youngest))
+        else:
+            self.trace.instant("preempt")
+            preempted.append(self._evict_slot(youngest))
         return True
 
     # -- host tier: demote / promote / swap --------------------------------
@@ -1186,10 +1379,12 @@ class PagedServingEngine:
                         self.tier.stream.prefetch(node.host)
 
     def tier_stats(self) -> Dict[str, float]:
-        """Host-tier telemetry (all zeros when the tier is off)."""
+        """Host-tier telemetry. The key set is identical whether the tier
+        is on or off (``HostTier.zero_stats`` fills zeros) so downstream
+        CSV columns never shift with configuration."""
         d: Dict[str, float] = {"host_tier": float(self.tier is not None)}
-        if self.tier is not None:
-            d.update(self.tier.stats())
+        d.update(self.tier.stats() if self.tier is not None
+                 else HostTier.zero_stats())
         return d
 
     def ensure_decode_capacity(self, n_tokens: int = 1) -> List[Request]:
@@ -1303,7 +1498,7 @@ class PagedServingEngine:
             self.win_table = self.win_table.at[
                 slot, base:base + n].set(SCRATCH_PAGE)
 
-    def step(self) -> List[Request]:
+    def _step(self) -> List[Request]:
         """Advance every live slot: one device program, one host sync.
         With spec_k > 0 this is a speculative verify step emitting up to
         spec_k + 1 tokens per request; otherwise the plain one-token step.
@@ -1311,23 +1506,29 @@ class PagedServingEngine:
         submit/step loop must never cross a page boundary unallocated —
         that write would land on the scratch page and silently corrupt
         the request); returns any requests preempted by that top-up, for
-        the caller to resubmit."""
+        the caller to resubmit. (Callers use ``step()`` — the mixin's
+        timed wrapper.)"""
+        tr = self.trace
         if self.tier is not None:
             # the copy-stream contract's visibility point: pending D2H
             # copies finalize exactly once per decode tick
-            self.tier.drain()
+            with tr.span("tier_drain"):
+                self.tier.drain()
         if self.spec_k:
             return self._step_speculative()
         if not any(r is not None for r in self.live):
             return []
-        evicted = self.ensure_decode_capacity()
+        with tr.span("ensure_capacity"):
+            evicted = self.ensure_decode_capacity()
         t0 = time.perf_counter()
-        (self.cache, self.cur_tok, self.pos, self.gen_cnt, self.live_mask,
-         done_d, toks_d, self.key) = self._step_fn(
-            self.params, self.cache, self.block_table, self.win_table,
-            self.cur_tok, self.pos, self.live_mask, self.gen_cnt,
-            self.max_new_arr, self.key)
-        toks, done = jax.device_get((toks_d, done_d))
+        with tr.span("device_dispatch"):
+            (self.cache, self.cur_tok, self.pos, self.gen_cnt,
+             self.live_mask, done_d, toks_d, self.key) = self._step_fn(
+                self.params, self.cache, self.block_table, self.win_table,
+                self.cur_tok, self.pos, self.live_mask, self.gen_cnt,
+                self.max_new_arr, self.key)
+        with tr.span("host_sync"):
+            toks, done = jax.device_get((toks_d, done_d))
         self.step_wall_s += time.perf_counter() - t0
         self.decode_steps += 1
         for i, r in enumerate(self.live):
@@ -1336,8 +1537,13 @@ class PagedServingEngine:
             r.generated.append(int(toks[i]))
             self._pos_host[i] += 1
             self.decoded_tokens += 1
+            self._note_emitted(r.rid)
             if done[i]:
                 self._finish_slot(i)
+        if tr:
+            tr.counter("pool_pages", {
+                "allocated": float(self.alloc.allocated_pages),
+                "free": float(self.alloc.free_pages)})
         return evicted
 
     def _step_speculative(self) -> List[Request]:
@@ -1356,96 +1562,106 @@ class PagedServingEngine:
         engine's token-for-token."""
         if not any(r is not None for r in self.live):
             return []
+        tr = self.trace
         T = self.spec_k + 1
-        evicted = self.ensure_decode_capacity(T)
+        with tr.span("ensure_capacity"):
+            evicted = self.ensure_decode_capacity(T)
         t0 = time.perf_counter()
         tok_block = np.zeros((self.slots, T), np.int32)
         n_draft = [0] * self.slots
-        for s, r in enumerate(self.live):
-            if r is None:
-                continue
-            ctx = r.prompt + r.generated
-            tok_block[s, 0] = ctx[-1]     # current token, not yet in cache
-            d = ngram_propose(ctx, self.spec_k, max_ngram=self.spec_ngram)
-            tok_block[s, 1:1 + len(d)] = d
-            n_draft[s] = len(d)
-            self.spec_drafted += len(d)
-            self.spec_slot_steps += 1
-        self.cache, toks_d = self._spec_fn(
-            self.params, self.cache, self.block_table, self.win_table,
-            jnp.asarray(tok_block), jnp.asarray(self._pos_host, jnp.int32))
-        greedy = np.asarray(jax.device_get(toks_d))   # (slots, T): one sync
+        with tr.span("draft"):
+            for s, r in enumerate(self.live):
+                if r is None:
+                    continue
+                ctx = r.prompt + r.generated
+                tok_block[s, 0] = ctx[-1]  # current token, not yet in cache
+                d = ngram_propose(ctx, self.spec_k,
+                                  max_ngram=self.spec_ngram)
+                tok_block[s, 1:1 + len(d)] = d
+                n_draft[s] = len(d)
+                self.spec_drafted += len(d)
+                self.spec_slot_steps += 1
+        with tr.span("device_dispatch"):
+            self.cache, toks_d = self._spec_fn(
+                self.params, self.cache, self.block_table, self.win_table,
+                jnp.asarray(tok_block),
+                jnp.asarray(self._pos_host, jnp.int32))
+        with tr.span("host_sync"):
+            greedy = np.asarray(jax.device_get(toks_d))  # (slots,T): 1 sync
         self.step_wall_s += time.perf_counter() - t0
         self.decode_steps += 1
-        survivors = []            # (slot, new_pos, emitted, cur_tok) rows
-        accept_idx = np.zeros((self.slots,), np.int32)
-        for s, r in enumerate(self.live):
-            if r is None:
-                continue
-            pos0 = self._pos_host[s]
-            a = 0                          # accepted drafts
-            while a < n_draft[s] and greedy[s, a] == tok_block[s, a + 1]:
-                a += 1
-            # emit greedy rows 0..a, applying the T=1 stop conditions in
-            # emission order (eos / generation budget / context cap) —
-            # rows past the first stop are discarded, exactly as the
-            # plain engine would never have produced them
-            finished = False
-            m = 0
-            for j in range(a + 1):
-                t = int(greedy[s, j])
-                r.generated.append(t)
-                m += 1
-                self.decoded_tokens += 1
-                if (t == self.eos_id or len(r.generated) >= r.max_new
-                        or pos0 + j + 1 >= self.max_len - 1):
-                    finished = True
-                    break
-            self.spec_accepted += m - 1
-            accept_idx[s] = m - 1          # recurrent state after row m-1
-            if finished:
-                self._finish_slot(s)       # frees every page incl. drafts
-                continue
-            # rollback: disown the whole pages past the accept point and
-            # republish their table slots as scratch on device — full and
-            # window tables alike (a rejected row may have crossed a page
-            # boundary in either)
-            if self.has_full:
-                dropped = self.alloc.truncate_to(r.rid, pos0 + m)
-                if dropped:
-                    keep = len(self.alloc.block_table(r.rid))
-                    self.block_table = self.block_table.at[
-                        s, keep:keep + dropped].set(SCRATCH_PAGE)
-            if self.has_win:
-                wrid = _win_rid(r.rid)
-                dropped = self.alloc.truncate_to(wrid, pos0 + m)
-                if dropped:
-                    keep = (self.alloc.base_blocks(wrid)
-                            + len(self.alloc.block_table(wrid)))
-                    self.win_table = self.win_table.at[
-                        s, keep:keep + dropped].set(SCRATCH_PAGE)
-            self._pos_host[s] = pos0 + m
-            survivors.append((s, pos0 + m, m, int(r.generated[-1])))
-        if self._select_fn is not None:
-            # collapse the verify step's checkpointed recurrent states
-            # (T axis) to each slot's accepted row — the state-slot
-            # analogue of the page rollback above. Must run even when
-            # every slot finished: the next step's trace expects plain
-            # state shapes.
-            self.cache = self._select_fn(self.cache,
-                                         jnp.asarray(accept_idx))
-        if survivors:
-            # device mirrors (pos / gen / cur_tok) stay in sync — so
-            # telemetry and a switch back to the T=1 path keep working —
-            # via ONE batched update per array per step, not one dispatch
-            # per slot
-            idx = np.array([u[0] for u in survivors])
-            self.pos = self.pos.at[idx].set(
-                np.array([u[1] for u in survivors], np.int32))
-            self.gen_cnt = self.gen_cnt.at[idx].add(
-                np.array([u[2] for u in survivors], np.int32))
-            self.cur_tok = self.cur_tok.at[idx, 0].set(
-                np.array([u[3] for u in survivors], np.int32))
+        with tr.span("accept_rollback"):
+            survivors = []        # (slot, new_pos, emitted, cur_tok) rows
+            accept_idx = np.zeros((self.slots,), np.int32)
+            for s, r in enumerate(self.live):
+                if r is None:
+                    continue
+                pos0 = self._pos_host[s]
+                a = 0                      # accepted drafts
+                while a < n_draft[s] \
+                        and greedy[s, a] == tok_block[s, a + 1]:
+                    a += 1
+                # emit greedy rows 0..a, applying the T=1 stop conditions
+                # in emission order (eos / generation budget / context
+                # cap) — rows past the first stop are discarded, exactly
+                # as the plain engine would never have produced them
+                finished = False
+                m = 0
+                for j in range(a + 1):
+                    t = int(greedy[s, j])
+                    r.generated.append(t)
+                    m += 1
+                    self.decoded_tokens += 1
+                    if (t == self.eos_id or len(r.generated) >= r.max_new
+                            or pos0 + j + 1 >= self.max_len - 1):
+                        finished = True
+                        break
+                self.spec_accepted += m - 1
+                accept_idx[s] = m - 1      # recurrent state after row m-1
+                self._note_emitted(r.rid, m)
+                if finished:
+                    self._finish_slot(s)   # frees every page incl. drafts
+                    continue
+                # rollback: disown the whole pages past the accept point
+                # and republish their table slots as scratch on device —
+                # full and window tables alike (a rejected row may have
+                # crossed a page boundary in either)
+                if self.has_full:
+                    dropped = self.alloc.truncate_to(r.rid, pos0 + m)
+                    if dropped:
+                        keep = len(self.alloc.block_table(r.rid))
+                        self.block_table = self.block_table.at[
+                            s, keep:keep + dropped].set(SCRATCH_PAGE)
+                if self.has_win:
+                    wrid = _win_rid(r.rid)
+                    dropped = self.alloc.truncate_to(wrid, pos0 + m)
+                    if dropped:
+                        keep = (self.alloc.base_blocks(wrid)
+                                + len(self.alloc.block_table(wrid)))
+                        self.win_table = self.win_table.at[
+                            s, keep:keep + dropped].set(SCRATCH_PAGE)
+                self._pos_host[s] = pos0 + m
+                survivors.append((s, pos0 + m, m, int(r.generated[-1])))
+            if self._select_fn is not None:
+                # collapse the verify step's checkpointed recurrent states
+                # (T axis) to each slot's accepted row — the state-slot
+                # analogue of the page rollback above. Must run even when
+                # every slot finished: the next step's trace expects plain
+                # state shapes.
+                self.cache = self._select_fn(self.cache,
+                                             jnp.asarray(accept_idx))
+            if survivors:
+                # device mirrors (pos / gen / cur_tok) stay in sync — so
+                # telemetry and a switch back to the T=1 path keep working
+                # — via ONE batched update per array per step, not one
+                # dispatch per slot
+                idx = np.array([u[0] for u in survivors])
+                self.pos = self.pos.at[idx].set(
+                    np.array([u[1] for u in survivors], np.int32))
+                self.gen_cnt = self.gen_cnt.at[idx].add(
+                    np.array([u[2] for u in survivors], np.int32))
+                self.cur_tok = self.cur_tok.at[idx, 0].set(
+                    np.array([u[3] for u in survivors], np.int32))
         return evicted
 
     def spec_stats(self) -> Dict[str, float]:
@@ -1515,9 +1731,28 @@ class PagedServingEngine:
                                    if self.prompt_tokens else 0.0),
             "cow_copies": float(self.cow_copies),
         }
-        if self.prefix is not None:
-            d.update(self.prefix.stats())
+        d.update(self.prefix.stats() if self.prefix is not None
+                 else PrefixCache.zero_stats())
         return d
+
+    def _reset_subsystem_counters(self) -> None:
+        """reset_metrics() tail: zero the paged engine's own telemetry and
+        every enabled subsystem's counters (allocator peaks rebase to the
+        current allocation; radix/tier contents survive — only rates
+        reset)."""
+        self.prompt_tokens = 0
+        self.prefilled_tokens = 0
+        self.cow_copies = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_slot_steps = 0
+        self.win_recycled_pages = 0
+        self.alloc.peak_pages = self.alloc.allocated_pages
+        self.alloc.share_events = 0
+        if self.prefix is not None:
+            self.prefix.reset_hit_counters()
+        if self.tier is not None:
+            self.tier.reset_counters()
 
     def check(self) -> None:
         """Engine-level pool invariants: the allocator's shared-page-aware
@@ -1553,7 +1788,7 @@ class PagedServingEngine:
 # ===========================================================================
 
 
-class DenseServingEngine:
+class DenseServingEngine(ServingMetricsMixin):
     """Fixed-slot batch: each slot owns a dense max_len cache lane. Kept as
     the measured baseline for the paged engine and as the serving path for
     stacks with recurrent state. Retraces prefill per distinct prompt
@@ -1561,12 +1796,14 @@ class DenseServingEngine:
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  rules: Rules = NO_RULES, eos_id: int = -1,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 tracer: Optional[Tracer] = None):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.rules, self.eos_id = rules, eos_id
         self.temperature = temperature
         self.key = jax.random.key(seed)
+        self._init_metrics(tracer)    # tracer + shared latency counters
         self.cache = api.cache_init(cfg, slots, max_len)
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
@@ -1578,10 +1815,8 @@ class DenseServingEngine:
             lambda p, b: api.prefill(cfg, p, b, rules=rules,
                                      max_len=max_len))
         self._seen_lengths: set = set()
-        self.decode_steps = 0
-        self.decoded_tokens = 0
-        self.step_wall_s = 0.0                # wall time inside step() only
-        self.first_token_at: Dict[int, float] = {}
+        self.prompt_tokens = 0
+        self.prefilled_tokens = 0     # == prompt_tokens (no sharing here)
 
     @property
     def prefill_traces(self) -> int:
@@ -1594,7 +1829,7 @@ class DenseServingEngine:
                 return i
         return None
 
-    def submit(self, req: Request) -> bool:
+    def _submit(self, req: Request) -> bool:
         """Prefill `req` and install it into a free slot. False if full."""
         slot = self._free_slot()
         if slot is None:
@@ -1615,15 +1850,20 @@ class DenseServingEngine:
         if (len(req.prompt) >= self.max_len - 1
                 or req.max_new - len(req.generated) <= 0):
             req.done = True
+            self._note_finished(req.rid)
             return True
         self._seen_lengths.add(len(req.prompt))
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        last_logits, cache1, pos1 = self._prefill(self.params,
-                                                  {"tokens": toks})
+        tr = self.trace
+        with tr.span("prefill_dispatch",
+                     args={"len": len(req.prompt)} if tr else None):
+            last_logits, cache1, pos1 = self._prefill(self.params,
+                                                      {"tokens": toks})
         tok = self._sample(last_logits)[0]
         req.generated.append(int(tok))
-        if req.rid not in self.first_token_at:
-            self.first_token_at[req.rid] = time.perf_counter()
+        self.prompt_tokens += len(req.prompt)
+        self.prefilled_tokens += len(req.prompt)
+        self._note_emitted(req.rid)
         # merge the B=1 cache lane into slot `slot` of the batched cache
         self.cache = jax.tree.map(
             lambda big, one: jax.lax.dynamic_update_slice_in_dim(
@@ -1639,19 +1879,23 @@ class DenseServingEngine:
         self.key, k = jax.random.split(self.key)
         return _sample_logits(self.cfg, logits, self.temperature, k)
 
-    def step(self) -> List[Request]:
+    def _step(self) -> List[Request]:
         """Advance every live slot one token. Returns [] (dense lanes are
-        statically reserved, so a step never preempts)."""
+        statically reserved, so a step never preempts). Callers use
+        ``step()`` — the mixin's timed wrapper."""
         if not any(r is not None for r in self.live):
             return []
+        tr = self.trace
         t0 = time.perf_counter()
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self.cur_tok, self.pos)
-        toks = self._sample(logits)
-        self.pos = self.pos + jnp.asarray(
-            [1 if r is not None else 0 for r in self.live], jnp.int32)
-        self.cur_tok = toks[:, None]
-        jax.block_until_ready(toks)     # keep the sync inside the timer
+        with tr.span("device_dispatch"):
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              self.cur_tok, self.pos)
+            toks = self._sample(logits)
+            self.pos = self.pos + jnp.asarray(
+                [1 if r is not None else 0 for r in self.live], jnp.int32)
+            self.cur_tok = toks[:, None]
+        with tr.span("host_sync"):
+            jax.block_until_ready(toks)  # keep the sync inside the timer
         self.step_wall_s += time.perf_counter() - t0
         self.decode_steps += 1
         for i, r in enumerate(self.live):
@@ -1660,10 +1904,12 @@ class DenseServingEngine:
             t = int(toks[i])
             r.generated.append(t)
             self.decoded_tokens += 1
+            self._note_emitted(r.rid)
             if (t == self.eos_id or len(r.generated) >= r.max_new
                     or int(self.pos[i]) >= self.max_len - 1):
                 r.done = True
                 self.live[i] = None
+                self._note_finished(r.rid)
         return []
 
     def has_live(self) -> bool:
@@ -1671,6 +1917,48 @@ class DenseServingEngine:
 
     def ensure_decode_capacity(self) -> List[Request]:
         return []                     # dense lanes never run out mid-flight
+
+    # -- stats: the PAGED key sets, zero-filled (stable metrics() keys) ----
+
+    def pool_stats(self) -> PoolStats:
+        """Dense lanes are statically reserved — there is no pool. The
+        zeros keep ``metrics()``'s key set identical to the paged
+        engine's; ``dense_equiv_tokens`` reports the reservation that a
+        paged pool would be measured against."""
+        return PoolStats(page_size=0, num_pages=0, allocated_pages=0,
+                         peak_pages=0, live_tokens=0, utilization=0.0,
+                         dense_equiv_tokens=self.slots * self.max_len)
+
+    def spec_stats(self) -> Dict[str, float]:
+        return {"spec_k": 0.0, "spec_drafted": 0.0, "spec_accepted": 0.0,
+                "accept_rate": 0.0, "accepted_per_step": 1.0}
+
+    def prefix_stats(self) -> Dict[str, float]:
+        d = {
+            "prompt_tokens": float(self.prompt_tokens),
+            "prefilled_tokens": float(self.prefilled_tokens),
+            "prefill_tokens_saved": 0.0,
+            "prefill_saved_frac": 0.0,
+            "cow_copies": 0.0,
+        }
+        d.update(PrefixCache.zero_stats())
+        return d
+
+    def tier_stats(self) -> Dict[str, float]:
+        d: Dict[str, float] = {"host_tier": 0.0}
+        d.update(HostTier.zero_stats())
+        return d
+
+    def shard_stats(self) -> Dict[str, float]:
+        per = sum(leaf.size * leaf.dtype.itemsize
+                  for leaf in jax.tree.leaves(self.cache))
+        return {"model_shards": 1.0, "sharded_axes": "",
+                "peak_pages_per_shard": 0.0,
+                "pool_bytes_per_shard": float(per)}
+
+    def _reset_subsystem_counters(self) -> None:
+        self.prompt_tokens = 0
+        self.prefilled_tokens = 0
 
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10_000) -> List[Request]:
