@@ -2,10 +2,13 @@
 
 The serving benchmarks carry correctness contracts inside the perf CSV —
 ``tokens_match_tp1`` (every tensor-parallel shard count emits the
-single-shard engine's exact greedy tokens) and
-``tokens_match_unconstrained`` (a pool capped far below the working set,
-evict-only or host-tiered, emits the unconstrained engine's exact greedy
-tokens). A perf artifact whose equivalence column is 0 is not a slow data
+single-shard engine's exact greedy tokens), ``tokens_match_unconstrained``
+(a pool capped far below the working set, evict-only or host-tiered,
+emits the unconstrained engine's exact greedy tokens) and
+``tokens_match_greedy`` (the sampling scenario's greedy speculative rows
+— n-gram and draft-model drafted alike — emit the plain greedy engine's
+exact tokens; rejection-sampled verification at temperature 0 IS exact
+greedy). A perf artifact whose equivalence column is 0 is not a slow data
 point, it's a wrong one — so CI fails the build instead of uploading it.
 
 Rules, applied to every ``tokens_match_*`` column in every section:
@@ -13,7 +16,8 @@ Rules, applied to every ``tokens_match_*`` column in every section:
 * every non-empty cell must be exactly ``1`` (``0`` = mismatch = FAIL;
   empty = the row predates the column / is a ratio row, allowed);
 * each REQUIRED column (``tokens_match_tp1``,
-  ``tokens_match_unconstrained``) must appear with at least one ``1``
+  ``tokens_match_unconstrained``, ``tokens_match_greedy``) must appear
+  with at least one ``1``
   somewhere in the file — a silently-dropped scenario must not pass the
   gate by absence (skip-note rows don't count: a run where every sharded
   leg was skipped still fails, loudly, so the CI leg without forced host
@@ -39,7 +43,8 @@ import io
 import sys
 from typing import Dict, List, Tuple
 
-REQUIRED = ("tokens_match_tp1", "tokens_match_unconstrained")
+REQUIRED = ("tokens_match_tp1", "tokens_match_unconstrained",
+            "tokens_match_greedy")
 
 # unified latency/utilization columns (ISSUE 8): every serve scenario row
 # must carry them, so the artifact must contain each with at least one

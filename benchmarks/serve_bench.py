@@ -2,7 +2,7 @@
 attention) vs the seed dense-slot engine, plus the prefix-sharing,
 speculative-decode and hybrid-stack scenarios.
 
-Six scenarios, all generated deterministically from ``--seed`` so the CI
+Seven scenarios, all generated deterministically from ``--seed`` so the CI
 bench-smoke CSV artifacts are comparable run-to-run:
 
 **mixed** — a mixed-length request trace (every prompt a different length —
@@ -58,6 +58,20 @@ ratio row is the claim: identical greedy tokens in fewer weight/KV
 streams, i.e. decode arithmetic intensity multiplied by
 ``accepted_per_step`` at unchanged page traffic.
 
+**sampling** — decode policies (ISSUE 9): the templated trace replayed
+greedy (plain / n-gram spec / draft-model spec — all three must emit
+IDENTICAL tokens; ``tokens_match_greedy`` is CI-gated by
+``benchmarks/check_csv.py``) and sampled (temperature + top-p, per-request
+``SamplingParams``, plain and rejection-sampled speculative — their
+exactness claim is distributional, tested in tests/test_sampling.py, so
+the match cell stays empty). Extra columns: ``accept_rate`` /
+``drafter_kind`` for spec rows, ``sampled_tokens`` and the
+``step_traces`` / ``spec_traces`` retrace telemetry (policies are traced-
+program OPERANDS — greedy and sampled requests share one compilation).
+The draft-model rows self-draft (target model == draft model, both
+smoke-sized), exercising the drafter's incremental paged-KV sync without
+a second arch's weights.
+
 **hybrid** — a griffin-style hybrid stack (``recurrentgemma-9b`` smoke:
 rglru + local_attn sliding window) with prompts LONGER than the window,
 replayed through the dense baseline and the paged engine under both attn
@@ -106,7 +120,7 @@ as Chrome Trace Event JSON, loadable in Perfetto.
 
   PYTHONPATH=src python -m benchmarks.serve_bench [--arch qwen2.5-3b]
       [--seed 0] [--trace-out trace.json]
-      [--scenario mixed|shared-prefix|speculative|hybrid|sharded|
+      [--scenario mixed|shared-prefix|speculative|sampling|hybrid|sharded|
        oversubscribe|all]
 
 (the hybrid scenario pins its own arch — recurrentgemma-9b smoke — since
@@ -383,6 +397,72 @@ def _run_speculative(cfg, params, slots, max_len, n_requests, max_new,
         "accepted_per_step": spec["accepted_per_step"],
         "accept_rate": spec["accept_rate"],
     })
+    return rows
+
+
+def _run_sampling(cfg, params, slots, max_len, n_requests, max_new,
+                  seed, spec_k) -> List[Dict]:
+    """Decode-policy rows (ISSUE 9) over the templated trace: three
+    greedy engines (plain, n-gram spec, draft-model spec) that must all
+    emit IDENTICAL tokens (``tokens_match_greedy`` — the CI-gated
+    exactness claim), then the same three under a per-request sampled
+    policy (temperature 0.9, top-p 0.95) where the speculative rows'
+    claim is the acceptance rate at unchanged output DISTRIBUTION (the
+    chi-square suite in tests/test_sampling.py; the match cell stays
+    empty — token equality is not the sampled contract)."""
+    from repro.runtime.drafter import DraftModelDrafter
+    from repro.runtime.sampling import SamplingParams
+
+    sampled = SamplingParams(temperature=0.9, top_p=0.95, seed=seed)
+
+    def mk(new, pol=None):
+        reqs = _spec_trace(cfg, n_requests, new, seed)
+        for r in reqs:
+            r.params = pol
+        return reqs
+
+    def draft():
+        # self-draft: the target model doubles as the draft model (both
+        # smoke-sized) — deterministic, so greedy rows stay exact, and
+        # the drafter's incremental paged-KV sync runs for real
+        return DraftModelDrafter(cfg, params, max_len=max_len)
+
+    rows: List[Dict] = []
+    greedy_toks = None
+    for name, kw, pol in (
+            ("paged[kernel,greedy]", {}, None),
+            (f"paged[kernel,spec{spec_k},greedy]", {"spec_k": spec_k},
+             None),
+            (f"paged[kernel,draft{spec_k},greedy]",
+             {"spec_k": spec_k, "drafter": draft()}, None),
+            ("paged[kernel,sampled]", {}, sampled),
+            (f"paged[kernel,spec{spec_k},sampled]", {"spec_k": spec_k},
+             sampled),
+            (f"paged[kernel,draft{spec_k},sampled]",
+             {"spec_k": spec_k, "drafter": draft()}, sampled)):
+        eng = PagedServingEngine(cfg, params, slots=slots, max_len=max_len,
+                                 attn_impl="kernel", **kw)
+        _warm(eng, lambda n, _p=pol: mk(n, _p))
+        reqs = mk(max_new, pol)
+        row = _drive(eng, reqs, 4000, cfg, name=name)
+        m = eng.metrics()
+        row["sampled_tokens"] = int(m["sampling.sampled_tokens"])
+        # retrace telemetry: ONE step trace (and one spec trace when
+        # speculative) no matter the greedy/sampled request mix —
+        # policies ride in as operands, never as trace constants
+        row["step_traces"] = int(m["sampling.step_traces"])
+        row["spec_traces"] = int(m["sampling.spec_traces"])
+        if kw.get("spec_k"):
+            ss = eng.spec_stats()
+            row["accept_rate"] = ss["accept_rate"]
+            row["accepted_per_step"] = ss["accepted_per_step"]
+            row["drafter_kind"] = ss["drafter"]
+        if pol is None:
+            toks = [list(r.generated) for r in reqs]
+            if greedy_toks is None:
+                greedy_toks = toks
+            row["tokens_match_greedy"] = int(toks == greedy_toks)
+        rows.append(row)
     return rows
 
 
@@ -666,6 +746,13 @@ def run(arch: str = "qwen2.5-3b", slots: int = 4, max_len: int = 128,
             rows += _run_speculative(cfg, params, slots, max_len,
                                      n_requests, max(max_new, 24), seed,
                                      spec_k)
+        if scenario in ("sampling", "all"):
+            # decode policies ride the templated trace too: the greedy
+            # spec rows must match the greedy baseline token-for-token,
+            # and a decode-heavy tail gives the sampled rows real
+            # acceptance statistics
+            rows += _run_sampling(cfg, params, slots, max_len, n_requests,
+                                  max(max_new, 24), seed, spec_k)
         if scenario in ("hybrid", "all"):
             # windowed/recurrent stacks pin their own arch (recurrentgemma
             # smoke) and a decode tail long enough to slide past the window
@@ -701,7 +788,8 @@ def main() -> None:
                          "so CI CSV artifacts are comparable run-to-run)")
     ap.add_argument("--scenario",
                     choices=["mixed", "shared-prefix", "speculative",
-                             "hybrid", "sharded", "oversubscribe", "all"],
+                             "sampling", "hybrid", "sharded",
+                             "oversubscribe", "all"],
                     default="all")
     ap.add_argument("--sys-len", type=int, default=48,
                     help="shared system-prompt length for shared-prefix")

@@ -5,8 +5,11 @@ continuous batching (more requests than slots) with allocate-on-demand
 pages, plus throughput and KV-pool utilization stats. Every request opens
 with the same "system prompt", so --prefix-cache shows cross-request KV
 sharing (radix-tree match, refcounted pages, suffix-only prefill), and
---spec-k K turns on speculative decode (K prompt-lookup drafted tokens
-verified per multi-token step, exact greedy).
+--spec-k K turns on speculative decode (K drafted tokens verified per
+multi-token step by rejection sampling — exact greedy at temperature 0,
+distribution-preserving at any --temperature/--top-k/--top-p; add
+--draft-model ARCH to draft with a small second model instead of the
+built-in n-gram prompt lookup).
 Recurrent/hybrid archs (mamba2, recurrentgemma) serve through the SAME
 paged engine since ISSUE 5: sliding-window layers use paged ring buffers
 with page recycling (O(window) live pages per request), recurrent layers
@@ -25,7 +28,8 @@ re-prefilling.
 
   PYTHONPATH=src python examples/serve_llm.py [--arch qwen2.5-3b]
            [--slots 4] [--requests 8] [--max-new 16] [--prefix-cache]
-           [--spec-k 4] [--shards 2] [--replicas 2]
+           [--spec-k 4] [--draft-model qwen2.5-3b] [--temperature 0.8]
+           [--top-k 40] [--top-p 0.95] [--shards 2] [--replicas 2]
            [--host-tier --num-pages 12] [--trace [trace.json]]
 """
 import argparse
@@ -35,7 +39,9 @@ import jax
 
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import api
+from repro.runtime.drafter import DraftModelDrafter
 from repro.runtime.router import make_replicas
+from repro.runtime.sampling import SamplingParams
 from repro.runtime.serving import PagedServingEngine, Request, ServingEngine
 from repro.runtime.trace import Tracer, set_default_tracer
 
@@ -46,7 +52,13 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples (compatible with "
+                         "--spec-k: verification rejection-samples)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the K highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass cutoff (1.0 = off)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--paged-attn", choices=["kernel", "gather"],
                     default="kernel",
@@ -56,8 +68,13 @@ def main() -> None:
                     help="share the common system-prompt KV across "
                          "requests (refcounted copy-on-write pages)")
     ap.add_argument("--spec-k", type=int, default=0,
-                    help="verify up to K prompt-lookup drafted tokens per "
-                         "decode step (exact greedy; temperature 0 only)")
+                    help="verify up to K drafted tokens per decode step by "
+                         "rejection sampling (exact greedy at temperature "
+                         "0, distribution-preserving otherwise)")
+    ap.add_argument("--draft-model", default=None, metavar="ARCH",
+                    help="draft with a small second model (smoke-sized, "
+                         "attention-only arch) instead of n-gram prompt "
+                         "lookup; needs --spec-k > 0")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="usable KV pages (default covers slots*max_len; "
                          "set it low with --host-tier to see swapping)")
@@ -87,10 +104,26 @@ def main() -> None:
     print(f"[serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"{args.slots} slots, {args.requests} requests")
     params = api.init_params(cfg, jax.random.key(0))
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p).validate()
+    drafter = None
+    if args.draft_model is not None:
+        if args.spec_k <= 0:
+            raise SystemExit("--draft-model drafts feed the speculative "
+                             "verify step — pass --spec-k > 0 with it")
+        if args.draft_model not in ARCHS:
+            raise SystemExit(f"--draft-model must be one of {ARCHS}")
+        dcfg = get_smoke_config(args.draft_model)
+        drafter = DraftModelDrafter(dcfg,
+                                    api.init_params(dcfg, jax.random.key(1)),
+                                    max_len=128, attn_impl=args.paged_attn)
+        print(f"[serve] draft model: {dcfg.name} "
+              f"({dcfg.param_count()/1e6:.1f}M params)")
     kw = dict(slots=args.slots, max_len=128, page_size=args.page_size,
-              num_pages=args.num_pages, temperature=args.temperature,
+              num_pages=args.num_pages, sampling=sampling,
               attn_impl=args.paged_attn, prefix_cache=args.prefix_cache,
-              spec_k=args.spec_k, host_tier=args.host_tier)
+              spec_k=args.spec_k, drafter=drafter,
+              host_tier=args.host_tier)
     router = None
     if args.replicas > 1:
         router = make_replicas(cfg, params, replicas=args.replicas,
@@ -157,11 +190,24 @@ def main() -> None:
                   f"{ts['prefetch_hit_rate']:.2f}")
         if eng.spec_k:
             ss = eng.spec_stats()
-            print(f"[serve] speculative (K={eng.spec_k}): "
+            print(f"[serve] speculative (K={eng.spec_k}, drafter "
+                  f"{ss['drafter']}): "
                   f"{ss['accepted_per_step']:.2f} tokens/request/step, "
                   f"accept rate {ss['accept_rate']:.2f} "
                   f"({ss['spec_accepted']:.0f}/{ss['spec_drafted']:.0f})")
+            if eng.drafter is not None and eng.drafter.kind == "model":
+                ds = eng.drafter.stats()
+                print(f"[serve] draft model: {ds['draft_proposed']:.0f} "
+                      f"proposed / {ds['draft_decode_calls']:.0f} decode "
+                      f"calls / {ds['draft_pool_rejects']:.0f} pool "
+                      f"rejects")
     m = eng.metrics()
+    if not sampling.is_greedy:
+        print(f"[serve] decode policy: temperature {sampling.temperature}, "
+              f"top_k {sampling.top_k}, top_p {sampling.top_p} — "
+              f"{m['sampling.sampled_tokens']:.0f} sampled tokens, "
+              f"{m['sampling.step_traces'] + m['sampling.spec_traces']:.0f} "
+              f"decode traces (policy-mix invariant)")
     print(f"[serve] latency: ttft p50 {m['latency.ttft_p50_s']:.4f}s / "
           f"p95 {m['latency.ttft_p95_s']:.4f}s, tpot p50 "
           f"{m['latency.tpot_p50_s']:.4f}s / p95 "

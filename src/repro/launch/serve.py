@@ -3,8 +3,9 @@
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       [--slots 4] [--requests 8] [--max-new 12] [--engine paged|dense] \
       [--page-size 16] [--num-pages N] [--paged-attn kernel|gather] \
-      [--prefix-cache] [--spec-k K] [--shards M] [--replicas R]
-      [--host-tier] [--trace [trace.json]]
+      [--prefix-cache] [--spec-k K] [--draft-model ARCH] [--shards M] \
+      [--replicas R] [--host-tier] [--temperature T] [--top-k K] \
+      [--top-p P] [--trace [trace.json]]
 
 Every decoder-only stack defaults to the paged KV-cache engine (continuous
 batching over a shared page pool, bucketed prefill) — hybrid stacks
@@ -29,7 +30,9 @@ import jax
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.models import api
+from repro.runtime.drafter import DraftModelDrafter
 from repro.runtime.router import make_replicas
+from repro.runtime.sampling import SamplingParams
 from repro.runtime.serving import (DenseServingEngine, PagedServingEngine,
                                    Request, ServingEngine)
 from repro.runtime.trace import Tracer, set_default_tracer
@@ -43,7 +46,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="decode policy: 0 = greedy (default), > 0 samples "
+                         "(runtime/sampling.py — works with --spec-k via "
+                         "rejection-sampled verification)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the K highest logits before sampling "
+                         "(0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest logit prefix "
+                         "with cumulative mass >= P (1.0 = off)")
     ap.add_argument("--engine", choices=["auto", "paged", "dense"],
                     default="auto")
     ap.add_argument("--page-size", type=int, default=16)
@@ -59,9 +71,14 @@ def main() -> None:
                          "prompt prefix (radix tree + refcounted "
                          "copy-on-write pages; paged engine only)")
     ap.add_argument("--spec-k", type=int, default=0,
-                    help="speculative decode: verify up to K prompt-lookup "
-                         "drafted tokens per multi-token step (exact "
-                         "greedy; paged engine only, temperature 0)")
+                    help="speculative decode: verify up to K drafted tokens "
+                         "per multi-token step by rejection sampling "
+                         "(distribution-preserving at any temperature; "
+                         "exact greedy at temperature 0; paged engine only)")
+    ap.add_argument("--draft-model", default=None, metavar="ARCH",
+                    help="draft with a small second model (any attention-"
+                         "only arch; smoke-sized) instead of the built-in "
+                         "n-gram prompt lookup; needs --spec-k > 0")
     ap.add_argument("--host-tier", action="store_true",
                     help="two-tier KV: demote idle/preempted pages (and "
                          "recurrent state) to host RAM and promote them "
@@ -94,12 +111,26 @@ def main() -> None:
     print(f"[launch.serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"{args.slots} slots")
     params = api.init_params(cfg, jax.random.key(0))
-    common = dict(slots=args.slots, max_len=args.max_len,
-                  temperature=args.temperature)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p).validate()
+    drafter = None
+    if args.draft_model is not None:
+        if args.spec_k <= 0:
+            raise SystemExit("--draft-model drafts feed the speculative "
+                             "verify step — pass --spec-k > 0 with it")
+        if args.draft_model not in ARCHS:
+            raise SystemExit(f"--draft-model must be one of {ARCHS}")
+        dcfg = get_smoke_config(args.draft_model)
+        dparams = api.init_params(dcfg, jax.random.key(1))
+        drafter = DraftModelDrafter(dcfg, dparams, max_len=args.max_len,
+                                    attn_impl=args.paged_attn)
+        print(f"[launch.serve] draft model: {dcfg.name} "
+              f"({dcfg.param_count()/1e6:.1f}M params)")
+    common = dict(slots=args.slots, max_len=args.max_len, sampling=sampling)
     paged_kw = dict(page_size=args.page_size, num_pages=args.num_pages,
                     attn_impl=args.paged_attn,
                     prefix_cache=args.prefix_cache, spec_k=args.spec_k,
-                    host_tier=args.host_tier)
+                    drafter=drafter, host_tier=args.host_tier)
     router = None
     if args.replicas > 1:
         if args.engine == "dense":
@@ -184,12 +215,27 @@ def main() -> None:
                   f"{ts['host_bytes_peak']:.0f} host bytes at peak")
         if eng.spec_k:
             ss = eng.spec_stats()
-            print(f"[launch.serve] speculative (K={eng.spec_k}): "
+            print(f"[launch.serve] speculative (K={eng.spec_k}, drafter "
+                  f"{ss['drafter']}): "
                   f"{ss['accepted_per_step']:.2f} tokens/request/step, "
                   f"accept rate {ss['accept_rate']:.2f} "
                   f"({ss['spec_accepted']:.0f}/{ss['spec_drafted']:.0f} "
                   f"drafts)")
+            if eng.drafter is not None and eng.drafter.kind == "model":
+                ds = eng.drafter.stats()
+                print(f"[launch.serve] draft model: "
+                      f"{ds['draft_proposed']:.0f} tokens proposed over "
+                      f"{ds['draft_decode_calls']:.0f} decode calls, "
+                      f"{ds['draft_ingested_tokens']:.0f} tokens ingested, "
+                      f"{ds['draft_pool_rejects']:.0f} pool rejects")
     m = eng.metrics()
+    if not sampling.is_greedy:
+        print(f"[launch.serve] decode policy: temperature "
+              f"{sampling.temperature}, top_k {sampling.top_k}, top_p "
+              f"{sampling.top_p} — {m['sampling.sampled_tokens']:.0f} "
+              f"sampled tokens, "
+              f"{m['sampling.step_traces'] + m['sampling.spec_traces']:.0f} "
+              f"decode traces (policy-mix invariant)")
     print(f"[launch.serve] latency: ttft p50 {m['latency.ttft_p50_s']:.4f}s "
           f"/ p95 {m['latency.ttft_p95_s']:.4f}s, tpot p50 "
           f"{m['latency.tpot_p50_s']:.4f}s / p95 "

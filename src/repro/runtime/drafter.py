@@ -1,26 +1,46 @@
-"""Model-free draft-token proposers for speculative decoding.
+"""Draft-token proposers for speculative decoding.
 
 The verify step (``PagedServingEngine(spec_k=K)``) multiplies decode's
 arithmetic intensity by the number of query rows it scores per page sweep
 — the serving-level analogue of the paper's utilization argument (keep the
 PEs fed at the SAME memory traffic). But it only pays off when the drafted
-rows actually match what greedy decode would have emitted, so the drafter
-must be cheap (it runs on the host, per live request, per step) and must
-hit on the traffic that dominates production serving: templated prompts,
-few-shot scaffolds, code, and the repetitive spans models themselves emit.
+rows actually match what the target policy would have emitted, so a
+drafter must be cheap relative to the target model and must hit on the
+traffic that dominates production serving: templated prompts, few-shot
+scaffolds, code, and the repetitive spans models themselves emit.
 
-``ngram_propose`` is prompt-lookup drafting (PLD / n-gram speculation): no
-second model, no extra parameters — the request's OWN context is the
-draft model. The longest suffix n-gram of the context that occurred
-earlier is located (most recent occurrence wins: recency tracks the
-current phrase distribution better than frequency at these context sizes)
-and the tokens that followed that occurrence are proposed verbatim.
+Two proposers share one interface (``propose(rid, ctx, k)`` -> up to k
+token ids, ``drop(rid)`` on request finish/eviction, ``kind`` for
+telemetry), both DETERMINISTIC — greedy proposals make the draft
+distribution a point mass, so the engine's rejection-sampling acceptance
+``u < min(1, p(x)/q(x))`` reduces to ``u < p(x)`` (and to exact-greedy
+prefix matching at temperature 0; see ``runtime/sampling.py``):
 
-Host-side only (no jax): token ids in, token ids out.
+* ``NgramDrafter`` / ``ngram_propose`` — prompt-lookup drafting (PLD /
+  n-gram speculation): no second model, no extra parameters — the
+  request's OWN context is the draft model. The longest suffix n-gram of
+  the context that occurred earlier is located (most recent occurrence
+  wins: recency tracks the current phrase distribution better than
+  frequency at these context sizes) and the tokens that followed that
+  occurrence are proposed verbatim. Host-side only, stateless.
+
+* ``DraftModelDrafter`` — a small second model (any attention-only
+  config from ``src/repro/configs/``) greedy-decodes k draft tokens,
+  kept in sync with each request's context through its OWN single-slot
+  paged KV cache: per step it truncates to the longest common prefix of
+  its cached tokens and the new context (rejected drafts roll back,
+  accepted ones are already cached), ingests the context delta in
+  power-of-two multi-token decode blocks, then autoregressively drafts.
+  Degrades to no-draft (empty list) instead of failing when its page
+  pool can't host the context — the verify step then runs a plain
+  single-token row, never a wrong token.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 
 def ngram_propose(ctx: Sequence[int], k: int, *,
@@ -44,3 +64,240 @@ def ngram_propose(ctx: Sequence[int], k: int, *,
                 if cont:
                     return cont
     return []
+
+
+class NgramDrafter:
+    """The prompt-lookup proposer behind the shared drafter interface.
+    Stateless per request — ``drop`` is a no-op."""
+
+    kind = "ngram"
+
+    def __init__(self, max_ngram: int = 3):
+        self.max_ngram = max_ngram
+
+    def propose(self, rid: int, ctx: Sequence[int], k: int) -> List[int]:
+        return ngram_propose(ctx, k, max_ngram=self.max_ngram)
+
+    def drop(self, rid: int) -> None:
+        pass
+
+    def stats(self) -> Dict[str, float]:
+        return {}
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class DraftModelDrafter:
+    """Draft-model speculation: greedy-decode ``k`` continuation tokens
+    from a small second model whose KV lives in a private paged cache
+    (one slot, its own ``PageAllocator`` — completely separate from the
+    serving engine's pool). See the module docstring for the sync
+    protocol; the acceptance math is the engine's, unchanged — this
+    class only has to propose deterministically.
+
+    Requires an attention-only decoder config: windowed / recurrent /
+    encoder-decoder draft models would need their own ring buffers or
+    state slots, and the n-gram drafter already covers those stacks.
+    """
+
+    kind = "model"
+
+    def __init__(self, cfg, params, *, page_size: int = 16,
+                 num_pages: int = 128, max_len: int = 512,
+                 max_ingest: int = 32, attn_impl: str = "gather"):
+        import jax
+
+        from repro.models import api
+        from repro.models import transformer as tfm
+        from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator
+
+        kinds = set(tfm.pattern_for(cfg))
+        if not kinds <= set(api.PAGEABLE_KINDS):
+            raise ValueError(
+                f"draft-model drafter needs an attention-only decoder "
+                f"(kinds within {sorted(api.PAGEABLE_KINDS)}); "
+                f"{cfg.name!r} has {sorted(kinds)} — windowed/recurrent/"
+                f"enc-dec draft models would need their own ring buffers "
+                f"or state slots; use the n-gram drafter for those stacks")
+        assert page_size >= 1 and page_size & (page_size - 1) == 0, \
+            "page_size must be a power of two"
+        cfg = dataclasses.replace(cfg, paged_attn_impl=attn_impl)
+        self.cfg, self.params = cfg, params
+        self.page_size = page_size
+        self.max_len = -(-max_len // page_size) * page_size
+        self.max_blocks = self.max_len // page_size
+        self.max_ingest = max(1, _next_pow2(max_ingest))
+        self._scratch = SCRATCH_PAGE
+        self.alloc = PageAllocator(num_pages, page_size)
+        # pool row 0 is the scratch page (padding rows land there)
+        self.cache = api.paged_cache_init(cfg, 1, num_pages + 1, page_size)
+        self._tables: Dict[int, np.ndarray] = {}   # rid -> device-row mirror
+        self._toks: Dict[int, List[int]] = {}      # rid -> tokens in cache
+        self._ntok: Dict[int, int] = {}            # rid -> allocator tokens
+        self.proposed = 0
+        self.ingested_tokens = 0
+        self.decode_calls = 0
+        self.pool_rejects = 0
+
+        import jax.numpy as jnp
+
+        def fn(params_, cache, table, toks, pos):
+            logits, cache = api.decode_step(cfg, params_, cache, toks, pos,
+                                            block_table=table)
+            # (1, V) for T == 1, (1, T, V) for T > 1 — greedy either way
+            out = jnp.argmax(logits[..., : cfg.vocab], -1)
+            return cache, out.astype(jnp.int32)
+
+        self._fn = jax.jit(fn)
+
+    # -- paged-cache bookkeeping ------------------------------------------
+
+    def _sync_row(self, rid: int) -> None:
+        """Rebuild rid's host table row from the allocator: real pages in
+        block order, everything past them SCRATCH — so the padding rows
+        of a power-of-two ingest block can only ever write scratch."""
+        row = np.full((self.max_blocks,), self._scratch, np.int32)
+        t = self.alloc.block_table(rid)
+        row[: len(t)] = t
+        self._tables[rid] = row
+
+    def _drop_table(self, rid: int) -> None:
+        if rid in self._tables:
+            self.alloc.free_request(rid)
+            del self._tables[rid]
+        self._toks.pop(rid, None)
+        self._ntok.pop(rid, None)
+
+    def _evict_others(self, keep: int) -> bool:
+        dropped = False
+        for other in list(self._tables):
+            if other != keep:
+                self._drop_table(other)
+                dropped = True
+        return dropped
+
+    def _ensure(self, rid: int, n_tokens: int) -> bool:
+        """Cover ``n_tokens`` of rid's context with pages, evicting OTHER
+        requests' draft caches under pressure (they re-ingest later;
+        draft caches are pure accelerators). False = pool can't host even
+        alone — the caller degrades to no-draft."""
+        page = self.page_size
+        if rid not in self._tables:
+            got = self.alloc.allocate(rid, n_tokens)
+            if got is None:
+                if not self._evict_others(rid):
+                    return False
+                got = self.alloc.allocate(rid, n_tokens)
+                if got is None:
+                    return False
+            self._ntok[rid] = n_tokens
+            self._sync_row(rid)
+            return True
+        # ALWAYS advance through extend_to (one-page steps, its contract)
+        # even when the pages already cover the target: extend_to is what
+        # keeps the allocator's logical token count current, and a later
+        # divergence rollback truncate_to()s against that count.
+        while self._ntok[rid] < n_tokens:
+            step = min(n_tokens, self._ntok[rid] + page)
+            got = self.alloc.extend_to(rid, step)
+            if got is None:
+                if not self._evict_others(rid):
+                    return False
+                continue
+            self._ntok[rid] = step
+            if got:
+                self._sync_row(rid)
+        return True
+
+    # -- the drafter interface --------------------------------------------
+
+    def propose(self, rid: int, ctx: Sequence[int], k: int) -> List[int]:
+        import jax
+        import jax.numpy as jnp
+
+        if k <= 0 or not ctx:
+            return []
+        ctx = list(ctx)
+        L = len(ctx)
+        if L + k >= self.max_len:
+            return []                 # out of drafter context: degrade
+        prev = self._toks.get(rid, [])
+        common = 0
+        for a, b in zip(prev, ctx):
+            if a != b:
+                break
+            common += 1
+        # keep at least the last context token un-ingested: its decode
+        # row's logits seed the first draft
+        have = min(common, L - 1)
+        if prev:
+            if have == 0:
+                self._drop_table(rid)
+            elif have < len(prev):
+                # rejected drafts (or a resumed request that diverged):
+                # disown whole pages past the keep point; stale rows
+                # inside kept pages are overwritten by the re-ingest
+                # below before any query can attend to them
+                self.alloc.truncate_to(rid, have)
+                self._ntok[rid] = have
+                self._sync_row(rid)
+
+        def run(block, pos):
+            self.cache, out = self._fn(
+                self.params, self.cache,
+                jnp.asarray(self._tables[rid])[None, :],
+                jnp.asarray(block), jnp.asarray([pos], jnp.int32))
+            self.decode_calls += 1
+            return np.asarray(jax.device_get(out)).reshape(-1)
+
+        # ingest the context delta in pow2-padded multi-token blocks
+        # (bounded trace count; padding rows write only scratch)
+        pending = ctx[have:]
+        pos = have
+        last_tok: Optional[int] = None
+        while pending:
+            real = min(len(pending), self.max_ingest)
+            T = _next_pow2(real)
+            if not self._ensure(rid, pos + real):
+                self.pool_rejects += 1
+                self._drop_table(rid)
+                return []
+            block = np.zeros((1, T), np.int32)
+            block[0, :real] = pending[:real]
+            out = run(block, pos)
+            pos += real
+            pending = pending[real:]
+            self.ingested_tokens += real
+            if not pending:
+                last_tok = int(out[real - 1])
+        drafts = [last_tok]
+        # autoregressive greedy drafting; each draft's KV is cached so an
+        # accepted draft is already ingested next step
+        while len(drafts) < k:
+            if not self._ensure(rid, pos + 1):
+                self.pool_rejects += 1
+                break
+            out = run(np.asarray([[drafts[-1]]], np.int32), pos)
+            pos += 1
+            self.ingested_tokens += 1
+            drafts.append(int(out[-1]))
+        self._toks[rid] = ctx + drafts[:-1]
+        self.proposed += len(drafts)
+        return drafts
+
+    def drop(self, rid: int) -> None:
+        """Request finished / evicted: free its draft pages."""
+        self._drop_table(rid)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "draft_proposed": float(self.proposed),
+            "draft_ingested_tokens": float(self.ingested_tokens),
+            "draft_decode_calls": float(self.decode_calls),
+            "draft_pool_rejects": float(self.pool_rejects),
+        }

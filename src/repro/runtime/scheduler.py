@@ -47,6 +47,13 @@ class Scheduler:
         self.exhausted = False          # drain hit its budget with work left
 
     def add(self, req: Request) -> None:
+        # a malformed decode policy (negative temperature, top_p = 0, ...)
+        # fails HERE, at enqueue, where the caller can still see which
+        # request it was — not mid-tick inside the admit loop with other
+        # requests already in flight
+        params = getattr(req, "params", None)
+        if params is not None:
+            params.validate()
         # stamp arrival at ENQUEUE so TTFT includes queue wait, not just
         # the admission-to-first-token gap (getattr-guarded: tests drive
         # the scheduler with stub engines that have no metrics mixin)

@@ -94,6 +94,10 @@ from repro.runtime.drafter import ngram_propose
 from repro.runtime.host_tier import HostTier, SwapRecord, _tree_nbytes
 from repro.runtime.kv_cache import SCRATCH_PAGE, PageAllocator, PoolStats
 from repro.runtime.prefix_cache import PrefixCache, PrefixMatch
+from repro.runtime.sampling import (ACCEPT_DRAW, NEG_FILTER, SAMPLE_DRAW,
+                                    SamplingParams, draw_keys, fold_keys,
+                                    policy_operands, request_params,
+                                    sample_rows, scale_mask)
 from repro.runtime.trace import Tracer, default_tracer, percentile
 
 
@@ -105,6 +109,10 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     preemptions: int = 0
+    # per-request decode policy (runtime/sampling.py); None = the
+    # engine's default. Carried from submit() into the traced step as
+    # batched operands — greedy and sampled requests share one trace.
+    params: Optional[SamplingParams] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -112,14 +120,6 @@ def _next_pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
-
-
-def _sample_logits(cfg, logits, temperature, key) -> jax.Array:
-    logits = logits[..., : cfg.vocab]
-    if temperature <= 0:
-        return jnp.argmax(logits, -1).astype(jnp.int32)
-    return jax.random.categorical(
-        key, logits / temperature, -1).astype(jnp.int32)
 
 
 def _pageable(cfg) -> bool:
@@ -299,7 +299,8 @@ class ServingMetricsMixin:
                 ("spec", self.spec_stats()),
                 ("prefix", self.prefix_stats()),
                 ("tier", self.tier_stats()),
-                ("shard", self.shard_stats())):
+                ("shard", self.shard_stats()),
+                ("sampling", self.sampling_stats())):
             for k, v in stats.items():
                 m[f"{ns}.{k}"] = float(v) if isinstance(v, int) else v
         return m
@@ -326,6 +327,14 @@ class ServingMetricsMixin:
         self.trace.instant("reset_metrics")
         self._reset_subsystem_counters()
 
+    def _count_tokens(self, pol: Optional[SamplingParams], n: int) -> None:
+        """Attribute ``n`` emitted tokens to the greedy or sampled bucket
+        of ``sampling_stats`` (``pol`` is the emitting slot's policy)."""
+        if pol is None or pol.is_greedy:
+            self.greedy_tokens += n
+        else:
+            self.sampled_tokens += n
+
     def _reset_subsystem_counters(self) -> None:
         pass                          # engines with extra counters override
 
@@ -349,8 +358,8 @@ def ServingEngine(cfg, params, **kwargs):
         return PagedServingEngine(cfg, params, **kwargs)
     paged_defaults = {"page_size": 16, "num_pages": None,
                       "attn_impl": "kernel", "prefix_cache": False,
-                      "spec_k": 0, "spec_ngram": 3, "mesh": None,
-                      "host_tier": False}
+                      "spec_k": 0, "spec_ngram": 3, "drafter": None,
+                      "mesh": None, "host_tier": False}
     dropped = []
     for k, default in paged_defaults.items():
         if k in kwargs:
@@ -362,6 +371,13 @@ def ServingEngine(cfg, params, **kwargs):
                     f"the paged engine and the dense fallback has no "
                     f"speculative decode — drop spec_k or serve a paged-"
                     f"servable stack")
+            if k == "drafter" and v is not None:
+                raise ValueError(
+                    f"a drafter was passed, but {cfg.name!r} (pattern "
+                    f"{tfm.pattern_for(cfg)}) is not servable by the paged "
+                    f"engine and the dense fallback has no speculative "
+                    f"verify step to feed it — drop the drafter or serve "
+                    f"a paged-servable stack")
             if v != default:
                 dropped.append(f"{k}={v!r}")
     if dropped:
@@ -385,8 +401,9 @@ class PagedServingEngine(ServingMetricsMixin):
                  page_size: int = 16, num_pages: Optional[int] = None,
                  rules: Rules = NO_RULES, eos_id: int = -1,
                  temperature: float = 0.0, seed: int = 0,
+                 sampling: Optional[SamplingParams] = None,
                  attn_impl: str = "kernel", prefix_cache: bool = False,
-                 spec_k: int = 0, spec_ngram: int = 3,
+                 spec_k: int = 0, spec_ngram: int = 3, drafter=None,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  host_tier: bool = False,
                  tracer: Optional[Tracer] = None):
@@ -398,11 +415,10 @@ class PagedServingEngine(ServingMetricsMixin):
             "page_size must be a power of two"
         if attn_impl not in ("kernel", "gather"):
             raise ValueError(f"attn_impl must be kernel|gather: {attn_impl}")
-        if spec_k and temperature > 0:
+        if drafter is not None and not spec_k:
             raise ValueError(
-                "speculative decode (spec_k > 0) requires greedy sampling "
-                "(temperature == 0): acceptance is exact-greedy — a drafted "
-                "token is kept iff it equals the argmax continuation")
+                "a drafter only runs inside the speculative verify step — "
+                "pass spec_k > 0 with it (or drop the drafter)")
         if host_tier and mesh is not None:
             raise ValueError(
                 "host_tier=True is single-shard only: swap blobs would "
@@ -437,8 +453,19 @@ class PagedServingEngine(ServingMetricsMixin):
         self.max_blocks = self.max_len // page_size
         self.slots = slots
         self.rules, self.eos_id = rules, eos_id
-        self.temperature = temperature
-        self.key = jax.random.key(seed)
+        # decode policy: `sampling` is the engine default for requests
+        # without their own params; the legacy `temperature` kwarg builds
+        # one when `sampling` isn't given. Per-slot policies ride into
+        # every traced program as stacked operands (runtime/sampling.py),
+        # so a mixed greedy/sampled batch shares one trace.
+        self.default_params = (
+            sampling if sampling is not None
+            else SamplingParams(temperature=temperature)).validate()
+        self.temperature = self.default_params.temperature
+        self.seed = int(seed) & 0x7FFFFFFF
+        self._policy: List[Optional[SamplingParams]] = [None] * slots
+        self._rid_host = [0] * slots          # rid per slot (PRNG fold)
+        self._samp_idx = [0] * slots          # next generated-token index
         self._init_metrics(tracer)    # tracer + shared latency counters
 
         # tensor parallelism: one TPPlan per (config, mesh) decides what
@@ -494,12 +521,15 @@ class PagedServingEngine(ServingMetricsMixin):
         self._admit_counter = 0
 
         # speculative decode: each step verifies spec_k drafted tokens
-        # (host-side n-gram prompt-lookup, no second model) plus the
-        # current one in a single multi-token kernel sweep, accepting the
-        # longest greedy-matching prefix + one bonus token. spec_k = 0 is
-        # the plain one-token-per-step path.
+        # plus the current one in a single multi-token kernel sweep,
+        # accepting a prefix by rejection sampling (exact-greedy matching
+        # at temperature 0) + one bonus token. Drafts come from `drafter`
+        # (runtime/drafter.py — e.g. DraftModelDrafter) or, when None,
+        # the built-in host-side n-gram prompt lookup. spec_k = 0 is the
+        # plain one-token-per-step path.
         self.spec_k = spec_k
         self.spec_ngram = spec_ngram
+        self.drafter = drafter
 
         # telemetry (decode_steps / decoded_tokens / wall clocks /
         # first_token_at live in ServingMetricsMixin, shared with the
@@ -512,6 +542,16 @@ class PagedServingEngine(ServingMetricsMixin):
         self.spec_accepted = 0                # draft tokens accepted
         self.spec_slot_steps = 0              # (live slot, verify step) pairs
         self.win_recycled_pages = 0           # window pages slid out + freed
+        self.greedy_requests = 0              # requests by effective policy
+        self.sampled_requests = 0
+        self.greedy_tokens = 0                # emitted tokens by policy
+        self.sampled_tokens = 0
+        # retrace telemetry: incremented at TRACE time inside the step
+        # programs (a python side effect runs once per compilation), so
+        # a mixed greedy+sampled batch proves its one-trace contract by
+        # these staying at 1 (tests/test_sampling.py)
+        self.step_traces = 0
+        self.spec_traces = 0
 
         self._step_fn = jax.jit(self._make_step())
         self._spec_fn = jax.jit(self._make_spec_step()) if spec_k else None
@@ -582,15 +622,19 @@ class PagedServingEngine(ServingMetricsMixin):
 
     def _make_step(self):
         cfg = self.cfg
-        eos, max_len, temp = self.eos_id, self.max_len, self.temperature
+        eos, max_len = self.eos_id, self.max_len
         decode = self._wrap_sharded(self._decode_call(), 4)
 
         def step(params, cache, block_table, win_table, cur_tok, pos, live,
-                 gen, max_new, key):
+                 gen, max_new, pol):
+            # trace-time side effect: runs once per compilation, never at
+            # execution — the retrace telemetry behind the one-trace-per-
+            # policy-mix contract. Policies arrive as (slots,) operands
+            # (`pol`), so greedy and sampled rows share this trace.
+            self.step_traces += 1
             logits, cache = decode(params, cache, block_table, win_table,
                                    cur_tok, pos)
-            key, sub = jax.random.split(key)
-            toks = _sample_logits(cfg, logits, temp, sub)
+            toks = sample_rows(logits[..., : cfg.vocab], pol)
             livei = live.astype(jnp.int32)
             pos2 = pos + livei
             gen2 = gen + livei
@@ -598,31 +642,84 @@ class PagedServingEngine(ServingMetricsMixin):
                            | (pos2 >= max_len - 1))
             live2 = live & ~done
             cur2 = jnp.where(live[:, None], toks[:, None], cur_tok)
-            return cache, cur2, pos2, gen2, live2, done, toks, key
+            return cache, cur2, pos2, gen2, live2, done, toks
 
         return step
 
     def _make_spec_step(self):
         """Speculative verify-step device program: scatter the whole (B, T)
         token block's KV into the pages and score every row in ONE causal
-        page sweep (api.decode_step with T = spec_k + 1), returning the
-        per-row greedy continuation — the step's only host sync.
-        Acceptance, rollback and finish bookkeeping stay host-side: the
-        accepted length is data-dependent per request, exactly what a
-        fixed-shape jitted program can't express without padding every
-        outcome. On stacks with recurrent layers the returned cache
-        carries CHECKPOINTED states — a T axis of per-row states — which
-        ``_select_fn`` collapses to each slot's accepted row. (The
-        checkpointed leaves still match ``_cache_specs``: specs constrain
-        only the dims they name, state slots are P() at any rank.)"""
+        page sweep (api.decode_step with T = spec_k + 1), returning per
+        row a rejection-sampling accept bit for its drafted token and the
+        token to emit if the step stops there — the step's only host
+        sync. Acceptance is distribution-preserving (runtime/sampling.py:
+        both drafters propose deterministically, so q is a point mass and
+        ``u < p(draft)`` is the full accept rule; greedy rows reduce to
+        exact argmax matching, bit-identical to the pre-ISSUE-9 engine).
+        The emitted token for a verify row is a RESIDUAL sample — the
+        policy distribution with the rejected draft's mass removed — and
+        for the bonus row (nothing left to verify) a full sample; greedy
+        rows emit the argmax either way. The prefix walk, rollback and
+        finish bookkeeping stay host-side: the accepted length is
+        data-dependent per request, exactly what a fixed-shape jitted
+        program can't express without padding every outcome. On stacks
+        with recurrent layers the returned cache carries CHECKPOINTED
+        states — a T axis of per-row states — which ``_select_fn``
+        collapses to each slot's accepted row. (The checkpointed leaves
+        still match ``_cache_specs``: specs constrain only the dims they
+        name, state slots are P() at any rank.)"""
         cfg = self.cfg
         decode = self._wrap_sharded(self._decode_call(), 4)
 
-        def spec(params, cache, block_table, win_table, tok_block, pos):
+        def spec(params, cache, block_table, win_table, tok_block, pos,
+                 n_draft, pol):
+            self.spec_traces += 1     # trace-time retrace telemetry
             logits, cache = decode(params, cache, block_table, win_table,
                                    tok_block, pos)
-            toks = jnp.argmax(logits[..., : cfg.vocab], -1).astype(jnp.int32)
-            return cache, toks
+            B, T = tok_block.shape
+            z = logits[..., : cfg.vocab].astype(jnp.float32)
+            V = z.shape[-1]
+            z = z.reshape(B * T, V)
+
+            def rep(a):               # (B,) slot operand -> (B*T,) rows
+                return jnp.repeat(a, T)
+
+            temp = rep(pol["temp"])
+            z = scale_mask(z, temp, rep(pol["top_k"]), rep(pol["top_p"]))
+            greedy = jnp.argmax(z, -1).astype(jnp.int32)
+            # row t of slot s decides generated-token index idx[s] + t;
+            # its key is the same fold the non-speculative step would use
+            # for that position, so spec-off/spec-on agree wherever the
+            # draw stream lines up (e.g. zero drafts, or temperature 0)
+            t_off = jnp.tile(jnp.arange(T, dtype=jnp.int32), B)
+            keys = fold_keys(rep(pol["seed"]), rep(pol["rid"]),
+                             rep(pol["idx"]) + t_off)
+            # the drafted token under test at verify row t is
+            # tok_block[:, t + 1]; the last row has no draft (bonus row)
+            draft = jnp.concatenate(
+                [tok_block[:, 1:], jnp.zeros((B, 1), jnp.int32)],
+                axis=1).reshape(-1)
+            p_draft = jnp.take_along_axis(
+                jax.nn.softmax(z, axis=-1), draft[:, None], axis=-1)[:, 0]
+            u = jax.vmap(jax.random.uniform)(draw_keys(keys, ACCEPT_DRAW))
+            accept = jnp.where(temp > 0, u < p_draft, greedy == draft)
+            # emission token if the step stops at this row: residual
+            # sample (draft's mass removed) on a rejected verify row,
+            # full sample on the bonus row, argmax on greedy rows. One
+            # noise draw serves both candidates — only one is consumed.
+            is_verify = t_off < rep(n_draft)
+            z_res = jnp.where(
+                (jnp.arange(V)[None, :] == draft[:, None])
+                & is_verify[:, None], NEG_FILTER, z)
+            g = jax.vmap(lambda k: jax.random.gumbel(
+                k, (V,), jnp.float32))(draw_keys(keys, SAMPLE_DRAW))
+            noise = jnp.where(temp > 0, 1.0, 0.0)[:, None] * g
+            full_tok = jnp.argmax(z + noise, -1).astype(jnp.int32)
+            res_tok = jnp.argmax(z_res + noise, -1).astype(jnp.int32)
+            emit = jnp.where(
+                temp > 0, jnp.where(is_verify, res_tok, full_tok), greedy)
+            return (cache, accept.reshape(B, T),
+                    emit.astype(jnp.int32).reshape(B, T))
 
         return spec
 
@@ -661,7 +758,7 @@ class PagedServingEngine(ServingMetricsMixin):
         return sel
 
     def _make_prefill(self):
-        cfg, temp = self.cfg, self.temperature
+        cfg = self.cfg
         rules = self._model_rules
         page = self.page_size
         kinds, tail = self._kinds, self._tail
@@ -722,11 +819,10 @@ class PagedServingEngine(ServingMetricsMixin):
 
         def pf(params, cache, block_table, win_table, pos, cur_tok, live,
                gen, max_new_arr, tokens, length, pages, pages_win, row,
-               row_win, slot, req_max_new, key):
+               row_win, slot, req_max_new, pol):
             logits, new_cache = model(params, cache, tokens, length, pages,
                                       pages_win, slot)
-            key, sub = jax.random.split(key)
-            tok = _sample_logits(cfg, logits, temp, sub)[0]
+            tok = sample_rows(logits[..., : cfg.vocab], pol)[0]
             block_table = block_table.at[slot].set(row)
             win_table = win_table.at[slot].set(row_win)
             pos = pos.at[slot].set(length)
@@ -735,7 +831,7 @@ class PagedServingEngine(ServingMetricsMixin):
             gen = gen.at[slot].set(1)
             max_new_arr = max_new_arr.at[slot].set(req_max_new)
             return (new_cache, block_table, win_table, pos, cur_tok, live,
-                    gen, max_new_arr, tok, key)
+                    gen, max_new_arr, tok)
 
         return pf
 
@@ -748,7 +844,7 @@ class PagedServingEngine(ServingMetricsMixin):
         (``phys_tok``/``row_tok``: physical page + row per suffix token,
         SCRATCH for bucket padding — token-granular because a CoW'd
         divergence can start mid-page)."""
-        cfg, temp = self.cfg, self.temperature
+        cfg = self.cfg
         rules = self._model_rules
         page = self.page_size
 
@@ -795,12 +891,11 @@ class PagedServingEngine(ServingMetricsMixin):
 
         def pf(params, cache, block_table, pos, cur_tok, live, gen,
                max_new_arr, tokens, length, prefix_pages, prefix_len,
-               phys_tok, row_tok, row, slot, req_max_new, key):
+               phys_tok, row_tok, row, slot, req_max_new, pol):
             logits, new_cache = model(params, cache, tokens, length,
                                       prefix_pages, prefix_len, phys_tok,
                                       row_tok)
-            key, sub = jax.random.split(key)
-            tok = _sample_logits(cfg, logits, temp, sub)[0]
+            tok = sample_rows(logits[..., : cfg.vocab], pol)[0]
             block_table = block_table.at[slot].set(row)
             pos = pos.at[slot].set(prefix_len + length)
             cur_tok = cur_tok.at[slot, 0].set(tok)
@@ -808,7 +903,7 @@ class PagedServingEngine(ServingMetricsMixin):
             gen = gen.at[slot].set(1)
             max_new_arr = max_new_arr.at[slot].set(req_max_new)
             return (new_cache, block_table, pos, cur_tok, live, gen,
-                    max_new_arr, tok, key)
+                    max_new_arr, tok)
 
         return pf
 
@@ -1064,6 +1159,12 @@ class PagedServingEngine(ServingMetricsMixin):
         # never-written tail) stays SCRATCH
         row_win = np.zeros((self.max_blocks,), np.int32)
         row_win[dead0: dead0 + len(wtable)] = wtable
+        # the prefill's own draw decides generated-token index
+        # len(req.generated) (> 0 on preemption-resume: the fold replays
+        # the identical token the unpreempted run drew there)
+        pol_req = request_params(req, self.default_params)
+        pol = policy_operands([pol_req], [req.rid], [len(req.generated)],
+                              self.seed)
         if prefix_len == 0:
             bucket = self._bucket(L)
             nb = bucket // self.page_size
@@ -1080,14 +1181,14 @@ class PagedServingEngine(ServingMetricsMixin):
                          args={"bucket": bucket} if tr else None):
                 (self.cache, self.block_table, self.win_table, self.pos,
                  self.cur_tok, self.live_mask, self.gen_cnt,
-                 self.max_new_arr, tok, self.key) = self._prefill_fn(
+                 self.max_new_arr, tok) = self._prefill_fn(
                     self.params, self.cache, self.block_table,
                     self.win_table, self.pos, self.cur_tok, self.live_mask,
                     self.gen_cnt, self.max_new_arr, jnp.asarray(tok_arr),
                     jnp.int32(L), jnp.asarray(pages),
                     jnp.asarray(pages_win), jnp.asarray(row),
                     jnp.asarray(row_win), jnp.int32(slot),
-                    jnp.int32(remaining), self.key)
+                    jnp.int32(remaining), pol)
             self.prefilled_tokens += L
         else:
             suffix = toks[prefix_len:]
@@ -1117,15 +1218,15 @@ class PagedServingEngine(ServingMetricsMixin):
                          args={"bucket": bucket, "shared": prefix_len}
                          if tr else None):
                 (self.cache, self.block_table, self.pos, self.cur_tok,
-                 self.live_mask, self.gen_cnt, self.max_new_arr, tok,
-                 self.key) = self._prefill_shared_fn(
+                 self.live_mask, self.gen_cnt, self.max_new_arr,
+                 tok) = self._prefill_shared_fn(
                     self.params, self.cache, self.block_table, self.pos,
                     self.cur_tok, self.live_mask, self.gen_cnt,
                     self.max_new_arr, jnp.asarray(tok_arr),
                     jnp.int32(len(suffix)), jnp.asarray(pages),
                     jnp.int32(prefix_len), jnp.asarray(phys),
                     jnp.asarray(rows), jnp.asarray(row), jnp.int32(slot),
-                    jnp.int32(remaining), self.key)
+                    jnp.int32(remaining), pol)
             self.prefilled_tokens += len(suffix)
         self.prompt_tokens += L
         if self.prefix is not None:
@@ -1136,11 +1237,21 @@ class PagedServingEngine(ServingMetricsMixin):
 
         self.live[slot] = req
         self._pos_host[slot] = L
+        self._policy[slot] = pol_req
+        self._rid_host[slot] = req.rid
         self._admit_counter += 1
         self._admit_seq[slot] = self._admit_counter
         t = int(tok)
+        first = req.rid not in self.first_token_at
         req.generated.append(t)
+        self._samp_idx[slot] = len(req.generated)
         self._note_emitted(req.rid)
+        if first:
+            if pol_req.is_greedy:
+                self.greedy_requests += 1
+            else:
+                self.sampled_requests += 1
+        self._count_tokens(pol_req, 1)
         if (t == self.eos_id or len(req.generated) >= req.max_new):
             self._finish_slot(slot)
         return True
@@ -1150,6 +1261,7 @@ class PagedServingEngine(ServingMetricsMixin):
         a dead slot can only ever write to the scratch page."""
         req = self.live[slot]
         self.live[slot] = None
+        self._policy[slot] = None
         if self.has_full:
             self.alloc.free_request(req.rid)
             self.block_table = self.block_table.at[slot].set(SCRATCH_PAGE)
@@ -1157,6 +1269,11 @@ class PagedServingEngine(ServingMetricsMixin):
             self.alloc.free_request(_win_rid(req.rid))
             self.win_table = self.win_table.at[slot].set(SCRATCH_PAGE)
         self.live_mask = self.live_mask.at[slot].set(False)
+        if self.drafter is not None:
+            # the drafter's private context cache for this request is
+            # stale the moment the slot releases (finish or preemption —
+            # a resumed request re-ingests)
+            self.drafter.drop(req.rid)
         return req
 
     def _finish_slot(self, slot: int) -> None:
@@ -1291,7 +1408,10 @@ class PagedServingEngine(ServingMetricsMixin):
             self.win_table = self.win_table.at[slot].set(SCRATCH_PAGE)
         tier.demoted_pages += rec.full_pages + rec.win_pages
         self.live[slot] = None
+        self._policy[slot] = None
         self.live_mask = self.live_mask.at[slot].set(False)
+        if self.drafter is not None:
+            self.drafter.drop(req.rid)
         tier.record_swap(rec)
         req.preemptions += 1
         return req
@@ -1353,6 +1473,11 @@ class PagedServingEngine(ServingMetricsMixin):
             req.max_new - len(req.generated) + 1)
         self.live[slot] = req
         self._pos_host[slot] = rec.pos
+        self._policy[slot] = request_params(req, self.default_params)
+        self._rid_host[slot] = req.rid
+        # the next draw decides generated-token index len(generated) —
+        # the same fold the unpreempted run would have used there
+        self._samp_idx[slot] = len(req.generated)
         self._admit_counter += 1
         self._admit_seq[slot] = self._admit_counter
         tier.pop_swap(req.rid)
@@ -1520,13 +1645,15 @@ class PagedServingEngine(ServingMetricsMixin):
             return []
         with tr.span("ensure_capacity"):
             evicted = self.ensure_decode_capacity()
+        pol = policy_operands(self._policy, self._rid_host,
+                              self._samp_idx, self.seed)
         t0 = time.perf_counter()
         with tr.span("device_dispatch"):
             (self.cache, self.cur_tok, self.pos, self.gen_cnt,
-             self.live_mask, done_d, toks_d, self.key) = self._step_fn(
+             self.live_mask, done_d, toks_d) = self._step_fn(
                 self.params, self.cache, self.block_table, self.win_table,
                 self.cur_tok, self.pos, self.live_mask, self.gen_cnt,
-                self.max_new_arr, self.key)
+                self.max_new_arr, pol)
         with tr.span("host_sync"):
             toks, done = jax.device_get((toks_d, done_d))
         self.step_wall_s += time.perf_counter() - t0
@@ -1536,7 +1663,9 @@ class PagedServingEngine(ServingMetricsMixin):
                 continue
             r.generated.append(int(toks[i]))
             self._pos_host[i] += 1
+            self._samp_idx[i] += 1
             self.decoded_tokens += 1
+            self._count_tokens(self._policy[i], 1)
             self._note_emitted(r.rid)
             if done[i]:
                 self._finish_slot(i)
@@ -1548,17 +1677,23 @@ class PagedServingEngine(ServingMetricsMixin):
 
     def _step_speculative(self) -> List[Request]:
         """One speculative verify step. Per live slot: draft up to spec_k
-        tokens by prompt lookup over the request's OWN context (host-side,
-        no second model), score [current token, drafts...] as a T =
-        spec_k + 1 row block in one multi-token page sweep, accept the
-        longest draft prefix matching the greedy argmax continuation plus
-        one bonus token (the argmax after the last accepted row — so even
-        an all-miss step emits exactly the plain step's token), then roll
+        tokens (the configured ``drafter``'s model, or prompt lookup over
+        the request's OWN context — host-side, no second model), score
+        [current token, drafts...] as a T = spec_k + 1 row block in one
+        multi-token page sweep, rejection-sample the drafts against the
+        slot's decode policy (row t accepts its draft w.p.
+        ``min(1, p(draft)/q(draft))`` — ``u < p(draft)`` for our
+        deterministic drafters; exact prefix match at temperature 0),
+        emit the accepted prefix plus one more token (the residual sample
+        after the first rejection, or a full bonus sample after row
+        n_draft — so even an all-miss step emits exactly the plain step's
+        token, and marginally every emitted token is distributed as a
+        non-speculative sample; see runtime/sampling.py), then roll
         position and pages back past the accept point (truncate_to: whole
         pages the rejected rows provisioned are disowned; rejected rows
         inside a kept page are dead rows masked by the request length and
-        overwritten by the next step). Exact-greedy by construction:
-        every emitted token IS an argmax row, so outputs equal the T=1
+        overwritten by the next step). At temperature 0 this is the exact
+        greedy verification it generalizes: outputs equal the T=1
         engine's token-for-token."""
         if not any(r is not None for r in self.live):
             return []
@@ -1575,19 +1710,26 @@ class PagedServingEngine(ServingMetricsMixin):
                     continue
                 ctx = r.prompt + r.generated
                 tok_block[s, 0] = ctx[-1]  # current token, not yet in cache
-                d = ngram_propose(ctx, self.spec_k,
-                                  max_ngram=self.spec_ngram)
+                if self.drafter is not None:
+                    d = self.drafter.propose(r.rid, ctx,
+                                             self.spec_k)[: self.spec_k]
+                else:
+                    d = ngram_propose(ctx, self.spec_k,
+                                      max_ngram=self.spec_ngram)
                 tok_block[s, 1:1 + len(d)] = d
                 n_draft[s] = len(d)
                 self.spec_drafted += len(d)
                 self.spec_slot_steps += 1
+        pol = policy_operands(self._policy, self._rid_host,
+                              self._samp_idx, self.seed)
         with tr.span("device_dispatch"):
-            self.cache, toks_d = self._spec_fn(
+            self.cache, acc_d, emit_d = self._spec_fn(
                 self.params, self.cache, self.block_table, self.win_table,
                 jnp.asarray(tok_block),
-                jnp.asarray(self._pos_host, jnp.int32))
+                jnp.asarray(self._pos_host, jnp.int32),
+                jnp.asarray(n_draft, jnp.int32), pol)
         with tr.span("host_sync"):
-            greedy = np.asarray(jax.device_get(toks_d))  # (slots,T): 1 sync
+            accept, emit = jax.device_get((acc_d, emit_d))  # 1 host sync
         self.step_wall_s += time.perf_counter() - t0
         self.decode_steps += 1
         with tr.span("accept_rollback"):
@@ -1598,17 +1740,19 @@ class PagedServingEngine(ServingMetricsMixin):
                     continue
                 pos0 = self._pos_host[s]
                 a = 0                      # accepted drafts
-                while a < n_draft[s] \
-                        and greedy[s, a] == tok_block[s, a + 1]:
+                while a < n_draft[s] and accept[s, a]:
                     a += 1
-                # emit greedy rows 0..a, applying the T=1 stop conditions
-                # in emission order (eos / generation budget / context
-                # cap) — rows past the first stop are discarded, exactly
-                # as the plain engine would never have produced them
+                # accepted drafts verbatim, then row a's sample (residual
+                # after a rejection, full after the last accepted draft)
+                emitted = [int(tok_block[s, j + 1]) for j in range(a)]
+                emitted.append(int(emit[s, a]))
+                # emit, applying the T=1 stop conditions in emission
+                # order (eos / generation budget / context cap) — tokens
+                # past the first stop are discarded, exactly as the plain
+                # engine would never have produced them
                 finished = False
                 m = 0
-                for j in range(a + 1):
-                    t = int(greedy[s, j])
+                for j, t in enumerate(emitted):
                     r.generated.append(t)
                     m += 1
                     self.decoded_tokens += 1
@@ -1618,6 +1762,8 @@ class PagedServingEngine(ServingMetricsMixin):
                         break
                 self.spec_accepted += m - 1
                 accept_idx[s] = m - 1      # recurrent state after row m-1
+                self._samp_idx[s] += m
+                self._count_tokens(self._policy[s], m)
                 self._note_emitted(r.rid, m)
                 if finished:
                     self._finish_slot(s)   # frees every page incl. drafts
@@ -1678,7 +1824,34 @@ class PagedServingEngine(ServingMetricsMixin):
                             if self.spec_drafted else 0.0),
             "accepted_per_step": (self.decoded_tokens / self.spec_slot_steps
                                   if self.spec_slot_steps else 1.0),
+            "drafter": ("none" if not self.spec_k
+                        else (self.drafter.kind if self.drafter is not None
+                              else "ngram")),
         }
+
+    def sampling_stats(self) -> Dict[str, float]:
+        """Decode-policy telemetry (ISSUE 9): the greedy/sampled request
+        and token mix, the jit trace counts the mixed-batch acceptance
+        criterion asserts on (``step_traces`` / ``spec_traces`` — like
+        ``prefill_traces`` these are lifetime facts that survive
+        ``reset_metrics``), and the draft-model drafter's counters
+        (zeros when no model drafter is attached, so the key set is
+        engine- and configuration-stable)."""
+        d = {
+            "greedy_requests": float(self.greedy_requests),
+            "sampled_requests": float(self.sampled_requests),
+            "greedy_tokens": float(self.greedy_tokens),
+            "sampled_tokens": float(self.sampled_tokens),
+            "step_traces": float(self.step_traces),
+            "spec_traces": float(self.spec_traces),
+            "draft_proposed": 0.0,
+            "draft_ingested_tokens": 0.0,
+            "draft_decode_calls": 0.0,
+            "draft_pool_rejects": 0.0,
+        }
+        if self.drafter is not None:
+            d.update(self.drafter.stats())
+        return d
 
     def has_live(self) -> bool:
         return any(r is not None for r in self.live)
@@ -1747,6 +1920,12 @@ class PagedServingEngine(ServingMetricsMixin):
         self.spec_accepted = 0
         self.spec_slot_steps = 0
         self.win_recycled_pages = 0
+        # step_traces / spec_traces deliberately survive (lifetime facts,
+        # like prefill_traces — see reset_metrics)
+        self.greedy_requests = 0
+        self.sampled_requests = 0
+        self.greedy_tokens = 0
+        self.sampled_tokens = 0
         self.alloc.peak_pages = self.alloc.allocated_pages
         self.alloc.share_events = 0
         if self.prefix is not None:
@@ -1797,23 +1976,49 @@ class DenseServingEngine(ServingMetricsMixin):
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  rules: Rules = NO_RULES, eos_id: int = -1,
                  temperature: float = 0.0, seed: int = 0,
+                 sampling: Optional[SamplingParams] = None,
                  tracer: Optional[Tracer] = None):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.rules, self.eos_id = rules, eos_id
-        self.temperature = temperature
-        self.key = jax.random.key(seed)
+        # engine-wide default policy; per-request Request.params override
+        # it (same resolution as the paged engine — the two must agree
+        # for the dense-vs-paged equivalence baselines to hold)
+        self.default_params = (sampling if sampling is not None
+                               else SamplingParams(
+                                   temperature=temperature)).validate()
+        self.temperature = self.default_params.temperature
+        self.seed = int(seed) & 0x7FFFFFFF
         self._init_metrics(tracer)    # tracer + shared latency counters
         self.cache = api.cache_init(cfg, slots, max_len)
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
         self.live: List[Optional[Request]] = [None] * slots
+        self._policy: List[Optional[SamplingParams]] = [None] * slots
+        self._rid_host = [0] * slots
+        self._samp_idx = [0] * slots
         self._decode = jax.jit(
             lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos,
                                                  rules=rules))
         self._prefill = jax.jit(
             lambda p, b: api.prefill(cfg, p, b, rules=rules,
                                      max_len=max_len))
+
+        def _samp(logits, pol):
+            # trace-time increment: one count per compiled logit shape
+            # (decode's (slots, V) + prefill's (1, V)), NOT per policy
+            # value — policies are operands, so a mixed greedy+sampled
+            # batch reuses the same trace (the ISSUE 9 criterion)
+            self.step_traces += 1
+            return sample_rows(logits[..., : cfg.vocab], pol)
+
+        self._sample_fn = jax.jit(_samp)
+        self.step_traces = 0
+        self.spec_traces = 0          # dense engine has no verify step
+        self.greedy_requests = 0
+        self.sampled_requests = 0
+        self.greedy_tokens = 0
+        self.sampled_tokens = 0
         self._seen_lengths: set = set()
         self.prompt_tokens = 0
         self.prefilled_tokens = 0     # == prompt_tokens (no sharing here)
@@ -1855,12 +2060,25 @@ class DenseServingEngine(ServingMetricsMixin):
         self._seen_lengths.add(len(req.prompt))
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         tr = self.trace
+        pol_req = request_params(req, self.default_params)
+        pol = policy_operands([pol_req], [req.rid],
+                              [len(req.generated)], self.seed)
         with tr.span("prefill_dispatch",
                      args={"len": len(req.prompt)} if tr else None):
             last_logits, cache1, pos1 = self._prefill(self.params,
                                                       {"tokens": toks})
-        tok = self._sample(last_logits)[0]
+        tok = self._sample_fn(last_logits, pol)[0]
+        first = req.rid not in self.first_token_at
         req.generated.append(int(tok))
+        self._policy[slot] = pol_req
+        self._rid_host[slot] = req.rid
+        self._samp_idx[slot] = len(req.generated)
+        if first:
+            if pol_req.is_greedy:
+                self.greedy_requests += 1
+            else:
+                self.sampled_requests += 1
+        self._count_tokens(pol_req, 1)
         self.prompt_tokens += len(req.prompt)
         self.prefilled_tokens += len(req.prompt)
         self._note_emitted(req.rid)
@@ -1875,10 +2093,6 @@ class DenseServingEngine(ServingMetricsMixin):
         self.live[slot] = req
         return True
 
-    def _sample(self, logits) -> jax.Array:
-        self.key, k = jax.random.split(self.key)
-        return _sample_logits(self.cfg, logits, self.temperature, k)
-
     def _step(self) -> List[Request]:
         """Advance every live slot one token. Returns [] (dense lanes are
         statically reserved, so a step never preempts). Callers use
@@ -1886,11 +2100,13 @@ class DenseServingEngine(ServingMetricsMixin):
         if not any(r is not None for r in self.live):
             return []
         tr = self.trace
+        pol = policy_operands(self._policy, self._rid_host,
+                              self._samp_idx, self.seed)
         t0 = time.perf_counter()
         with tr.span("device_dispatch"):
             logits, self.cache = self._decode(self.params, self.cache,
                                               self.cur_tok, self.pos)
-            toks = self._sample(logits)
+            toks = self._sample_fn(logits, pol)
             self.pos = self.pos + jnp.asarray(
                 [1 if r is not None else 0 for r in self.live], jnp.int32)
             self.cur_tok = toks[:, None]
@@ -1903,12 +2119,15 @@ class DenseServingEngine(ServingMetricsMixin):
                 continue
             t = int(toks[i])
             r.generated.append(t)
+            self._samp_idx[i] += 1
             self.decoded_tokens += 1
+            self._count_tokens(self._policy[i], 1)
             self._note_emitted(r.rid)
             if (t == self.eos_id or len(r.generated) >= r.max_new
                     or int(self.pos[i]) >= self.max_len - 1):
                 r.done = True
                 self.live[i] = None
+                self._policy[i] = None
                 self._note_finished(r.rid)
         return []
 
@@ -1931,7 +2150,24 @@ class DenseServingEngine(ServingMetricsMixin):
 
     def spec_stats(self) -> Dict[str, float]:
         return {"spec_k": 0.0, "spec_drafted": 0.0, "spec_accepted": 0.0,
-                "accept_rate": 0.0, "accepted_per_step": 1.0}
+                "accept_rate": 0.0, "accepted_per_step": 1.0,
+                "drafter": "none"}
+
+    def sampling_stats(self) -> Dict[str, float]:
+        """Paged engine's key set, zero-filled where dense has no
+        counterpart (no drafter, no verify step)."""
+        return {
+            "greedy_requests": float(self.greedy_requests),
+            "sampled_requests": float(self.sampled_requests),
+            "greedy_tokens": float(self.greedy_tokens),
+            "sampled_tokens": float(self.sampled_tokens),
+            "step_traces": float(self.step_traces),
+            "spec_traces": float(self.spec_traces),
+            "draft_proposed": 0.0,
+            "draft_ingested_tokens": 0.0,
+            "draft_decode_calls": 0.0,
+            "draft_pool_rejects": 0.0,
+        }
 
     def prefix_stats(self) -> Dict[str, float]:
         d = {
@@ -1959,6 +2195,11 @@ class DenseServingEngine(ServingMetricsMixin):
     def _reset_subsystem_counters(self) -> None:
         self.prompt_tokens = 0
         self.prefilled_tokens = 0
+        # step_traces survives (lifetime fact, like prefill_traces)
+        self.greedy_requests = 0
+        self.sampled_requests = 0
+        self.greedy_tokens = 0
+        self.sampled_tokens = 0
 
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10_000) -> List[Request]:

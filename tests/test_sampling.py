@@ -1,0 +1,420 @@
+"""Decode policies (ISSUE 9): the fused mask->top-k->top-p->categorical
+sampler vs numpy references, per-request PRNG determinism (same (seed,
+rid, idx) -> same token across engines, attn impls and preemption), the
+one-trace-per-policy-mix contract asserted via the step_traces/spec_traces
+telemetry, the draft-model drafter's paged-cache sync invariants, loud
+failure modes of the policy/drafter plumbing, and a slow chi-square check
+that rejection-sampled speculative verification preserves the sampling
+distribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.sampling import (GREEDY, NEG_FILTER, SamplingParams,
+                                    policy_operands, sample_rows,
+                                    scale_mask, summarize)
+
+# ---------------------------------------------------------------------------
+# SamplingParams (pure host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_params_validate_bounds():
+    SamplingParams().validate()
+    SamplingParams(temperature=1.5, top_k=3, top_p=0.5, seed=7).validate()
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1).validate()
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1).validate()
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0).validate()
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.2).validate()
+    assert GREEDY.is_greedy
+    assert not SamplingParams(temperature=0.5).is_greedy
+    assert summarize([GREEDY, None, SamplingParams(temperature=1.0)]) \
+        == "1 greedy / 1 sampled"
+
+
+# ---------------------------------------------------------------------------
+# scale_mask vs a straight-line numpy reference
+# ---------------------------------------------------------------------------
+
+
+def _np_scale_mask(row, temp, top_k, top_p):
+    z = row.astype(np.float64)
+    if temp > 0:
+        z = z / temp
+    if top_k > 0:
+        kth = np.sort(z)[::-1][min(top_k, len(z)) - 1]
+        z = np.where(z >= kth, z, NEG_FILTER)
+    if top_p < 1.0:
+        srt = np.sort(z)[::-1]
+        p = np.exp(srt - srt.max())
+        p = p / p.sum()
+        keep = (np.cumsum(p) - p) < top_p
+        pth = srt[max(int(keep.sum()), 1) - 1]
+        z = np.where(z >= pth, z, NEG_FILTER)
+    return z
+
+
+def test_scale_mask_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    cases = [(0.0, 0, 1.0), (1.0, 4, 1.0), (0.7, 0, 0.6), (1.3, 5, 0.8),
+             (2.0, 1, 0.3), (0.5, 16, 1.0), (1.0, 3, 0.5)]
+    logits = (3 * rng.normal(size=(len(cases), 16))).astype(np.float32)
+    z = np.asarray(scale_mask(
+        jnp.asarray(logits),
+        jnp.asarray([c[0] for c in cases], jnp.float32),
+        jnp.asarray([c[1] for c in cases], jnp.int32),
+        jnp.asarray([c[2] for c in cases], jnp.float32)))
+    for i, (t, k, p) in enumerate(cases):
+        ref = _np_scale_mask(logits[i], t, k, p)
+        kept, ref_kept = z[i] > NEG_FILTER / 2, ref > NEG_FILTER / 2
+        assert kept.tolist() == ref_kept.tolist(), (i, t, k, p)
+        # the top-1 token always survives both filters (greedy exactness)
+        assert kept[np.argmax(logits[i])]
+        np.testing.assert_allclose(z[i][kept], ref[ref_kept], rtol=1e-5)
+
+
+def test_greedy_rows_are_exact_argmax():
+    # temp == 0 rows reduce to the pre-ISSUE-9 argmax regardless of
+    # top_k / top_p / seed — the fused program's greedy contract
+    rng = np.random.default_rng(1)
+    logits = rng.normal(size=(5, 32)).astype(np.float32)
+    pol = policy_operands(
+        [GREEDY, SamplingParams(top_k=3), SamplingParams(top_p=0.4),
+         None, SamplingParams(seed=123)],
+        rids=[0, 1, 2, 3, 4], idxs=[0, 5, 9, 2, 7], default_seed=0)
+    toks = np.asarray(sample_rows(jnp.asarray(logits), pol))
+    assert toks.tolist() == np.argmax(logits, -1).tolist()
+
+
+# ---------------------------------------------------------------------------
+# PRNG derivation: tokens are a pure function of (seed, rid, idx)
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_draw_is_pure_function_of_seed_rid_idx():
+    rng = np.random.default_rng(2)
+    rows = rng.normal(size=(4, 64)).astype(np.float32)
+    rows[3] = rows[1]          # rows 1 and 3 share logits AND key below
+    logits = jnp.asarray(rows)
+    p = SamplingParams(temperature=1.0, seed=5)
+    pol = policy_operands([p] * 4, rids=[0, 1, 0, 1], idxs=[3, 3, 4, 3],
+                          default_seed=0)
+    a = np.asarray(sample_rows(logits, pol))
+    assert a.tolist() == np.asarray(sample_rows(logits, pol)).tolist()
+    # row 3 duplicates row 1's (seed, rid, idx): identical draw, while
+    # rows 0/1 (rid differs) and 0/2 (idx differs) are independent keys
+    assert a[3] == a[1]
+    # `offset` shifts the generated-token index: the verify step's row at
+    # idx + t must consume the same key the plain step would at idx = t
+    pol_o = policy_operands([p] * 4, rids=[0, 1, 0, 1], idxs=[2, 2, 3, 2],
+                            default_seed=0)
+    assert np.asarray(sample_rows(logits, pol_o, offset=1)).tolist() \
+        == a.tolist()
+
+
+def test_sampled_marginals_match_softmax():
+    # frequencies over 4000 independent draws (distinct idx) land within
+    # 4 sigma of softmax(logits) per bin — deterministic given the seed
+    V, N = 8, 4000
+    row = np.asarray([0.0, 1.0, 2.0, -1.0, 0.5, 1.5, -2.0, 0.25],
+                     np.float32)
+    p_ref = np.exp(row) / np.exp(row).sum()
+    pol = policy_operands([SamplingParams(temperature=1.0, seed=11)] * N,
+                          rids=[0] * N, idxs=list(range(N)), default_seed=0)
+    toks = np.asarray(sample_rows(
+        jnp.broadcast_to(jnp.asarray(row), (N, V)), pol))
+    counts = np.bincount(toks, minlength=V)
+    for v in range(V):
+        sd = np.sqrt(N * p_ref[v] * (1 - p_ref[v]))
+        assert abs(counts[v] - N * p_ref[v]) <= 4 * sd + 1, (v, counts)
+
+
+def test_topk_sampling_support_and_renormalization():
+    # top_k=3 keeps tokens {2, 5, 1} only, with mass renormalized on them
+    V, N = 8, 3000
+    row = np.asarray([0.0, 1.0, 2.0, -1.0, 0.5, 1.5, -2.0, 0.25],
+                     np.float32)
+    keep = np.argsort(row)[::-1][:3]
+    p_ref = np.zeros(V)
+    p_ref[keep] = np.exp(row[keep]) / np.exp(row[keep]).sum()
+    pol = policy_operands(
+        [SamplingParams(temperature=1.0, top_k=3, seed=17)] * N,
+        rids=[0] * N, idxs=list(range(N)), default_seed=0)
+    toks = np.asarray(sample_rows(
+        jnp.broadcast_to(jnp.asarray(row), (N, V)), pol))
+    counts = np.bincount(toks, minlength=V)
+    assert counts[[i for i in range(V) if i not in keep]].sum() == 0
+    for v in keep:
+        sd = np.sqrt(N * p_ref[v] * (1 - p_ref[v]))
+        assert abs(counts[v] - N * p_ref[v]) <= 4 * sd + 1, (v, counts)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: one trace per policy mix, greedy rows unperturbed
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    from repro.configs import get_smoke_config
+    from repro.models import api
+    cfg = get_smoke_config("qwen2.5-3b")
+    return cfg, api.init_params(cfg, jax.random.key(0))
+
+
+def _mk_reqs(n=4, max_new=6, sample_odd=False):
+    from repro.runtime.serving import Request
+    reqs = [Request(rid=i, prompt=[2 + i, 9, 4, 1 + i, 7], max_new=max_new)
+            for i in range(n)]
+    if sample_odd:
+        for r in reqs[1::2]:
+            r.params = SamplingParams(temperature=0.8, top_k=12,
+                                      seed=31 + r.rid)
+    return reqs
+
+
+def test_mixed_policy_batch_compiles_one_step_trace(qwen):
+    """The ISSUE 9 acceptance criterion: a mixed greedy+sampled batch
+    runs through EXACTLY one decode trace (policies are operands, not
+    constants), and the greedy rows emit the same tokens as an all-greedy
+    engine — sampled neighbors never perturb them."""
+    from repro.runtime.serving import PagedServingEngine
+    cfg, params = qwen
+    base = _mk_reqs()
+    eng0 = PagedServingEngine(cfg, params, slots=4, max_len=32,
+                              page_size=8, attn_impl="gather")
+    eng0.run_to_completion(base)
+    assert eng0.metrics()["sampling.step_traces"] == 1.0
+
+    mixed = _mk_reqs(sample_odd=True)
+    eng = PagedServingEngine(cfg, params, slots=4, max_len=32,
+                             page_size=8, attn_impl="gather")
+    eng.run_to_completion(mixed)
+    m = eng.metrics()
+    assert m["sampling.step_traces"] == 1.0          # no retrace for the mix
+    assert m["sampling.greedy_requests"] == 2.0
+    assert m["sampling.sampled_requests"] == 2.0
+    assert m["sampling.greedy_tokens"] == 12.0
+    assert m["sampling.sampled_tokens"] == 12.0
+    for b, r in zip(base, mixed):
+        if r.params is None:
+            assert r.generated == b.generated, r.rid
+    # near-uniform smoke logits: sampling at temp 0.8 diverges somewhere
+    assert any(r.generated != b.generated
+               for b, r in zip(base, mixed) if r.params is not None)
+
+
+def test_dense_mixed_policy_trace_count_is_mix_invariant(qwen):
+    """The dense engine jits the sampler per logit SHAPE (prefill (1,V),
+    batched decode (slots,V)) — a greedy/sampled mix must not add
+    traces beyond what the all-greedy engine compiles."""
+    from repro.runtime.serving import DenseServingEngine
+    cfg, params = qwen
+    eng0 = DenseServingEngine(cfg, params, slots=2, max_len=16)
+    eng0.run_to_completion(_mk_reqs(max_new=4))
+    baseline = eng0.metrics()["sampling.step_traces"]
+    assert baseline > 0
+
+    eng = DenseServingEngine(cfg, params, slots=2, max_len=16)
+    eng.run_to_completion(_mk_reqs(max_new=4, sample_odd=True))
+    m = eng.metrics()
+    assert m["sampling.step_traces"] == baseline
+    assert m["sampling.sampled_requests"] == 2.0
+
+
+def test_scheduler_validates_params_at_enqueue(qwen):
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import PagedServingEngine, Request
+    cfg, params = qwen
+    eng = PagedServingEngine(cfg, params, slots=1, max_len=16, page_size=8)
+    sched = Scheduler(eng)
+    bad = Request(rid=0, prompt=[1, 2], max_new=2,
+                  params=SamplingParams(temperature=-1.0))
+    with pytest.raises(ValueError, match="temperature"):
+        sched.add(bad)
+
+
+# ---------------------------------------------------------------------------
+# loud failure modes (satellite: stale fallback texts)
+# ---------------------------------------------------------------------------
+
+
+def test_factory_dense_fallback_raises_on_drafter():
+    from repro.configs import get_smoke_config
+    from repro.models import api
+    from repro.runtime.drafter import NgramDrafter
+    from repro.runtime.serving import ServingEngine
+    cfg = get_smoke_config("seamless-m4t-large-v2")     # enc-dec: dense
+    params = api.param_shapes(cfg)      # engine init never touches params
+    with pytest.raises(ValueError, match="verify step"):
+        ServingEngine(cfg, params, slots=2, max_len=32,
+                      drafter=NgramDrafter())
+
+
+def test_draft_model_drafter_rejects_non_attention_stacks():
+    from repro.configs import get_smoke_config
+    from repro.runtime.drafter import DraftModelDrafter
+    cfg = get_smoke_config("mamba2-2.7b")
+    with pytest.raises(ValueError, match="n-gram"):
+        DraftModelDrafter(cfg, None)
+
+
+# ---------------------------------------------------------------------------
+# DraftModelDrafter: paged-cache sync invariants
+# ---------------------------------------------------------------------------
+
+
+def test_draft_model_drafter_rollback_and_replay(qwen):
+    from repro.runtime.drafter import DraftModelDrafter
+    cfg, params = qwen
+    dr = DraftModelDrafter(cfg, params, page_size=4, num_pages=16,
+                           max_len=64)
+    ctx = [5, 3, 8, 1, 2, 9]
+    d1 = dr.propose(0, ctx, 3)
+    assert len(d1) == 3
+    # the verify step rejected draft 1: the new context keeps draft 0 and
+    # appends a diverging residual token. The resulting sub-page
+    # truncate_to used to trip the allocator's token-count assertion when
+    # _ensure skipped extend_to for already-covered growth (ISSUE 9
+    # regression).
+    ctx2 = ctx + [d1[0], (d1[1] + 1) % cfg.vocab]
+    d2 = dr.propose(0, ctx2, 3)
+    assert len(d2) == 3
+    assert dr.alloc.tokens(0) == len(ctx2) + len(d2) - 1
+    dr.alloc.check_no_aliasing()
+    # replaying the same context truncates the cached speculation again
+    # and must reproduce the proposal exactly (greedy drafting over
+    # identical cached KV + identical block shapes is deterministic)
+    assert dr.propose(0, list(ctx2), 3) == d2
+    dr.drop(0)
+    assert dr.alloc.allocated_pages == 0
+
+
+def test_draft_model_drafter_degrades_on_pool_exhaustion(qwen):
+    from repro.runtime.drafter import DraftModelDrafter
+    cfg, params = qwen
+    dr = DraftModelDrafter(cfg, params, page_size=4, num_pages=1,
+                           max_len=64)
+    # 6 context tokens need 2 pages; the pool has 1 and nothing to evict:
+    # degrade to no-draft (the engine then runs a plain decode row)
+    assert dr.propose(0, [5, 3, 8, 1, 2, 9], 2) == []
+    assert dr.stats()["draft_pool_rejects"] == 1.0
+    assert dr.alloc.allocated_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-engine / preemption determinism (slow: several engine builds)
+# ---------------------------------------------------------------------------
+
+
+def _sampled_reqs(n=3, max_new=8):
+    from repro.runtime.serving import Request
+    return [Request(rid=i, prompt=[3 + i, 1, 4, 1, 5 + i], max_new=max_new,
+                    params=SamplingParams(temperature=0.9, top_k=8,
+                                          top_p=0.9, seed=900 + i))
+            for i in range(n)]
+
+
+@pytest.mark.slow
+def test_sampled_identical_across_impls_and_engines(qwen):
+    """Same (seed, rid, idx) -> same token, independent of the attention
+    impl, the engine (paged vs dense) and slot assignment under
+    continuous batching (3 requests on 2 slots)."""
+    from repro.runtime.serving import DenseServingEngine, PagedServingEngine
+    cfg, params = qwen
+
+    def run_paged(impl):
+        eng = PagedServingEngine(cfg, params, slots=2, max_len=32,
+                                 page_size=8, attn_impl=impl)
+        reqs = _sampled_reqs()
+        eng.run_to_completion(reqs)
+        return [r.generated for r in reqs]
+
+    gather, kernel = run_paged("gather"), run_paged("kernel")
+    assert gather == kernel
+    dense = DenseServingEngine(cfg, params, slots=2, max_len=32)
+    reqs = _sampled_reqs()
+    dense.run_to_completion(reqs)
+    assert [r.generated for r in reqs] == gather
+    # the three seeds really produced three distinct streams
+    assert len({tuple(t) for t in gather}) == 3
+
+
+@pytest.mark.slow
+def test_sampled_preemption_resume_replays_identical(qwen):
+    """A preempted sampled request resumes by re-prefill and must replay
+    the IDENTICAL token stream: the draw for generated token idx is a
+    pure function of (seed, rid, idx), not of batch/preemption history."""
+    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.serving import PagedServingEngine
+    cfg, params = qwen
+
+    def run(**kw):
+        eng = PagedServingEngine(cfg, params, slots=2, max_len=32,
+                                 page_size=4, attn_impl="gather", **kw)
+        sched = Scheduler(eng)
+        reqs = _sampled_reqs(n=2, max_new=8)
+        for r in reqs:
+            sched.add(r)
+        sched.drain(max_steps=400)
+        return [r.generated for r in reqs], sched
+
+    want, _ = run()
+    got, sched = run(num_pages=5)      # too small for both: preempts
+    assert sched.preempted >= 1
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# rejection-sampled speculation preserves the sampling distribution
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_rejection_sampled_spec_matches_nonspec_distribution(qwen):
+    """The distribution contract behind lifting the spec_k => greedy
+    restriction: tokens emitted through the verify step's accept/residual
+    rule are marginally distributed EXACTLY like non-speculative samples.
+    Two independent cohorts (disjoint per-request seeds) of 200 requests
+    sample token positions 1-2 without spec_k and with spec_k=4 fed by
+    the SELF-draft model drafter (sampled continuations rarely repeat, so
+    n-gram lookup would propose nothing — the draft model always does,
+    and self-drafting maximizes the accept path's coverage); a two-sample
+    chi-square over the vocab bins must not reject at p ~= 0.001
+    (deterministic given the fixed seeds)."""
+    from repro.runtime.drafter import DraftModelDrafter
+    from repro.runtime.serving import PagedServingEngine, Request
+    cfg, params = qwen
+    N = 200
+    prompt = [3, 1, 4, 1, 3, 1, 4, 1, 3]
+
+    def run(spec_k, seed_base, drafter=None):
+        eng = PagedServingEngine(cfg, params, slots=8, max_len=32,
+                                 page_size=8, attn_impl="gather",
+                                 spec_k=spec_k, drafter=drafter)
+        reqs = [Request(rid=i, prompt=list(prompt), max_new=3,
+                        params=SamplingParams(temperature=0.6, top_k=8,
+                                              seed=seed_base + i))
+                for i in range(N)]
+        eng.run_to_completion(reqs, max_steps=8000)
+        assert all(r.done for r in reqs)
+        return [r.generated for r in reqs], eng
+
+    plain, _ = run(0, 10_000)
+    spec, eng = run(4, 20_000, DraftModelDrafter(cfg, params, max_len=64))
+    ss = eng.spec_stats()
+    assert ss["spec_drafted"] > 0 and ss["spec_accepted"] > 0
+    for pos in (1, 2):
+        a = np.bincount([t[pos] for t in plain], minlength=cfg.vocab)
+        b = np.bincount([t[pos] for t in spec], minlength=cfg.vocab)
+        mask = (a + b) > 0
+        stat = (((a - b) ** 2)[mask] / (a + b)[mask].astype(float)).sum()
+        df = int(mask.sum()) - 1
+        # Wilson-Hilferty chi-square critical value at z = 3.09 (p ~ 1e-3)
+        crit = df * (1 - 2 / (9 * df) + 3.09 * np.sqrt(2 / (9 * df))) ** 3
+        assert stat < crit, (pos, stat, crit, df)

@@ -348,8 +348,27 @@ def test_speculative_respects_max_len_cap(qwen):
     assert eng.alloc.allocated_pages == 0
 
 
-def test_speculative_requires_greedy(qwen):
+def test_speculative_runs_sampled(qwen):
+    """ISSUE 9 lifted the spec_k => temperature == 0 restriction: the
+    verify step rejection-samples drafts against the decode policy, so a
+    sampled engine with spec_k constructs AND serves (the distribution
+    match itself is tests/test_sampling.py's chi-square suite)."""
+    from repro.runtime.serving import PagedServingEngine, Request
+    cfg, params = qwen
+    eng = PagedServingEngine(cfg, params, spec_k=4, temperature=0.7,
+                             attn_impl="gather", max_len=32, page_size=4)
+    reqs = [Request(rid=0, prompt=[1, 2, 1, 2, 1, 2], max_new=8),
+            Request(rid=1, prompt=[5, 4, 3, 2, 1], max_new=8)]
+    done = eng.run_to_completion(reqs)
+    assert len(done) == 2
+    assert all(len(r.generated) > 0 for r in done)
+    assert eng.alloc.allocated_pages == 0
+    assert eng.metrics()["sampling.sampled_requests"] == 2.0
+
+
+def test_drafter_requires_spec_k(qwen):
+    from repro.runtime.drafter import NgramDrafter
     from repro.runtime.serving import PagedServingEngine
     cfg, params = qwen
-    with pytest.raises(ValueError, match="greedy"):
-        PagedServingEngine(cfg, params, spec_k=4, temperature=0.7)
+    with pytest.raises(ValueError, match="spec_k"):
+        PagedServingEngine(cfg, params, drafter=NgramDrafter())
