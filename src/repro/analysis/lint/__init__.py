@@ -1,0 +1,39 @@
+"""repro-lint: AST trace-safety linter for the serving engine's invariants.
+
+Stdlib-``ast`` static analysis — **no jax import, ever** (the CI lint job
+runs it on a jax-less interpreter and asserts that) — enforcing the
+contracts the engine's performance story depends on:
+
+* ``compat-policy``   — feature detection lives in src/repro/compat.py
+                        only (ROADMAP compat-shim policy, PR 1).
+* ``host-sync``       — one device->host sync per decode step; no tracer
+                        concretization inside traced bodies (PRs 1/4/6).
+* ``retrace-hazard``  — one trace per shape class: no per-call jit
+                        wrappers, no unhashed static operands, no mutable
+                        ``self`` capture (the PR 9 ``step_traces``
+                        telemetry's static twin).
+* ``kernel-purity``   — Pallas kernel bodies stay on-device and
+                        static-shaped (PR 2's kernels; CPU-interpret CI
+                        can't catch these, lowering can).
+
+Run: ``python -m repro.analysis.lint [paths] [--rule R] [--json]``
+(mirrors ``python -m repro.runtime.trace --validate``). Suppress a
+deliberate violation with ``# repro-lint: disable=<rule>`` plus a
+justification on the same line or the comment line above. DESIGN.md
+"Static analysis" documents each rule and the invariant's origin.
+"""
+from .core import (Finding, LintResult, REGISTRY, Rule, baseline_lines,
+                   iter_py_files, lint_paths, lint_source, load_baseline,
+                   register)
+from . import rules  # noqa: F401  (registers the rule set on import)
+
+__all__ = [
+    "Finding", "LintResult", "REGISTRY", "Rule", "baseline_lines",
+    "iter_py_files", "lint_paths", "lint_source", "load_baseline",
+    "register", "main",
+]
+
+
+def main(argv=None) -> int:
+    from .__main__ import main as _main
+    return _main(argv)

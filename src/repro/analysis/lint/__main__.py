@@ -1,0 +1,104 @@
+"""CLI: ``python -m repro.analysis.lint [paths] [--rule ...] [--json]``.
+
+Exit codes: 0 = clean (after inline suppressions + baseline), 1 = live
+findings, 2 = usage/IO error. Plain output is one ``path:line: rule-id
+message`` per finding; ``--json`` emits the machine-readable report the
+CI lint job uploads as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import (REGISTRY, baseline_lines, lint_paths)
+
+DEFAULT_BASELINE = ".repro-lint-baseline"
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST trace-safety linter (stdlib-only, no jax "
+                    "needed): host-sync, compat-shim, retrace and "
+                    "kernel-purity invariants.")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to lint (default: src)")
+    p.add_argument("--rule", action="append", dest="rules", metavar="ID",
+                   help="run only this rule (repeatable); see "
+                        "--list-rules")
+    p.add_argument("--json", action="store_true",
+                   help="emit the JSON report on stdout instead of "
+                        "plain findings")
+    p.add_argument("--out", metavar="FILE",
+                   help="also write the JSON report to FILE (the CI "
+                        "artifact)")
+    p.add_argument("--baseline", metavar="FILE", default=None,
+                   help=f"baseline file of grandfathered findings "
+                        f"(default: ./{DEFAULT_BASELINE} if present)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write current findings to the baseline file "
+                        "and exit 0 (ratchet tool; the shipped baseline "
+                        "stays empty)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print rule ids + summaries and exit")
+    return p
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    from . import rules as _rules  # noqa: F401  (populate REGISTRY)
+
+    if args.list_rules:
+        for rid, rule in sorted(REGISTRY.items()):
+            print(f"{rid}: {rule.summary}")
+        return 0
+
+    if args.rules:
+        unknown = [r for r in args.rules if r not in REGISTRY]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+
+    baseline = args.baseline
+    if baseline is None and Path(DEFAULT_BASELINE).is_file():
+        baseline = DEFAULT_BASELINE
+
+    try:
+        result = lint_paths(args.paths, rules=args.rules,
+                            baseline=None if args.write_baseline
+                            else baseline)
+    except FileNotFoundError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        target = baseline or DEFAULT_BASELINE
+        lines = ["# repro-lint baseline: grandfathered findings "
+                 "(path|rule|message).",
+                 "# Target state is EMPTY — fix the tree instead. See "
+                 "DESIGN.md 'Static analysis'."]
+        lines += baseline_lines(result.findings)
+        Path(target).write_text("\n".join(lines) + "\n")
+        print(f"wrote {len(result.findings)} finding(s) to {target}",
+              file=sys.stderr)
+        return 0
+
+    report = result.to_json()
+    if args.out:
+        Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    if args.json:
+        print(json.dumps(report, indent=2))
+    elif result.findings:
+        print(result.render())
+    n = len(result.findings)
+    print(f"repro-lint: {n} finding(s) in {result.files} file(s) "
+          f"({result.suppressed} suppressed inline, "
+          f"{result.baselined} baselined)", file=sys.stderr)
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

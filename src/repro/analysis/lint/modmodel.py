@@ -1,0 +1,410 @@
+"""Module model for the trace-aware rules: which functions are traced?
+
+The host-sync / retrace-hazard / kernel-purity rules all need the same
+question answered from a single module's AST: *which function bodies run
+under a trace* (``jax.jit`` / ``compat.shard_map``) *or inside a Pallas
+kernel* (``pl.pallas_call``)? Per the engine's architecture (DESIGN.md
+"Static analysis") the answer is resolvable module-locally, because every
+traced program is built where it is jitted:
+
+* direct wrap: ``jax.jit(fn)`` / ``shard_map(fn, ...)`` /
+  ``pl.pallas_call(kernel, ...)`` with ``fn`` a module-level or nested def;
+* decorator: ``@jax.jit`` or ``@functools.partial(jax.jit, ...)``;
+* partial: ``pl.pallas_call(functools.partial(kernel, page=8), ...)``;
+* factory: ``self._step_fn = jax.jit(self._make_step())`` — the serving
+  engines' idiom — resolved by finding ``_make_step`` in the module and
+  marking the nested def(s) it ``return``s;
+* transitively: any function a traced function calls by name, when that
+  name resolves to a def in the same module (cross-module calls are out
+  of scope by design — the callee module gets its own model).
+
+Everything here is a heuristic over names, not an import-time analysis —
+that is the point: no jax required, identical on every JAX version.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["ModuleModel", "FuncInfo", "dotted", "call_root",
+           "STATIC_JNP_HELPERS"]
+
+#: spellings that introduce a TRACE boundary (the wrapped callable's body
+#: executes under jax tracing) — matched against the literal dotted name
+#: AND its import-alias-canonicalized form (so ``from repro.compat import
+#: shard_map as _smap`` still classifies)
+_JIT_NAMES = {"jax.jit", "jit", "jax.pjit", "pjit"}
+_SHARD_NAMES = {"compat.shard_map", "shard_map", "repro.compat.shard_map",
+                "jax.experimental.shard_map.shard_map", "jax.shard_map"}
+#: spellings that introduce a KERNEL body (Pallas)
+_KERNEL_NAMES = {"pl.pallas_call", "pallas_call",
+                 "jax.experimental.pallas.pallas_call"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+#: jnp helpers that return static python values, not traced arrays —
+#: excluded from "array-valued expression" inference so
+#: ``if jnp.issubdtype(...)`` is not a tracer-bool false positive
+STATIC_JNP_HELPERS = {
+    "issubdtype", "isdtype", "result_type", "promote_types", "can_cast",
+    "iinfo", "finfo", "dtype", "shape", "ndim",
+}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.jit' for Attribute/Name chains; None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_root(node: ast.AST) -> Optional[str]:
+    """Leftmost name of an Attribute/Name chain ('jax' for jax.lax.scan)."""
+    d = dotted(node)
+    return d.split(".")[0] if d else None
+
+
+class FuncInfo:
+    """One def (module-level, method, or nested) plus resolution data."""
+
+    __slots__ = ("node", "name", "parent", "cls", "nested", "returned",
+                 "kind")
+
+    def __init__(self, node: ast.AST, name: str,
+                 parent: Optional["FuncInfo"], cls: Optional[str]):
+        self.node = node
+        self.name = name
+        self.parent = parent
+        self.cls = cls
+        self.nested: Dict[str, List["FuncInfo"]] = {}
+        self.returned: Set[str] = set()    # names of nested defs returned
+        self.kind: Optional[str] = None    # None | "trace" | "kernel"
+
+    def ancestors(self) -> Iterator["FuncInfo"]:
+        p = self.parent
+        while p is not None:
+            yield p
+            p = p.parent
+
+
+class _Collector(ast.NodeVisitor):
+    """Pass 1: index every def (nested included) + which nested defs each
+    def returns."""
+
+    def __init__(self):
+        self.funcs: List[FuncInfo] = []
+        self.by_name: Dict[str, List[FuncInfo]] = {}
+        self.by_node: Dict[ast.AST, FuncInfo] = {}
+        self._stack: List[FuncInfo] = []
+        self._cls: List[str] = []
+
+    def _def(self, node):
+        parent = self._stack[-1] if self._stack else None
+        cls = self._cls[-1] if self._cls else None
+        info = FuncInfo(node, node.name, parent, cls)
+        self.funcs.append(info)
+        self.by_name.setdefault(node.name, []).append(info)
+        self.by_node[node] = info
+        if parent is not None:
+            parent.nested.setdefault(node.name, []).append(info)
+        self._stack.append(info)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _def
+    visit_AsyncFunctionDef = _def
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._cls.append(node.name)
+        self.generic_visit(node)
+        self._cls.pop()
+
+    def visit_Return(self, node: ast.Return):
+        if (self._stack and isinstance(node.value, ast.Name)
+                and node.value.id in self._stack[-1].nested):
+            self._stack[-1].returned.add(node.value.id)
+        self.generic_visit(node)
+
+
+class ModuleModel:
+    """Resolved trace structure of one module. Public surface:
+
+    * ``trace_roots()`` — outermost (FuncInfo-or-Lambda, kind) pairs whose
+      bodies run traced; kind is "trace" or "kernel".
+    * ``jit_bindings`` — name -> static-operand info for jitted callables
+      bound in this module (``f = jax.jit(..., static_argnames=...)`` or
+      decorated defs), consumed by the retrace rule.
+    """
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        c = _Collector()
+        c.visit(tree)
+        self._funcs = c.funcs
+        self._by_name = c.by_name
+        self._by_node = c.by_node
+        self._traced_lambdas: Dict[ast.Lambda, str] = {}
+        #: local name -> canonical dotted origin, from import statements
+        #: (``from repro.compat import shard_map as _smap`` ->
+        #: {"_smap": "repro.compat.shard_map"})
+        self._alias: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self._alias[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self._alias[a.asname] = a.name
+        #: binding name -> {"static_argnums": tuple, "static_argnames":
+        #: tuple, "line": int}
+        self.jit_bindings: Dict[str, dict] = {}
+        self._find_wrap_sites(tree)
+        self._close_transitively()
+
+    def _canon(self, d: Optional[str]) -> Optional[str]:
+        """Dotted name with its leading segment resolved through the
+        module's import aliases."""
+        if not d:
+            return d
+        head, _, rest = d.partition(".")
+        origin = self._alias.get(head)
+        if origin:
+            return f"{origin}.{rest}" if rest else origin
+        return d
+
+    # -- wrap-site discovery ---------------------------------------------
+
+    def _classify(self, func_expr: ast.AST) -> Optional[str]:
+        d = dotted(func_expr)
+        for name in (d, self._canon(d)):
+            if name in _JIT_NAMES or name in _SHARD_NAMES:
+                return "trace"
+            if name in _KERNEL_NAMES:
+                return "kernel"
+        return None
+
+    def _resolve(self, expr: ast.AST) -> List[FuncInfo]:
+        """Defs a wrap-site argument refers to: Name, self.attr/mod.attr
+        (bare-name match), partial(fn, ...), or factory() -> returned
+        nested defs."""
+        if isinstance(expr, ast.Name):
+            return self._by_name.get(expr.id, [])
+        if isinstance(expr, ast.Attribute):
+            return self._by_name.get(expr.attr, [])
+        if isinstance(expr, ast.Call):
+            d = dotted(expr.func)
+            if (d in _PARTIAL_NAMES or self._canon(d) in _PARTIAL_NAMES) \
+                    and expr.args:
+                return self._resolve(expr.args[0])
+            out: List[FuncInfo] = []
+            for factory in self._resolve(expr.func):
+                for name in factory.returned:
+                    out.extend(factory.nested.get(name, []))
+            return out
+        return []
+
+    def _mark(self, expr: ast.AST, kind: str) -> None:
+        if isinstance(expr, ast.Lambda):
+            self._traced_lambdas[expr] = kind
+            return
+        for info in self._resolve(expr):
+            if info.kind is None:
+                info.kind = kind
+
+    @staticmethod
+    def _static_info(call: ast.Call) -> dict:
+        """Literal static_argnums/static_argnames from a jit call."""
+        def tup(v):
+            if isinstance(v, ast.Constant):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant))
+            return ()
+        nums: Tuple = ()
+        names: Tuple = ()
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                nums = tup(kw.value)
+            elif kw.arg == "static_argnames":
+                names = tup(kw.value)
+        return {"static_argnums": nums, "static_argnames": names,
+                "line": call.lineno}
+
+    def _find_wrap_sites(self, tree: ast.Module) -> None:
+        # value-node -> binding names, for `x = jax.jit(...)` and
+        # `self.x = jax.jit(...)` (retrace rule vets those call sites)
+        assigned_names: Dict[int, List[str]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign):
+                names = []
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        names.append(tgt.id)
+                    elif isinstance(tgt, ast.Attribute):
+                        names.append(tgt.attr)
+                if names:
+                    assigned_names[id(node.value)] = names
+        for node in ast.walk(tree):
+            # decorators: @jax.jit / @functools.partial(jax.jit, ...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    kind = self._classify(dec)
+                    inner = None
+                    if kind is None and isinstance(dec, ast.Call):
+                        dfn = dotted(dec.func)
+                        if (dfn in _PARTIAL_NAMES or self._canon(dfn)
+                                in _PARTIAL_NAMES) and dec.args:
+                            kind = self._classify(dec.args[0])
+                            inner = dec
+                        else:
+                            kind = self._classify(dec.func)
+                            inner = dec
+                    if kind:
+                        info = self._by_node[node]
+                        if info.kind is None:
+                            info.kind = kind
+                        if kind == "trace":
+                            st = self._static_info(inner) if isinstance(
+                                inner, ast.Call) else {
+                                "static_argnums": (), "static_argnames": (),
+                                "line": node.lineno}
+                            self.jit_bindings[node.name] = st
+            if not isinstance(node, ast.Call):
+                continue
+            kind = self._classify(node.func)
+            if kind is None or not node.args:
+                continue
+            self._mark(node.args[0], kind)
+            d = dotted(node.func)
+            if kind == "trace" and (d in _JIT_NAMES
+                                    or self._canon(d) in _JIT_NAMES):
+                for name in assigned_names.get(id(node), []):
+                    self.jit_bindings[name] = self._static_info(node)
+
+    # -- transitive closure ----------------------------------------------
+
+    def _close_transitively(self) -> None:
+        """A def called (by resolvable name) from a traced body is traced
+        too — "transitively, within a module". Kernel kind propagates as
+        kernel (a helper inlined into a kernel body obeys kernel rules)."""
+        work = [f for f in self._funcs if f.kind]
+        while work:
+            src = work.pop()
+            for node in ast.walk(src.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = None
+                if isinstance(node.func, ast.Name):
+                    callee = node.func.id
+                elif isinstance(node.func, ast.Attribute) and isinstance(
+                        node.func.value, ast.Name) and \
+                        node.func.value.id == "self":
+                    callee = node.func.attr
+                if callee is None:
+                    continue
+                for info in self._by_name.get(callee, []):
+                    if info.kind is None:
+                        info.kind = src.kind
+                        work.append(info)
+
+    # -- public queries ---------------------------------------------------
+
+    def trace_roots(self) -> List[Tuple[ast.AST, str]]:
+        """Outermost traced/kernel bodies: (def-or-lambda node, kind).
+        Nested traced defs are reachable by walking the root's subtree,
+        so rules visit each traced line exactly once."""
+        roots: List[Tuple[ast.AST, str]] = []
+        for f in self._funcs:
+            if f.kind and not any(a.kind for a in f.ancestors()):
+                roots.append((f.node, f.kind))
+        root_nodes = [n for n, _ in roots]
+        for lam, kind in self._traced_lambdas.items():
+            if not any(lam in ast.walk(r) for r in root_nodes):
+                roots.append((lam, kind))
+        return roots
+
+    def traced_nodes(self) -> Set[int]:
+        """ids of every AST node inside any traced/kernel body — the
+        host-side rules use this to scope themselves OUT of traces."""
+        out: Set[int] = set()
+        for root, _ in self.trace_roots():
+            for node in ast.walk(root):
+                out.add(id(node))
+        return out
+
+    # -- array-valued name inference --------------------------------------
+
+    def array_names(self, func: ast.AST) -> Set[str]:
+        """Names in ``func``'s body that (heuristically) hold traced
+        arrays: assigned from jnp./lax./jax.lax-rooted calls (minus the
+        static helpers), or derived from an already-tracked name. Function
+        parameters are deliberately NOT assumed to be arrays — traced
+        closures routinely take static config operands, and flagging
+        ``if cfg_flag:`` would bury the real findings."""
+        tracked: Set[str] = set()
+        for _ in range(8):  # fixpoint; depth-8 chains are beyond real code
+            grew = False
+            for node in ast.walk(func):
+                if isinstance(node, (ast.Assign, ast.AnnAssign,
+                                     ast.AugAssign)):
+                    value = node.value
+                    if value is None or not self.is_array_expr(
+                            value, tracked):
+                        continue
+                    targets = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for tgt in targets:
+                        names = [tgt] if isinstance(tgt, ast.Name) else (
+                            tgt.elts if isinstance(tgt, (ast.Tuple, ast.List))
+                            else [])
+                        for el in names:
+                            if isinstance(el, ast.Name) \
+                                    and el.id not in tracked:
+                                tracked.add(el.id)
+                                grew = True
+            if not grew:
+                break
+        return tracked
+
+    def is_array_expr(self, expr: ast.AST, tracked: Set[str]) -> bool:
+        """Does ``expr`` (heuristically) evaluate to a traced array?"""
+        if isinstance(expr, ast.Name):
+            return expr.id in tracked
+        if isinstance(expr, ast.Call):
+            d = dotted(expr.func)
+            if d:
+                parts = d.split(".")
+                if parts[0] == "jnp" and parts[-1] \
+                        not in STATIC_JNP_HELPERS:
+                    return True
+                if parts[0] == "lax":
+                    return True
+                if parts[0] == "jax" and len(parts) > 1 and parts[1] in (
+                        "lax", "nn", "random"):
+                    return True
+                if parts[0] in tracked:       # x.astype(...), x.at[..]...
+                    return True
+            return False
+        if isinstance(expr, ast.BinOp):
+            return (self.is_array_expr(expr.left, tracked)
+                    or self.is_array_expr(expr.right, tracked))
+        if isinstance(expr, ast.UnaryOp):
+            return self.is_array_expr(expr.operand, tracked)
+        if isinstance(expr, (ast.Subscript, ast.Attribute)):
+            return call_root(expr) in tracked
+        if isinstance(expr, ast.Compare):
+            # ==/!=/< on an array is an array; `is None` etc. is not
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in expr.ops):
+                return False
+            return (self.is_array_expr(expr.left, tracked)
+                    or any(self.is_array_expr(c, tracked)
+                           for c in expr.comparators))
+        return False

@@ -1,0 +1,12 @@
+"""Rule modules. Importing this package registers every rule.
+
+Adding a rule is one module here: subclass ``core.Rule``, decorate with
+``@core.register``, add the module to the import list below, and give it
+a fixture pair in tests/test_lint_rules.py (one flagged, one clean, one
+suppressed). Nothing else to touch — the CLI, JSON output, baseline and
+CI step pick new rules up from the registry.
+"""
+from . import compat_policy   # noqa: F401
+from . import host_sync       # noqa: F401
+from . import retrace_hazard  # noqa: F401
+from . import kernel_purity   # noqa: F401

@@ -1,0 +1,95 @@
+"""compat-policy: version feature-detection lives in compat.py, nowhere
+else.
+
+The invariant (ROADMAP.md "JAX version support & compat-shim policy",
+established in PR 1): every API that changed across the supported JAX
+range is resolved ONCE, by feature detection, in ``src/repro/compat.py``
+— call sites import the shim. ``hasattr(jax, ...)`` at a call site means
+the next rename fails mid-kernel instead of at import; version-string
+comparison breaks on prereleases and is banned outright.
+
+Flags, outside compat.py:
+
+* ``hasattr(<jax-ish module>, ...)``
+* 3-arg ``getattr(<jax-ish module>, ..., default)`` (the probing form;
+  2-arg getattr on runtime objects is ordinary duck typing and is fine)
+* any use of ``jax.__version__`` / ``jaxlib.__version__`` etc.
+* ``importlib.metadata.version("jax"/"jaxlib")`` probes
+
+"jax-ish module" = a name chain rooted at jax / jnp / lax / pl / pltpu /
+pallas / jaxlib — the conventional import spellings this repo uses.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..core import FileContext, Finding, Rule, register
+from ..modmodel import call_root
+
+_JAX_ROOTS = {"jax", "jnp", "lax", "pl", "pltpu", "pallas", "jaxlib"}
+
+
+def _is_compat_module(ctx: FileContext) -> bool:
+    # the one file allowed to probe: src/repro/compat.py (fixtures named
+    # compat.py under a repro/ dir count too, so tests can exercise the
+    # exemption without a full tree)
+    return ctx.parts[-1] == "compat.py" and "repro" in ctx.parts
+
+
+@register
+class CompatPolicyRule(Rule):
+    id = "compat-policy"
+    summary = ("jax/pltpu/pallas feature probes and version checks belong "
+               "in src/repro/compat.py only (ROADMAP compat-shim policy)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if _is_compat_module(ctx):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(ctx, node)
+            elif isinstance(node, ast.Attribute):
+                if node.attr == "__version__" \
+                        and call_root(node) in _JAX_ROOTS:
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.id,
+                        f"version check on `{call_root(node)}.__version__`"
+                        " — feature-detect in compat.py instead (version"
+                        " strings lie on prereleases)")
+
+    def _check_call(self, ctx: FileContext,
+                    node: ast.Call) -> Iterator[Finding]:
+        fname = node.func.id if isinstance(node.func, ast.Name) else None
+        if fname == "hasattr" and node.args:
+            root = call_root(node.args[0])
+            if root in _JAX_ROOTS:
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, self.id,
+                    f"`hasattr({root}, ...)` outside compat.py — move the"
+                    " feature probe into a compat.py shim and import it")
+        elif fname == "getattr" and len(node.args) >= 3:
+            root = call_root(node.args[0])
+            if root in _JAX_ROOTS:
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, self.id,
+                    f"probing `getattr({root}, ..., default)` outside"
+                    " compat.py — move the feature probe into a compat.py"
+                    " shim and import it")
+        else:
+            d_parts = []
+            n = node.func
+            while isinstance(n, ast.Attribute):
+                d_parts.append(n.attr)
+                n = n.value
+            if isinstance(n, ast.Name):
+                d_parts.append(n.id)
+            d = ".".join(reversed(d_parts))
+            if d.endswith("metadata.version") or d == "version":
+                if node.args and isinstance(node.args[0], ast.Constant) \
+                        and str(node.args[0].value) in ("jax", "jaxlib"):
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.id,
+                        f"package-version probe for "
+                        f"'{node.args[0].value}' outside compat.py — "
+                        "feature-detect the API instead")

@@ -1,0 +1,130 @@
+"""host-sync: protect the one-host-sync-per-decode-step contract.
+
+The serving loop's latency story (PR 1, re-defended by hand in PRs 4 and
+6) is that exactly ONE device->host synchronization happens per decode
+step — the `jax.device_get((toks, done))` after the step program. Every
+other sync is either a latency regression (host blocks mid-pipeline) or,
+inside a traced function, a silent trace-time concretization that turns
+a traced operand into a baked-in constant (= one retrace per value).
+
+Two sub-patterns:
+
+* **sync-point** (host code under src/, outside any traced body): calls
+  to ``jax.device_get`` / ``jax.block_until_ready`` /
+  ``x.block_until_ready()`` / ``x.item()``. Every one of these is an
+  architectural event: the blessed per-step sync and the timed
+  benchmarks carry an inline ``# repro-lint: disable=host-sync`` marker
+  with a one-line justification; an unmarked sync is a finding. Scoped
+  out of tests/ and benchmarks/ (measurement code syncs on purpose,
+  per-call).
+
+* **in-trace** (inside bodies resolved as traced/kernel by the module
+  model — see modmodel.py): the sync calls above, plus
+  ``int()/float()/bool()/np.asarray()`` coercions of array-valued
+  expressions, plus Python ``if``/``while`` on array-valued tests
+  (including ``jnp.any(...)``-style reductions in the test) — each of
+  these either aborts tracing (TracerBoolConversionError) or silently
+  constant-folds a traced value at trace time. Array-valuedness is
+  inferred per function (names assigned from jnp/lax expressions);
+  static config operands never trigger it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..core import FileContext, Finding, Rule, register
+from ..modmodel import dotted
+
+_SYNC_DOTTED = {"jax.device_get", "jax.block_until_ready"}
+_SYNC_METHODS = {"block_until_ready", "item"}
+_COERCIONS = {"int", "float", "bool"}
+_NP_COERCIONS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+
+
+def _sync_call(node: ast.Call):
+    """(spelling, True) if `node` is an explicit device->host sync."""
+    d = dotted(node.func)
+    if d in _SYNC_DOTTED:
+        return d
+    if isinstance(node.func, ast.Attribute) \
+            and node.func.attr in _SYNC_METHODS and not node.args:
+        return f".{node.func.attr}()"
+    return None
+
+
+@register
+class HostSyncRule(Rule):
+    id = "host-sync"
+    summary = ("one host sync per decode step: unmarked device_get/"
+               "block_until_ready/.item() in engine code, and tracer "
+               "coercions (int/bool/np.asarray, if/while on arrays) "
+               "inside jitted/shard_mapped/pallas bodies")
+    # measurement code (tests, benches, demos) syncs deliberately and
+    # per-call — the sync-point sub-pattern would be pure noise there.
+    # The in-trace sub-pattern still applies everywhere via check().
+    _HOST_SCOPE_SKIP = ("tests", "benchmarks", "examples", "experiments")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        model = ctx.model
+        in_trace = model.traced_nodes()
+
+        # -- sub-pattern: sync points in host-side engine code ----------
+        if not ctx.in_dir(*self._HOST_SCOPE_SKIP):
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.Call) and id(node) not in in_trace:
+                    spelling = _sync_call(node)
+                    if spelling:
+                        yield Finding(
+                            ctx.path, node.lineno, node.col_offset, self.id,
+                            f"host sync `{spelling}` — the engine contract "
+                            "is ONE sync per decode step; if this one is "
+                            "deliberate, mark it with a justification "
+                            "comment")
+
+        # -- sub-pattern: concretization inside traced bodies -----------
+        for root, kind in model.trace_roots():
+            tracked: Set[str] = model.array_names(root)
+            where = "Pallas kernel body" if kind == "kernel" \
+                else "traced function"
+            for node in ast.walk(root):
+                if isinstance(node, ast.Call):
+                    spelling = _sync_call(node)
+                    if spelling:
+                        yield Finding(
+                            ctx.path, node.lineno, node.col_offset, self.id,
+                            f"`{spelling}` inside a {where} — syncs at "
+                            "trace time, constant-folding the traced "
+                            "value (one retrace per distinct value)")
+                        continue
+                    yield from self._check_coercion(
+                        ctx, node, tracked, where, model)
+                elif isinstance(node, (ast.If, ast.While)):
+                    if model.is_array_expr(node.test, tracked):
+                        kw = "while" if isinstance(node, ast.While) \
+                            else "if"
+                        yield Finding(
+                            ctx.path, node.lineno, node.col_offset, self.id,
+                            f"Python `{kw}` on an array-valued test inside "
+                            f"a {where} — tracers have no truth value; use "
+                            "jnp.where / lax.cond / lax.select")
+
+    def _check_coercion(self, ctx, node: ast.Call, tracked, where,
+                        model) -> Iterator[Finding]:
+        d = dotted(node.func)
+        name = node.func.id if isinstance(node.func, ast.Name) else None
+        if not node.args:
+            return
+        arg = node.args[0]
+        if name in _COERCIONS and model.is_array_expr(arg, tracked):
+            yield Finding(
+                ctx.path, node.lineno, node.col_offset, self.id,
+                f"`{name}()` on an array-valued operand inside a {where} "
+                "— concretizes the tracer (sync or TracerError); keep it "
+                "an array or hoist the value to a static operand")
+        elif d in _NP_COERCIONS and model.is_array_expr(arg, tracked):
+            yield Finding(
+                ctx.path, node.lineno, node.col_offset, self.id,
+                f"`{d}()` on an array-valued operand inside a {where} — "
+                "numpy coercion forces a device sync at trace time; use "
+                "jnp equivalents on traced values")

@@ -1,0 +1,164 @@
+"""kernel-purity: Pallas kernel bodies stay on-device and static-shaped.
+
+A kernel body (any def the module model resolves as wrapped by
+``pl.pallas_call``, incl. ``functools.partial``-bound kernels and their
+in-module helpers) executes per grid step on the core. Host-side
+constructs there either fail at lowering or — worse, in interpret mode —
+silently work on CPU and then explode on TPU, which is exactly the class
+of bug the CPU-interpret CI contract cannot catch. Flags:
+
+* ``numpy`` calls (``np.*``): host arrays in a device body. Trace-time
+  constants belong outside the kernel, passed via closure/partial.
+* ``print(...)``: host I/O; use ``pl.debug_print`` which lowers.
+* host callbacks: ``jax.pure_callback`` / ``jax.debug.callback`` /
+  ``jax.debug.print`` / ``io_callback`` — none lower inside a kernel.
+* reductions over **dynamically-shaped** slices: ``jnp.sum(x[a:n])`` or
+  ``pl.ds(start, size)`` where the bound/size is a value loaded from a
+  Ref or derived from ``pl.program_id`` — Pallas block shapes are
+  static; dynamic extents must be expressed as masks over a static
+  shape (the online-softmax kernels' ``pos < length`` idiom).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..core import FileContext, Finding, Rule, register
+from ..modmodel import dotted
+
+_CALLBACKS = {
+    "jax.pure_callback", "jax.debug.callback", "jax.debug.print",
+    "jax.experimental.io_callback", "io_callback", "pure_callback",
+}
+_REDUCTIONS = {
+    "sum", "max", "min", "mean", "prod", "any", "all", "argmax",
+    "argmin", "cumsum", "cumprod",
+}
+_DS_NAMES = {"pl.ds", "pl.dslice"}
+
+
+def _kernel_dynamic_names(root: ast.AST) -> Set[str]:
+    """Names holding per-grid-step traced values inside a kernel body:
+    loads from Ref params (``x_ref[...]``), ``pl.program_id`` results,
+    and arithmetic derived from either. Static tile sizes arrive as
+    partial-bound python ints and never enter this set."""
+    params: Set[str] = set()
+    if isinstance(root, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = root.args
+        for p in list(a.args) + list(a.posonlyargs) + list(a.kwonlyargs):
+            params.add(p.arg)
+
+    def dynamic(expr: ast.AST, tracked: Set[str]) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in tracked
+        if isinstance(expr, ast.Subscript):
+            base = expr.value
+            return isinstance(base, ast.Name) and base.id in params
+        if isinstance(expr, ast.Call):
+            d = dotted(expr.func)
+            if d in ("pl.program_id", "pl.num_programs"):
+                return True
+            if d in ("pl.load",) and expr.args:
+                return dynamic(expr.args[0], tracked) or (
+                    isinstance(expr.args[0], ast.Name)
+                    and expr.args[0].id in params)
+            return False
+        if isinstance(expr, ast.BinOp):
+            return dynamic(expr.left, tracked) or dynamic(expr.right,
+                                                          tracked)
+        if isinstance(expr, ast.UnaryOp):
+            return dynamic(expr.operand, tracked)
+        return False
+
+    tracked: Set[str] = set()
+    for _ in range(8):
+        grew = False
+        for node in ast.walk(root):
+            if isinstance(node, ast.Assign) and dynamic(node.value, tracked):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id not in tracked:
+                        tracked.add(tgt.id)
+                        grew = True
+        if not grew:
+            break
+    return tracked
+
+
+@register
+class KernelPurityRule(Rule):
+    id = "kernel-purity"
+    summary = ("Pallas kernel bodies: no numpy/print/host callbacks, no "
+               "reductions over dynamically-shaped slices (mask a static "
+               "shape instead)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for root, kind in ctx.model.trace_roots():
+            if kind != "kernel":
+                continue
+            dyn = _kernel_dynamic_names(root)
+            for node in ast.walk(root):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted(node.func)
+                if d and d.split(".")[0] in ("np", "numpy"):
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.id,
+                        f"`{d}(...)` inside a Pallas kernel body — numpy "
+                        "is host-side; compute trace-time constants "
+                        "outside the kernel and close over them")
+                elif d == "print":
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.id,
+                        "`print()` inside a Pallas kernel body — host "
+                        "I/O does not lower; use pl.debug_print")
+                elif d in _CALLBACKS:
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.id,
+                        f"host callback `{d}` inside a Pallas kernel "
+                        "body — callbacks do not lower inside kernels")
+                else:
+                    yield from self._check_dynamic_shape(ctx, node, dyn)
+
+    def _check_dynamic_shape(self, ctx, node: ast.Call,
+                             dyn: Set[str]) -> Iterator[Finding]:
+        d = dotted(node.func)
+        # pl.ds(start, SIZE): traced start is the point of pl.ds; a
+        # traced SIZE is a dynamic shape
+        if d in _DS_NAMES and len(node.args) >= 2:
+            size = node.args[1]
+            if self._is_dyn(size, dyn):
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, self.id,
+                    f"`{d}` with a traced size — Pallas extents are "
+                    "static; keep the size static and mask the tail")
+            return
+        # jnp.<reduction>(x[a:b]) with a traced bound
+        if not (d and d.startswith("jnp.")
+                and d.split(".")[-1] in _REDUCTIONS and node.args):
+            return
+        arg = node.args[0]
+        if isinstance(arg, ast.Subscript):
+            sl = arg.slice
+            bounds = []
+            if isinstance(sl, ast.Slice):
+                bounds = [sl.lower, sl.upper]
+            elif isinstance(sl, ast.Tuple):
+                for el in sl.elts:
+                    if isinstance(el, ast.Slice):
+                        bounds += [el.lower, el.upper]
+            if any(b is not None and self._is_dyn(b, dyn) for b in bounds):
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, self.id,
+                    f"`{d}` over a dynamically-shaped slice — the "
+                    "extent is a traced value; reduce over the static "
+                    "block and mask rows past the live extent")
+
+    @staticmethod
+    def _is_dyn(expr: ast.AST, dyn: Set[str]) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and n.id in dyn:
+                return True
+            if isinstance(n, ast.Call) and dotted(n.func) in (
+                    "pl.program_id", "pl.num_programs"):
+                return True
+        return False

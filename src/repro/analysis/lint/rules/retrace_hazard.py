@@ -1,0 +1,151 @@
+"""retrace-hazard: keep jitted entry points to one trace per shape class.
+
+The engine's trace economy (one trace per prefill bucket, one decode
+trace per policy mix — the `step_traces` telemetry from PR 9 watches it
+at runtime) dies quietly when a call site hands a jitted function
+something that hashes differently every call, or when a jitted closure
+reads mutable object state that tracing bakes in as a constant. This
+rule catches the static-analysis-visible members of that class:
+
+* **jit-per-call**: ``jax.jit(f)(x)`` inside a function body — a fresh
+  jit wrapper (fresh trace cache) is built on every invocation. Hoist
+  the wrapper to module/init scope. Module-level one-shots are fine.
+
+* **unhashable-static**: a call to a known jitted binding (``f = jax.jit
+  (..., static_argnums/names=...)`` or a ``@partial(jax.jit, ...)`` def
+  in the same module) passing, in a static position, a list/dict/set
+  display (TypeError at runtime) or a freshly-constructed object
+  (identity-hashed unless the class defines __eq__/__hash__ — one
+  retrace per call).
+
+* **self-capture**: a traced closure reading ``self.<attr>``. Tracing
+  captures the attribute's value at trace time; mutating it later
+  silently does nothing (or forces a retrace if it feeds shapes). The
+  engine idiom is to hoist ``self`` reads into factory locals before the
+  closure (see serving.py's ``_make_*`` methods); the deliberate
+  trace-time telemetry counters carry inline markers.
+
+Scoped out of tests/ and benchmarks/: a test calling ``jax.jit(f)(x)``
+once is not a serving-path hazard.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..core import FileContext, Finding, Rule, register
+from ..modmodel import dotted
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.pjit", "pjit"}
+
+
+def _fresh_static(expr: ast.AST) -> str:
+    """Why `expr` is a retrace hazard in a static position ('' = fine)."""
+    if isinstance(expr, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return "unhashable literal (TypeError as a static operand)"
+    if isinstance(expr, ast.Call):
+        d = dotted(expr.func) or "<expr>"
+        if d in ("tuple", "frozenset", "str", "int", "float", "bool"):
+            return ""
+        return (f"freshly-constructed `{d}(...)` — identity-hashed "
+                "unless the class defines __eq__/__hash__, so every call "
+                "retraces")
+    if isinstance(expr, ast.Tuple) and any(
+            _fresh_static(e) for e in expr.elts):
+        return "tuple containing freshly-constructed elements"
+    return ""
+
+
+@register
+class RetraceHazardRule(Rule):
+    id = "retrace-hazard"
+    summary = ("one trace per shape class: no per-call jax.jit wrappers, "
+               "no unhashed objects in static positions, no mutable "
+               "self.<attr> captured by jitted closures")
+    skip_dirs = ("tests", "benchmarks")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        model = ctx.model
+        yield from self._jit_per_call(ctx)
+        yield from self._static_operands(ctx, model)
+        yield from self._self_capture(ctx, model)
+
+    # -- jax.jit(f)(x) inside a function body ---------------------------
+
+    def _jit_per_call(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Call)
+                        and dotted(node.func.func) in _JIT_NAMES):
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.id,
+                        "`jax.jit(...)(...)` builds a fresh trace cache "
+                        "on every call — hoist the jitted wrapper to "
+                        "module or __init__ scope")
+
+    # -- static positions at call sites of known jitted bindings --------
+
+    def _static_operands(self, ctx: FileContext, model) -> Iterator[Finding]:
+        bindings = model.jit_bindings
+        if not bindings:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = None
+            if isinstance(node.func, ast.Name):
+                name = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                name = node.func.attr
+            info = bindings.get(name)
+            if info is None:
+                continue
+            for pos in info["static_argnums"]:
+                if isinstance(pos, int) and pos < len(node.args):
+                    why = _fresh_static(node.args[pos])
+                    if why:
+                        yield Finding(
+                            ctx.path, node.lineno, node.col_offset,
+                            self.id,
+                            f"static arg {pos} of jitted `{name}`: {why}")
+            static_names = set(info["static_argnames"])
+            for kw in node.keywords:
+                if kw.arg in static_names:
+                    why = _fresh_static(kw.value)
+                    if why:
+                        yield Finding(
+                            ctx.path, node.lineno, node.col_offset,
+                            self.id,
+                            f"static kwarg `{kw.arg}` of jitted "
+                            f"`{name}`: {why}")
+
+    # -- traced closures reading self.<attr> ----------------------------
+
+    def _self_capture(self, ctx: FileContext, model) -> Iterator[Finding]:
+        for root, kind in model.trace_roots():
+            if kind != "trace":
+                continue   # kernel refs can't close over self anyway
+            # `self.method(...)` is resolved by the transitive-trace
+            # model (the method body gets its own findings); attribute
+            # READS are the captured-state hazard this flags
+            called = {id(n.func) for n in ast.walk(root)
+                      if isinstance(n, ast.Call)}
+            seen: Set[str] = set()
+            for node in ast.walk(root):
+                if (isinstance(node, ast.Attribute)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self"
+                        and id(node) not in called
+                        and node.attr not in seen):
+                    seen.add(node.attr)
+                    yield Finding(
+                        ctx.path, node.lineno, node.col_offset, self.id,
+                        f"jitted closure captures `self.{node.attr}` — "
+                        "tracing bakes in the value at trace time (later "
+                        "mutation is ignored or retraces); hoist it to a "
+                        "factory local or pass it as an operand")
+        return

@@ -44,6 +44,7 @@ def save(path: str, state, *, extra: Optional[Dict[str, Any]] = None) -> None:
     arrs = {}
     manifest = {"keys": [], "dtypes": {}, "extra": extra or {}}
     for k, v in flat.items():
+        # repro-lint: disable=host-sync — checkpoint save IS the D2H copy
         a = np.asarray(jax.device_get(v))
         if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
             # npz cannot round-trip ml_dtypes (bfloat16 etc.): store the
@@ -85,6 +86,7 @@ class AsyncCheckpointer:
         self.wait()
         # device_get on the caller thread (cheap on CPU; on TPU this is the
         # D2H copy we deliberately take before releasing the step).
+        # repro-lint: disable=host-sync — the pre-async snapshot named above
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                   state)
 

@@ -253,6 +253,7 @@ class DraftModelDrafter:
                 jnp.asarray(self._tables[rid])[None, :],
                 jnp.asarray(block), jnp.asarray([pos], jnp.int32))
             self.decode_calls += 1
+            # repro-lint: disable=host-sync — host-side drafting by design
             return np.asarray(jax.device_get(out)).reshape(-1)
 
         # ingest the context delta in pow2-padded multi-token blocks

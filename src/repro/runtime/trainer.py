@@ -159,6 +159,7 @@ class Trainer:
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
             t0 = time.perf_counter()
             self.state, metrics = self.step_fn(self.state, batch)
+            # repro-lint: disable=host-sync — step timing needs the sync
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             slow = self.monitor.observe(dt)

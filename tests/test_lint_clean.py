@@ -1,0 +1,34 @@
+"""The tree-is-clean gate: running repro-lint over the real repo (src,
+tests, benchmarks) must exit 0 with the shipped (empty) baseline — every
+deliberate invariant break in the codebase carries an inline
+`# repro-lint: disable=<rule>` marker with its justification, so new
+violations are the ONLY thing that can fail this test (and the CI lint
+job that runs the same command without jax installed)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_repo_lints_clean():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint",
+         "src", "tests", "benchmarks"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, (
+        "repro-lint found new violations (fix them or add a justified "
+        "`# repro-lint: disable=<rule>` marker):\n" + r.stdout + r.stderr)
+
+
+def test_shipped_baseline_is_empty():
+    # the ratchet starts at zero: nothing is grandfathered
+    base = REPO_ROOT / ".repro-lint-baseline"
+    assert base.exists(), "shipped baseline file missing"
+    lines = [ln for ln in base.read_text().splitlines()
+             if ln.strip() and not ln.lstrip().startswith("#")]
+    assert lines == [], f"baseline must ship empty, has: {lines[:5]}"

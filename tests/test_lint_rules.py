@@ -1,0 +1,564 @@
+"""Fixture tests for repro-lint (src/repro/analysis/lint): per rule, at
+least one flagged snippet per sub-pattern, one clean snippet, and proof
+the `# repro-lint: disable=` marker is honored; plus CLI-level contracts
+(JSON schema, exit codes, baseline, gitignore skipping, and the no-jax
+import guarantee the CI lint job relies on).
+
+Deliberately jax-free: the linter is stdlib-ast-only and these tests run
+on an interpreter with no jax at all (that IS one of the assertions).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import REGISTRY, lint_source
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+def lint(src, path="pkg/engine.py", rules=None):
+    return lint_source(textwrap.dedent(src), path=path, rules=rules)
+
+
+# --------------------------------------------------------------------------
+# registry basics
+# --------------------------------------------------------------------------
+
+def test_registry_has_the_contracted_rules():
+    assert {"compat-policy", "host-sync", "retrace-hazard",
+            "kernel-purity"} <= set(REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# compat-policy
+# --------------------------------------------------------------------------
+
+class TestCompatPolicy:
+    def test_hasattr_on_jax_flagged(self):
+        fs = lint("import jax\nok = hasattr(jax, 'set_mesh')\n",
+                  rules=["compat-policy"])
+        assert rules_of(fs) == ["compat-policy"] and fs[0].line == 2
+
+    def test_three_arg_getattr_on_pltpu_flagged(self):
+        fs = lint(
+            "from jax.experimental.pallas import tpu as pltpu\n"
+            "cp = getattr(pltpu, 'CompilerParams', None)\n",
+            rules=["compat-policy"])
+        assert rules_of(fs) == ["compat-policy"]
+
+    def test_version_string_comparison_flagged(self):
+        fs = lint("import jax\nold = jax.__version__ < '0.5'\n",
+                  rules=["compat-policy"])
+        assert rules_of(fs) == ["compat-policy"]
+
+    def test_metadata_version_probe_flagged(self):
+        fs = lint(
+            "import importlib.metadata\n"
+            "v = importlib.metadata.version('jax')\n",
+            rules=["compat-policy"])
+        assert rules_of(fs) == ["compat-policy"]
+
+    def test_compat_module_itself_exempt(self):
+        fs = lint("import jax\nok = hasattr(jax, 'set_mesh')\n",
+                  path="src/repro/compat.py", rules=["compat-policy"])
+        assert fs == []
+
+    def test_duck_typing_getattr_clean(self):
+        # 3-arg getattr on runtime objects is ordinary duck typing
+        fs = lint("def f(req):\n    return getattr(req, 'params', None)\n",
+                  rules=["compat-policy"])
+        assert fs == []
+
+    def test_two_arg_getattr_on_jax_clean(self):
+        fs = lint("import jax\ng = getattr(jax, 'jit')\n",
+                  rules=["compat-policy"])
+        assert fs == []
+
+    def test_suppression_honored(self):
+        fs = lint(
+            "import jax\n"
+            "ok = hasattr(jax, 'x')  # repro-lint: disable=compat-policy\n",
+            rules=["compat-policy"])
+        assert fs == []
+
+
+# --------------------------------------------------------------------------
+# host-sync
+# --------------------------------------------------------------------------
+
+_TRACED_FACTORY = """
+    import jax
+    import jax.numpy as jnp
+
+    class Engine:
+        def __init__(self):
+            self._step_fn = jax.jit(self._make_step())
+
+        def _make_step(self):
+            def step(tok, pos):
+                {body}
+            return step
+"""
+
+
+def traced(body):
+    lines = textwrap.dedent(body).strip().splitlines()
+    pad = "\n".join(" " * 12 + ln for ln in lines)
+    return textwrap.dedent(_TRACED_FACTORY).replace(
+        " " * 12 + "{body}", pad)
+
+
+class TestHostSync:
+    def test_sync_point_in_engine_code_flagged(self):
+        fs = lint("import jax\ndef loop(arr):\n"
+                  "    return jax.device_get(arr)\n", rules=["host-sync"])
+        assert rules_of(fs) == ["host-sync"]
+
+    def test_item_and_block_until_ready_flagged(self):
+        fs = lint("def loop(arr):\n"
+                  "    arr.block_until_ready()\n"
+                  "    return arr.item()\n", rules=["host-sync"])
+        assert rules_of(fs) == ["host-sync", "host-sync"]
+
+    def test_sync_point_scoped_out_of_tests_and_benchmarks(self):
+        src = "import jax\ndef timed(x):\n    jax.block_until_ready(x)\n"
+        assert lint(src, path="tests/test_x.py",
+                    rules=["host-sync"]) == []
+        assert lint(src, path="benchmarks/bench.py",
+                    rules=["host-sync"]) == []
+        assert rules_of(lint(src, path="src/repro/runtime/x.py",
+                             rules=["host-sync"])) == ["host-sync"]
+
+    def test_if_on_array_inside_factory_traced_closure(self):
+        # the serving-engine idiom: jax.jit(self._make_step()) — the
+        # closure the factory returns is traced
+        fs = lint(traced("""
+            s = jnp.sum(tok)
+            if s > 0:
+                return pos
+            return s
+        """), rules=["host-sync"])
+        assert rules_of(fs) == ["host-sync"]
+        assert "`if` on an array-valued test" in fs[0].message
+
+    def test_while_on_array_flagged(self):
+        fs = lint(traced("""
+            s = jnp.max(tok)
+            while s > 0:
+                s = s - 1
+            return s
+        """), rules=["host-sync"])
+        assert any("`while`" in f.message for f in fs)
+
+    def test_coercions_inside_trace_flagged(self):
+        fs = lint(traced("""
+            s = jnp.sum(tok)
+            a = int(s)
+            b = float(s + 1)
+            c = bool(jnp.any(tok))
+            return a, b, c
+        """), rules=["host-sync"])
+        assert rules_of(fs) == ["host-sync"] * 3
+
+    def test_np_asarray_inside_trace_flagged(self):
+        fs = lint(traced("""
+            import numpy as np
+            s = jnp.sum(tok)
+            return np.asarray(s)
+        """), rules=["host-sync"])
+        assert rules_of(fs) == ["host-sync"]
+
+    def test_device_get_inside_trace_flagged(self):
+        fs = lint(traced("""
+            s = jnp.sum(tok)
+            return jax.device_get(s)
+        """), rules=["host-sync"])
+        assert len(fs) == 1 and "trace" in fs[0].message
+
+    def test_transitive_helper_within_module_flagged(self):
+        fs = lint("""
+            import jax
+            import jax.numpy as jnp
+
+            def helper(x):
+                m = jnp.max(x)
+                if m > 0:
+                    return m
+                return x
+
+            def step(x):
+                return helper(x)
+
+            step_fn = jax.jit(step)
+        """, rules=["host-sync"])
+        assert rules_of(fs) == ["host-sync"]
+
+    def test_shard_map_wrapped_body_flagged(self):
+        fs = lint("""
+            from repro import compat
+            import jax.numpy as jnp
+
+            def body(x):
+                s = jnp.sum(x)
+                return int(s)
+
+            f = compat.shard_map(body, None, in_specs=(), out_specs=())
+        """, rules=["host-sync"])
+        assert rules_of(fs) == ["host-sync"]
+
+    def test_static_control_flow_clean(self):
+        # host control flow on static values at trace time is the normal
+        # closure-building idiom — must NOT flag
+        fs = lint(traced("""
+            if pos is None:
+                pos = 0
+            out = jnp.where(tok > 0, tok, pos)
+            return out
+        """), rules=["host-sync"])
+        assert fs == []
+
+    def test_static_jnp_helpers_clean(self):
+        fs = lint(traced("""
+            if jnp.issubdtype(tok.dtype, jnp.integer):
+                tok = tok.astype(jnp.float32)
+            return tok
+        """), rules=["host-sync"])
+        assert fs == []
+
+    def test_host_function_coercions_clean(self):
+        fs = lint("def bucket(n):\n    return int(n) * 2\n",
+                  rules=["host-sync"])
+        assert fs == []
+
+    def test_suppression_honored(self):
+        fs = lint(
+            "import jax\ndef loop(arr):\n"
+            "    # repro-lint: disable=host-sync — the one blessed sync\n"
+            "    return jax.device_get(arr)\n", rules=["host-sync"])
+        assert fs == []
+
+
+# --------------------------------------------------------------------------
+# retrace-hazard
+# --------------------------------------------------------------------------
+
+class TestRetraceHazard:
+    def test_jit_per_call_flagged(self):
+        fs = lint("""
+            import jax
+
+            def serve(x):
+                return jax.jit(lambda a: a + 1)(x)
+        """, rules=["retrace-hazard"])
+        assert rules_of(fs) == ["retrace-hazard"]
+
+    def test_module_level_jit_call_clean(self):
+        fs = lint("import jax\ndef f(x):\n    return x\n"
+                  "y = jax.jit(f)(3)\n", rules=["retrace-hazard"])
+        assert fs == []
+
+    def test_fresh_object_in_static_kwarg_flagged(self):
+        fs = lint("""
+            import jax
+
+            def f(x, cfg):
+                return x
+
+            step = jax.jit(f, static_argnames=("cfg",))
+
+            class Cfg:
+                pass
+
+            def serve(x):
+                return step(x, cfg=Cfg())
+        """, rules=["retrace-hazard"])
+        assert rules_of(fs) == ["retrace-hazard"]
+        assert "identity-hashed" in fs[0].message
+
+    def test_unhashable_static_positional_flagged(self):
+        fs = lint("""
+            import jax
+
+            def f(x, shape):
+                return x
+
+            step = jax.jit(f, static_argnums=(1,))
+
+            def serve(x):
+                return step(x, [1, 2])
+        """, rules=["retrace-hazard"])
+        assert rules_of(fs) == ["retrace-hazard"]
+        assert "unhashable" in fs[0].message
+
+    def test_constant_static_operand_clean(self):
+        fs = lint("""
+            import jax
+
+            def f(x, cfg):
+                return x
+
+            step = jax.jit(f, static_argnames=("cfg",))
+            CFG = object()
+
+            def serve(x):
+                return step(x, cfg=CFG)
+        """, rules=["retrace-hazard"])
+        assert fs == []
+
+    def test_self_capture_in_jitted_closure_flagged(self):
+        fs = lint("""
+            import jax
+
+            class Engine:
+                def __init__(self):
+                    self.scale = 2.0
+                    self._fn = jax.jit(self._make())
+
+                def _make(self):
+                    def step(x):
+                        return x * self.scale
+                    return step
+        """, rules=["retrace-hazard"])
+        assert rules_of(fs) == ["retrace-hazard"]
+        assert "self.scale" in fs[0].message
+
+    def test_hoisted_factory_local_clean(self):
+        # the serving idiom: read self BEFORE the closure
+        fs = lint("""
+            import jax
+
+            class Engine:
+                def __init__(self):
+                    self.scale = 2.0
+                    self._fn = jax.jit(self._make())
+
+                def _make(self):
+                    scale = self.scale
+                    def step(x):
+                        return x * scale
+                    return step
+        """, rules=["retrace-hazard"])
+        assert fs == []
+
+    def test_rule_scoped_out_of_tests(self):
+        src = ("import jax\ndef t(x):\n"
+               "    return jax.jit(lambda a: a)(x)\n")
+        assert lint(src, path="tests/test_y.py",
+                    rules=["retrace-hazard"]) == []
+
+    def test_suppression_honored(self):
+        fs = lint("""
+            import jax
+
+            def serve(x):
+                # repro-lint: disable=retrace-hazard — one-shot warmup
+                return jax.jit(lambda a: a + 1)(x)
+        """, rules=["retrace-hazard"])
+        assert fs == []
+
+
+# --------------------------------------------------------------------------
+# kernel-purity
+# --------------------------------------------------------------------------
+
+_KERNEL = """
+    import functools
+    import numpy as np
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kern(x_ref, o_ref, *, page):
+        {body}
+
+    call = pl.pallas_call(functools.partial(kern, page=8))
+"""
+
+
+def kernel(body):
+    lines = textwrap.dedent(body).strip().splitlines()
+    pad = "\n".join(" " * 4 + ln for ln in lines)
+    return textwrap.dedent(_KERNEL).replace(" " * 4 + "{body}", pad)
+
+
+class TestKernelPurity:
+    def test_numpy_call_flagged(self):
+        fs = lint(kernel("o_ref[...] = np.zeros(3)\n"),
+                  rules=["kernel-purity"])
+        assert rules_of(fs) == ["kernel-purity"]
+
+    def test_print_flagged(self):
+        fs = lint(kernel("print('dbg')\no_ref[...] = x_ref[...]\n"),
+                  rules=["kernel-purity"])
+        assert rules_of(fs) == ["kernel-purity"]
+        assert "pl.debug_print" in fs[0].message
+
+    def test_host_callback_flagged(self):
+        fs = lint(kernel("""
+            import jax
+            jax.debug.callback(lambda: None)
+            o_ref[...] = x_ref[...]
+        """), rules=["kernel-purity"])
+        assert rules_of(fs) == ["kernel-purity"]
+
+    def test_reduction_over_dynamic_slice_flagged(self):
+        fs = lint(kernel("""
+            n = x_ref[0]
+            o_ref[...] = jnp.sum(x_ref[1:n])
+        """), rules=["kernel-purity"])
+        assert rules_of(fs) == ["kernel-purity"]
+        assert "dynamically-shaped" in fs[0].message
+
+    def test_pl_ds_with_traced_size_flagged(self):
+        fs = lint(kernel("""
+            n = x_ref[0]
+            o_ref[...] = x_ref[pl.ds(0, n)]
+        """), rules=["kernel-purity"])
+        assert rules_of(fs) == ["kernel-purity"]
+
+    def test_static_kernel_clean(self):
+        # masked static-shape reduction: the blessed idiom
+        fs = lint(kernel("""
+            i = pl.program_id(0)
+            x = x_ref[...]
+            mask = jnp.arange(x.shape[0]) < page
+            o_ref[...] = jnp.sum(jnp.where(mask, x, 0.0))
+            y = x_ref[pl.ds(i * page, page)]
+        """), rules=["kernel-purity"])
+        assert fs == []
+
+    def test_numpy_outside_kernel_clean(self):
+        fs = lint("import numpy as np\n"
+                  "def host():\n    return np.zeros(3)\n",
+                  rules=["kernel-purity"])
+        assert fs == []
+
+    def test_suppression_honored(self):
+        fs = lint(kernel("""
+            # repro-lint: disable=kernel-purity — interpret-only debug
+            print('dbg')
+            o_ref[...] = x_ref[...]
+        """), rules=["kernel-purity"])
+        assert fs == []
+
+
+# --------------------------------------------------------------------------
+# CLI contracts (subprocess: exit codes, JSON schema, baseline, no-jax)
+# --------------------------------------------------------------------------
+
+def run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=120)
+
+
+@pytest.fixture
+def seeded_tree(tmp_path):
+    (tmp_path / "pkg").mkdir()
+    (tmp_path / "pkg" / "bad.py").write_text(
+        "import jax\nok = hasattr(jax, 'jit')\n")
+    (tmp_path / "pkg" / "good.py").write_text("X = 1\n")
+    return tmp_path
+
+
+def test_cli_fails_on_seeded_violation(seeded_tree):
+    # the CI lint-job contract: a violation is a red build (exit 1) with
+    # the machine-readable `path:line: rule message` finding format
+    r = run_cli(["pkg"], cwd=seeded_tree)
+    assert r.returncode == 1
+    assert "pkg/bad.py:2: compat-policy" in r.stdout
+
+
+def test_cli_clean_tree_exits_zero(seeded_tree):
+    (seeded_tree / "pkg" / "bad.py").unlink()
+    r = run_cli(["pkg"], cwd=seeded_tree)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_json_schema(seeded_tree):
+    r = run_cli(["pkg", "--json"], cwd=seeded_tree)
+    assert r.returncode == 1
+    report = json.loads(r.stdout)
+    assert report["version"] == 1 and report["tool"] == "repro-lint"
+    assert set(report) >= {"files", "suppressed", "baselined", "counts",
+                           "rules", "findings"}
+    assert report["counts"] == {"compat-policy": 1}
+    f = report["findings"][0]
+    assert set(f) == {"path", "line", "col", "rule", "message"}
+    assert f["path"] == "pkg/bad.py" and f["line"] == 2
+
+
+def test_cli_out_writes_report_file(seeded_tree):
+    r = run_cli(["pkg", "--out", "report.json"], cwd=seeded_tree)
+    assert r.returncode == 1
+    report = json.loads((seeded_tree / "report.json").read_text())
+    assert report["counts"] == {"compat-policy": 1}
+
+
+def test_cli_baseline_grandfathers_and_ratchets(seeded_tree):
+    r = run_cli(["pkg", "--write-baseline"], cwd=seeded_tree)
+    assert r.returncode == 0
+    base = (seeded_tree / ".repro-lint-baseline").read_text()
+    assert "pkg/bad.py|compat-policy|" in base
+    # baselined finding no longer fails the run...
+    r = run_cli(["pkg"], cwd=seeded_tree)
+    assert r.returncode == 0 and "1 baselined" in r.stderr
+    # ...but a NEW violation still does (the ratchet)
+    (seeded_tree / "pkg" / "worse.py").write_text(
+        "import jax\nv = jax.__version__\n")
+    r = run_cli(["pkg"], cwd=seeded_tree)
+    assert r.returncode == 1
+
+
+def test_cli_unknown_rule_is_usage_error(seeded_tree):
+    r = run_cli(["pkg", "--rule", "nope"], cwd=seeded_tree)
+    assert r.returncode == 2
+
+
+def test_cli_list_rules(tmp_path):
+    r = run_cli(["--list-rules"], cwd=tmp_path)
+    assert r.returncode == 0
+    for rid in ("compat-policy", "host-sync", "retrace-hazard",
+                "kernel-purity"):
+        assert rid in r.stdout
+
+
+def test_cli_skips_gitignored_and_pycache(seeded_tree):
+    (seeded_tree / ".gitignore").write_text("generated/\n*.pyc\n")
+    (seeded_tree / "generated").mkdir()
+    (seeded_tree / "generated" / "bad2.py").write_text(
+        "import jax\nv = jax.__version__\n")
+    pyc = seeded_tree / "pkg" / "__pycache__"
+    pyc.mkdir()
+    (pyc / "bad3.py").write_text("import jax\nv = jax.__version__\n")
+    r = run_cli(["."], cwd=seeded_tree)
+    assert r.returncode == 1
+    assert "bad2.py" not in r.stdout and "bad3.py" not in r.stdout
+
+
+def test_lint_package_never_imports_jax(tmp_path):
+    # the CI lint job runs on an interpreter WITHOUT jax; the linter
+    # must neither import jax nor need it transitively
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import sys\n"
+         "import repro.analysis.lint as lint\n"
+         "lint.lint_source('import jax\\nx = hasattr(jax, \"jit\")\\n')\n"
+         "assert 'jax' not in sys.modules, 'linter imported jax'\n"
+         "print('no-jax-ok')"],
+        cwd=tmp_path, env=env, capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no-jax-ok" in r.stdout
